@@ -1,0 +1,33 @@
+"""Shared benchmark utilities.  Output convention (scaffold requirement):
+every benchmark prints ``name,us_per_call,derived`` CSV rows.
+
+Numbers are labeled by source:
+  * ``model``     — calibrated AIE/PL analytical machine model (hw.py),
+                    reproducing the paper's published curves;
+  * ``measured``  — wall-clock on THIS host (CPU; jitted XLA or interpret-
+                    mode Pallas), for trend sanity only;
+  * ``tpu-model`` — TPU v5e roofline estimate from the tiling planner.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-time per call in seconds (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.3f},{derived}")

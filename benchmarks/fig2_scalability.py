@@ -1,0 +1,58 @@
+"""Paper Fig. 2: HLS4ML performance scalability vs AIE reference.
+
+Synthetic dense workloads of growing size; the PL interval stays flat while
+resources last (rf=1), then climbs as the reuse factor is forced up —
+Latency strategy hits the wall first, Resource scales further; the naive
+1-layer-per-tile AIE mapping stays flat in this regime (paper Section III-A).
+"""
+
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import emit
+from repro import hw as hwlib
+from repro.core import tiling
+
+
+def min_feasible_rf(layers: list, pl: hwlib.PlFabric, strategy: str) -> int | None:
+    """Smallest common rf whose total resource vector fits the device."""
+    for rf_target in sorted({rf for (i, o) in layers
+                             for rf in pl.legal_reuse_factors(i, o)}):
+        total = {"dsp": 0, "lut": 0, "bram_bits": 0}
+        ok = True
+        for n_in, n_out in layers:
+            legal = [r for r in pl.legal_reuse_factors(n_in, n_out)
+                     if r >= rf_target]
+            rf = legal[0] if legal else pl.legal_reuse_factors(n_in, n_out)[-1]
+            res = pl.resources(n_in, n_out, rf, strategy=strategy)
+            for k in total:
+                total[k] += res[k]
+        if pl.fits(total):
+            return rf_target
+    return None
+
+
+def run():
+    pl = hwlib.PL_FABRIC
+    print("# fig2: workload scaling — name,us_per_call,derived")
+    for width in (32, 64, 96, 128, 192, 256, 320):
+        layers = [(width, width)] * 8
+        macs = sum(i * o for i, o in layers)
+        for strategy in ("latency", "resource"):
+            rf = min_feasible_rf(layers, pl, strategy)
+            if rf is None:
+                emit(f"fig2/pl-{strategy}/w{width}", float("nan"),
+                     f"macs={macs};status=UNROUTABLE;src=model")
+                continue
+            interval = pl.interval_s(rf)
+            emit(f"fig2/pl-{strategy}/w{width}", interval * 1e6,
+                 f"macs={macs};rf={rf};src=model")
+        # AIE naive: one layer per tile; interval = slowest tile.
+        t_aie = max(tiling.aie_tile_interval(8, i, o) for i, o in layers)
+        emit(f"fig2/aie-naive/w{width}", t_aie * 1e6,
+             f"macs={macs};tiles={len(layers)};src=model")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Fig. 3 / Alg. 1: reuse-factor sweeps + the LARE crossover point per
+dense-layer shape, plus the TPU core-equivalence analogue."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import lare
+
+
+def run():
+    print("# fig3: LARE — name,us_per_call,derived")
+    shapes = [(32, 32), (64, 64), (64, 128), (128, 128), (128, 64),
+              (192, 192), (256, 128)]
+    for n_in, n_out in shapes:
+        r = lare.lare(n_in, n_out)
+        # a few points of the PL trade-off curve (rf, interval, resource)
+        pts = [p for p in r.pl_curve[:: max(1, len(r.pl_curve) // 6)]]
+        curve = "|".join(f"rf{p.rf}:r{p.resource:.0f}" for p in pts)
+        emit(f"fig3/lare/{n_in}x{n_out}", r.aie_interval_s * 1e6,
+             f"lare={r.lare:.1f};rf_eq={r.rf_eq:.1f};"
+             f"eff={r.aie_efficiency:.2f};curve={curve};src=model")
+    # TPU analogue: core-equivalence for LM-scale layers.
+    for n_in, n_out in [(2048, 11008), (4096, 14336), (4608, 36864)]:
+        rt = lare.lare_tpu(n_in, n_out)
+        emit(f"fig3/lare-tpu/{n_in}x{n_out}", rt.tiled_latency_s * 1e6,
+             f"core_eq={rt.core_eq:.2f};src=tpu-model")
+
+
+if __name__ == "__main__":
+    run()

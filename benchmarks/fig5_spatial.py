@@ -1,0 +1,38 @@
+"""Paper Fig. 5: spatial tiling of a (8,128,128) GEMM across P_K x P_N
+compute tiles (DR3/DR4/DR5), plus the TPU spatial planner's choices."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import tiling
+
+
+def run():
+    print("# fig5: spatial tiling — name,us_per_call,derived")
+    m, k, n = 8, 128, 128
+    base = None
+    for p_k in (1, 2, 4, 8):
+        for p_n in (1, 2, 4, 8):
+            if p_k * p_n > 16 or k // p_k < 8 or n // p_n < 8:
+                continue
+            t = tiling.aie_spatial_latency(m, k, n, p_k, p_n)
+            if base is None:
+                base = t
+            emit(f"fig5/aie/pk{p_k}-pn{p_n}", t * 1e6,
+                 f"tiles={p_k*p_n};speedup={base/t:.2f};src=model")
+    # DR4 knee check: per-tile workload at the measured optimum.
+    best = min(((p_k, p_n) for p_k in (1, 2, 4, 8) for p_n in (1, 2, 4, 8)
+                if k // p_k >= 8 and n // p_n >= 8),
+               key=lambda pq: tiling.aie_spatial_latency(m, k, n, *pq))
+    emit("fig5/aie/optimum", 0.0,
+         f"pk={best[0]};pn={best[1]};qk={k//best[0]};qn={n//best[1]};src=model")
+
+    # TPU spatial plans for LM-scale GEMMs on a 16-way axis.
+    for mm, kk, nn in [(8, 4096, 14336), (8, 7168, 18432), (1024, 8192, 29568)]:
+        sp = tiling.plan_spatial(mm, kk, nn, axis_sizes=(16,))
+        emit(f"fig5/tpu-plan/{mm}x{kk}x{nn}", sp.est_collective_s * 1e6,
+             f"pk={sp.p_k};pn={sp.p_n};bands={sp.bands};src=tpu-model")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Paper Fig. 6 / DR6: the cost of exhausting AIE columns.  8-layer model,
+(8,192,192) per layer, P_K*P_N = 12 tiles/layer, sweeping asymmetry; layers
+spill into a second band once 8 * P_K exceeds the 31-column limit."""
+
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import emit
+from repro import hw as hwlib
+from repro.core import tiling
+
+
+def run():
+    print("# fig6: column exhaustion — name,us_per_call,derived")
+    aie = hwlib.AIE_ML
+    layers, feat = 8, 192
+    for p_k, p_n in ((2, 6), (3, 4), (4, 3), (6, 2)):
+        cols_needed = layers * p_k
+        in_band2 = 0
+        if cols_needed > aie.usable_cols:
+            fit = aie.usable_cols // p_k
+            in_band2 = layers - fit
+        t = tiling.aie_spatial_latency(8, feat, feat, p_k, p_n,
+                                       layers_in_band_2=in_band2)
+        emit(f"fig6/pk{p_k}-pn{p_n}", t * 1e6,
+             f"cols={cols_needed};band2_layers={in_band2};src=model")
+
+    # TPU DR6' analogue: K-sharding past one mesh axis wraps onto the slow
+    # axis — the planner's band penalty.
+    for p_k in (8, 16, 32):
+        sp = tiling.collective_time(8 * 1152 * 4, p_k,
+                                    axis_bw=hwlib.TPU_V5E.ici_bw * 2)
+        bands = math.ceil(p_k / 16)
+        t = sp * (1.0 + 0.5 * (bands - 1))
+        emit(f"fig6/tpu-kshard{p_k}", t * 1e6,
+             f"bands={bands};src=tpu-model")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Paper Fig. 7 / DR7: latency penalty per PL<->AIE boundary crossing.
+
+16-layer dense model, 8 layers per domain, crossings swept 2..14 stride 2.
+The AIE-side model reproduces the ~3.9%/crossing slope; the TPU analogue
+MEASURES the kernel-boundary cost on this host by running the same edge net
+as one fused jit vs per-layer jits (each extra dispatch + HBM round trip is
+the DR7' crossing)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import boundary, tiling
+from repro.models import edge
+
+
+def run():
+    print("# fig7: boundary crossing — name,us_per_call,derived")
+    layers, feat, batch = 16, 192, 8
+    t_layer = tiling.aie_tile_latency(batch, feat, feat)
+    base = layers * t_layer + 2 * boundary.crossing_cost_aie(
+        batch * feat, layers * t_layer)
+    act_bytes = batch * feat
+    xs, ys = [], []
+    for crossings in range(2, 15, 2):
+        t = layers * t_layer + crossings * boundary.crossing_cost_aie(
+            act_bytes, layers * t_layer)
+        xs.append(crossings)
+        ys.append(t)
+        emit(f"fig7/aie/crossings{crossings}", t * 1e6,
+             f"rel={(t/base - 1)*100:.1f}%;src=model")
+    slope = np.polyfit(xs, ys, 1)[0] / (layers * t_layer) * 100
+    emit("fig7/aie/slope", 0.0, f"pct_per_crossing={slope:.2f};src=model")
+
+    # TPU DR7' measured: fused single-jit chain vs per-layer jit dispatches.
+    cfg = edge.EdgeConfig("fig7", tuple([feat] * 9))
+    params = edge.init_edge(jax.random.PRNGKey(0), cfg)
+    x = jnp.ones((batch, feat), jnp.float32)
+
+    fused = jax.jit(lambda xx: edge.edge_forward(params, cfg, xx))
+    layer_fns = [jax.jit(lambda xx, p=p: jnp.maximum(xx @ p["w"] + p["b"], 0))
+                 for p in params]
+
+    def split(xx):
+        for f in layer_fns:
+            xx = f(xx)
+        return xx
+
+    t_fused = time_call(fused, x)
+    t_split = time_call(split, x)
+    n_cross = len(params) - 1
+    per_cross = max(t_split - t_fused, 0.0) / max(n_cross, 1)
+    emit("fig7/tpu-measured/fused", t_fused * 1e6, "src=measured")
+    emit("fig7/tpu-measured/split", t_split * 1e6,
+         f"crossings={n_cross};us_per_crossing={per_cross*1e6:.2f};src=measured")
+    emit("fig7/tpu-model/crossing", boundary.crossing_cost_tpu(act_bytes * 4)
+         * 1e6, "src=tpu-model")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Benchmark runner: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig4 table1
+
+Every row is ``name,us_per_call,derived`` (see benchmarks/common.py for the
+model/measured/tpu-model source labels).
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks import (fig2_scalability, fig3_lare, fig4_api_tiling,
+                        fig5_spatial, fig6_column_exhaustion, fig7_boundary,
+                        table1_deployment)
+
+ALL = {
+    "fig2": fig2_scalability.run,
+    "fig3": fig3_lare.run,
+    "fig4": fig4_api_tiling.run,
+    "fig5": fig5_spatial.run,
+    "fig6": fig6_column_exhaustion.run,
+    "fig7": fig7_boundary.run,
+    "table1": table1_deployment.run,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    for name in which:
+        print(f"\n## {name}")
+        ALL[name]()
+
+
+if __name__ == "__main__":
+    main()

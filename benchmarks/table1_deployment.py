@@ -1,0 +1,81 @@
+"""Paper Table I: full NN deployment — VAE / Qubit / Autoencoder.
+
+Per workload:
+  * paper's published numbers (MACs, min HLS4ML rf, PL/naive-AIE/optimized MHz),
+  * our PL model at its min feasible rf,
+  * our AIE naive mapping (1 layer / 1 tile),
+  * our AIE optimized mapping (Section-IV design rules via the spatial planner),
+  * the TPU extreme-edge path: int8 fused kernels, measured on CPU interpret
+    (wall time, trend only) + v5e model latency from the tiling planner.
+
+Acceptance: optimized AIE exceeds the 40 MHz LHC trigger rate; PL does not.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro import hw as hwlib
+from repro.core import tiling
+from repro.models import edge
+
+PAPER = {  # MACs, min rf, PL MHz, naive AIE MHz, optimized MHz (Table I)
+    "vae": (34_800, 8, 20.8, 22.7, 97.9),
+    "qubit": (82_900, 16, 12.5, 14.4, 58.9),
+    "autoencoder": (116_700, 32, 8.4, 15.9, 58.8),
+}
+
+
+def run():
+    print("# table1: full NN deployment — name,us_per_call,derived")
+    pl = hwlib.PL_FABRIC
+    tpu = hwlib.TPU_V5E
+    for name, (macs_pub, rf_pub, pl_pub, naive_pub, opt_pub) in PAPER.items():
+        cfg = edge.edge_config(name)
+        emit(f"table1/{name}/macs", 0.0,
+             f"ours={cfg.macs};paper={macs_pub};"
+             f"delta={abs(cfg.macs-macs_pub)/macs_pub*100:.1f}%")
+        # PL at the paper's min rf (MHz = batch/interval, batch streams
+        # through the rf-cycle initiation interval per sample).
+        t_pl = pl.interval_s(rf_pub) * cfg.batch / cfg.batch   # per-sample II
+        mhz_pl = 1 / pl.interval_s(rf_pub) / 1e6
+        emit(f"table1/{name}/pl", t_pl * 1e6,
+             f"mhz={mhz_pl:.1f};paper_mhz={pl_pub};rf={rf_pub};src=model")
+        # AIE naive: 1 layer per tile; steady-state interval = slowest layer.
+        t_naive = max(tiling.aie_tile_interval(cfg.batch, i, o)
+                      for i, o in cfg.layer_shapes)
+        mhz_naive = cfg.batch / t_naive / 1e6        # inferences/s (batch=8)
+        emit(f"table1/{name}/aie-naive", t_naive * 1e6,
+             f"mhz={mhz_naive:.1f};paper_mhz={naive_pub};src=model")
+        # AIE optimized with the design rules.
+        t_opt = tiling.aie_optimized_interval(cfg.layer_shapes, cfg.batch)
+        mhz_opt = cfg.batch / t_opt / 1e6
+        meets = mhz_opt >= 40.0
+        emit(f"table1/{name}/aie-optimized", t_opt * 1e6,
+             f"mhz={mhz_opt:.1f};paper_mhz={opt_pub};"
+             f"meets_40mhz={meets};speedup_vs_naive={t_naive/t_opt:.2f}x;src=model")
+        # TPU edge path: per-layer int8 fused kernels, weights-stationary.
+        t_tpu = sum(tpu.matmul_time(cfg.batch, i, o, itemsize=1)
+                    + tpu.kernel_overhead_s for i, o in cfg.layer_shapes)
+        emit(f"table1/{name}/tpu-v5e-per-layer", t_tpu * 1e6,
+             f"mhz={cfg.batch/t_tpu/1e6:.2f};src=tpu-model")
+        # Whole-net single-kernel fusion (DR7'-minimal: ONE dispatch).
+        t_fused = tpu.kernel_overhead_s + sum(
+            tpu.matmul_time(cfg.batch, i, o, itemsize=1)
+            for i, o in cfg.layer_shapes)
+        emit(f"table1/{name}/tpu-v5e-fused", t_fused * 1e6,
+             f"mhz={cfg.batch/t_fused/1e6:.2f};src=tpu-model")
+        # Measured interpret-mode int8 path (correctness witness; CPU wall
+        # time is NOT a TPU latency claim).
+        params = edge.init_edge(jax.random.PRNGKey(0), cfg)
+        qp = edge.quantize_edge(params)
+        x = jnp.ones((cfg.batch, cfg.dims[0]), jnp.float32)
+        f = jax.jit(lambda xx: edge.edge_forward_q8(qp, cfg, xx))
+        t_meas = time_call(f, x, iters=5, warmup=1)
+        emit(f"table1/{name}/int8-interpret", t_meas * 1e6, "src=measured")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,101 @@
+"""End-to-end training driver: ~100M-param LM, fault-tolerant, checkpointed.
+
+  PYTHONPATH=src python examples/train_100m.py --steps 300
+  PYTHONPATH=src python examples/train_100m.py --steps 20 --quick   # CI-scale
+
+Exercises the full production stack on one host: prefetching data pipeline,
+remat + chunked-loss train step, AdamW with cosine schedule, async atomic
+checkpoints, restart-on-failure (one injected failure), and straggler
+detection — i.e. the same TrainDriver a pod deployment wraps around the
+pjit-sharded step.
+"""
+
+import argparse
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import synth_batch
+from repro.models.config import ModelConfig
+from repro.train import fault, optimizer, schedule, step as step_lib
+
+
+def make_100m_config(quick: bool = False) -> ModelConfig:
+    if quick:
+        return ModelConfig(
+            name="lm-quick", family="transformer", num_layers=2, d_model=128,
+            num_heads=4, num_kv_heads=2, head_dim=32, d_ff=512,
+            vocab_size=2048, attn_pattern=("global",), tie_embeddings=True)
+    return ModelConfig(
+        name="lm-100m", family="transformer", num_layers=10, d_model=640,
+        num_heads=10, num_kv_heads=5, head_dim=64, d_ff=2560,
+        vocab_size=50_000, attn_pattern=("global",), tie_embeddings=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    args = ap.parse_args()
+
+    cfg = make_100m_config(args.quick)
+    print(f"model: {cfg.name}  params~{cfg.param_count()/1e6:.0f}M  "
+          f"steps={args.steps}  tokens/step={args.batch * args.seq}")
+
+    opt = optimizer.make("adamw", lr=schedule.warmup_cosine(
+        3e-4, warmup_steps=max(args.steps // 20, 2), total_steps=args.steps),
+        weight_decay=0.01)
+    init_fn, step_fn = step_lib.build_train_step(
+        cfg, opt, step_lib.TrainOptions(remat="block", chunked_loss=True))
+    state = jax.jit(init_fn)(jax.random.PRNGKey(0))
+    jstep = jax.jit(step_fn, donate_argnums=0)
+
+    def batch_fn(step):
+        return {k: jnp.asarray(v) for k, v in
+                synth_batch(cfg, batch=args.batch, seq=args.seq,
+                            step=step).items()}
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_100m_")
+    driver = fault.TrainDriver(
+        cfg=fault.DriverConfig(ckpt_dir=ckpt_dir,
+                               ckpt_every=max(args.steps // 6, 5)),
+        step_fn=jstep, batch_fn=batch_fn, state=state)
+
+    # Inject one node failure a third of the way in — the driver restarts
+    # from the last checkpoint and replays deterministically.
+    inject_at = {max(args.steps // 3, 3): True}
+
+    def hook(step):
+        if inject_at.pop(step, None):
+            raise fault.SimulatedNodeFailure(f"injected at step {step}")
+
+    # Progress logging wrapper.
+    losses = []
+    orig_step = driver.step_fn
+
+    def logged(state, batch):
+        new_state, m = orig_step(state, batch)
+        # (read the step from the metrics — the input state buffer is donated)
+        s = int(m["step"])
+        losses.append(float(m["loss"]))
+        if s % max(args.steps // 20, 1) == 0:
+            print(f"  step {s:4d}  loss={losses[-1]:.4f}")
+        return new_state, m
+
+    driver.step_fn = logged
+    driver.run(args.steps, failure_hook=hook)
+
+    print(f"\nfinal step: {driver.step}")
+    print(f"loss: first={losses[0]:.4f}  last={losses[-1]:.4f}  "
+          f"(improved: {losses[-1] < losses[0]})")
+    print(f"events: {[e[0] for e in driver.events]}")
+    print(f"checkpoints in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

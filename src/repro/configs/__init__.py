@@ -1,0 +1,70 @@
+"""Architecture registry: ``--arch <id>`` lookup for every assigned config.
+
+Each ``<arch>.py`` exposes ``CONFIG`` (the exact published shape), ``SMOKE``
+(a reduced same-family config for CPU tests) and ``SHAPES`` (the assigned
+input-shape cells with skip annotations).  ``get(name)`` returns the bundle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    phase: str                 # "train" | "prefill" | "decode"
+    skip: str | None = None    # reason, if this (arch, shape) cell is skipped
+
+
+# The four assigned LM shape cells.
+def lm_shapes(*, subquadratic: bool, encoder_only: bool = False,
+              long_ok: bool | None = None) -> dict[str, ShapeSpec]:
+    long_ok = subquadratic if long_ok is None else long_ok
+    shapes = {
+        "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+        "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+        "decode_32k": ShapeSpec(
+            "decode_32k", 32768, 128, "decode",
+            skip="encoder-only arch has no decode step" if encoder_only else None),
+        "long_500k": ShapeSpec(
+            "long_500k", 524288, 1, "decode",
+            skip=None if long_ok else
+            "full-attention arch: 500k decode is not sub-quadratic-feasible"),
+    }
+    return shapes
+
+
+ARCH_NAMES = [
+    "gemma2_27b", "gemma2_9b", "gemma2_2b", "qwen2_5_3b", "whisper_medium",
+    "mixtral_8x22b", "deepseek_v3_671b", "rwkv6_7b", "recurrentgemma_2b",
+    "qwen2_vl_72b",
+]
+
+# Public --arch ids (hyphenated) -> module names.
+ALIASES = {n.replace("_", "-"): n for n in ARCH_NAMES}
+ALIASES.update({n: n for n in ARCH_NAMES})
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    name: str
+    config: ModelConfig
+    smoke: ModelConfig
+    shapes: dict[str, ShapeSpec]
+
+
+def get(name: str) -> Arch:
+    mod_name = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return Arch(name=mod_name, config=mod.CONFIG, smoke=mod.SMOKE,
+                shapes=mod.SHAPES)
+
+
+def all_archs() -> list[str]:
+    return list(ARCH_NAMES)

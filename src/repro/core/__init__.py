@@ -1,0 +1,2 @@
+"""Core: the paper's contribution — tiling planner, LARE metric, boundary cost."""
+from repro.core import boundary, lare, tiling  # noqa: F401

@@ -1,0 +1,136 @@
+"""Boundary-crossing cost model and fusion/split planners (paper DR7).
+
+The paper measures a ~3.9% latency penalty per PL<->AIE boundary crossing
+(Fig. 7, R^2=0.98 linear fit) and states DR7: split a pipeline across domains
+only when the domain-preference gain exceeds the crossing cost.
+
+TPU adaptation (DR7'): the two "domains" on one TPU chip are *inside a fused
+Pallas kernel* vs *separate XLA ops through HBM*.  Every un-fused boundary
+costs (a) a round trip of the activation bytes through HBM and (b) a fixed
+dispatch overhead.  The same model prices host<->device and ICI<->DCN
+boundaries for heterogeneous placements.
+
+Two planners consume the model:
+
+* :func:`plan_fusion` — given a chain of stages with per-stage compute times
+  and inter-stage activation sizes, choose fusion groups minimizing total time
+  subject to a VMEM working-set budget (this is what motivates the
+  ``fused_dense`` kernel: GEMM+bias+activation in one launch).
+* :func:`plan_hybrid_split` — the paper's Fig.-7 experiment generalized:
+  stages have a preferred domain with a speedup factor; crossing adds the DR7
+  cost; dynamic programming picks the optimal assignment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro import hw as hwlib
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    name: str
+    compute_s: float            # stage time in its default domain
+    out_bytes: int              # activation bytes handed to the next stage
+    vmem_bytes: int = 0         # working set if fused (for plan_fusion)
+    # For plan_hybrid_split: time in each domain (e.g. {'aie':..., 'pl':...}).
+    domain_s: dict | None = None
+
+
+def crossing_cost_tpu(act_bytes: int, tpu: hwlib.TpuV5e = hwlib.TPU_V5E) -> float:
+    """DR7' per-boundary cost: HBM round trip + kernel dispatch."""
+    return 2.0 * act_bytes / tpu.hbm_bw + tpu.kernel_overhead_s
+
+
+def crossing_cost_aie(act_bytes: int, base_latency_s: float,
+                      aie: hwlib.AieMl = hwlib.AIE_ML) -> float:
+    """Paper-faithful PL<->AIE crossing: PLIO transfer + sync, calibrated so a
+    16-layer batch-8 model sees ~3.9% of baseline per crossing (Fig. 7)."""
+    transfer = act_bytes / aie.plio_bw
+    sync = 0.039 * base_latency_s - transfer
+    return transfer + max(sync, 0.0)
+
+
+def chain_latency(stages: Sequence[Stage], groups: Sequence[int],
+                  tpu: hwlib.TpuV5e = hwlib.TPU_V5E) -> float:
+    """Total time of a stage chain under a fusion grouping.
+
+    ``groups[i]`` is the fusion-group id of stage i (non-decreasing).  A
+    boundary exists wherever consecutive stages differ in group, plus the
+    chain entry and exit (the paper's 2-crossing baseline).
+    """
+    total = sum(s.compute_s for s in stages)
+    # entry + exit crossings always exist
+    total += crossing_cost_tpu(0, tpu) * 2
+    for i in range(len(stages) - 1):
+        if groups[i] != groups[i + 1]:
+            total += crossing_cost_tpu(stages[i].out_bytes, tpu)
+    return total
+
+
+def plan_fusion(stages: Sequence[Stage], *,
+                tpu: hwlib.TpuV5e = hwlib.TPU_V5E,
+                vmem_budget: int | None = None) -> list[int]:
+    """Greedy-optimal fusion grouping (chain DP) under a VMEM budget.
+
+    Returns a group id per stage.  DP over split points: cost(i..j fused) =
+    sum(compute) and feasible iff the union working set fits VMEM; boundaries
+    between groups pay :func:`crossing_cost_tpu`.
+    """
+    n = len(stages)
+    vmem = vmem_budget or int(tpu.vmem_bytes * 0.75)
+    INF = float("inf")
+
+    def group_ok(i: int, j: int) -> bool:
+        return sum(s.vmem_bytes for s in stages[i:j + 1]) <= vmem
+
+    best = [INF] * (n + 1)   # best[i] = min cost of stages[0:i]
+    choice = [0] * (n + 1)
+    best[0] = 0.0
+    for j in range(1, n + 1):
+        for i in range(j):
+            if not group_ok(i, j - 1):
+                continue
+            c = best[i] + sum(s.compute_s for s in stages[i:j])
+            if i > 0:
+                c += crossing_cost_tpu(stages[i - 1].out_bytes, tpu)
+            if c < best[j]:
+                best[j], choice[j] = c, i
+    # Reconstruct groups.
+    groups = [0] * n
+    j, g = n, 0
+    bounds = []
+    while j > 0:
+        bounds.append((choice[j], j))
+        j = choice[j]
+    for gid, (i, j) in enumerate(reversed(bounds)):
+        for t in range(i, j):
+            groups[t] = gid
+    return groups
+
+
+def plan_hybrid_split(stages: Sequence[Stage], domains: Sequence[str], *,
+                      crossing_s: float) -> tuple[list[str], float]:
+    """Paper DR7 decision: assign each stage to a domain; each adjacent pair in
+    different domains pays ``crossing_s``.  DP over (stage, domain)."""
+    n = len(stages)
+    INF = float("inf")
+    cost = {d: [INF] * n for d in domains}
+    prev: dict[str, list[str | None]] = {d: [None] * n for d in domains}
+    for d in domains:
+        cost[d][0] = (stages[0].domain_s or {}).get(d, stages[0].compute_s)
+    for i in range(1, n):
+        for d in domains:
+            t = (stages[i].domain_s or {}).get(d, stages[i].compute_s)
+            for p in domains:
+                c = cost[p][i - 1] + t + (crossing_s if p != d else 0.0)
+                if c < cost[d][i]:
+                    cost[d][i], prev[d][i] = c, p
+    end = min(domains, key=lambda d: cost[d][n - 1])
+    assign = [end]
+    for i in range(n - 1, 0, -1):
+        assign.append(prev[assign[-1]][i])  # type: ignore[arg-type]
+    assign.reverse()
+    return assign, cost[end][n - 1]

@@ -1,0 +1,386 @@
+"""Two-level GEMM tiling (paper Algorithm 2) — AIE-faithful model + TPU planner.
+
+The paper decomposes an ``A(M,K) @ B(K,N)`` workload twice:
+
+* **spatial level** — across ``P_K x P_N`` compute tiles (K-parallel partial sums
+  cascade west->east; N-parallel shards the output columns);
+* **API level**   — within one tile into legal ``aie::mmul`` blocks
+  ``(S_M,S_K,S_N)`` called ``(R_M,R_K,R_N)`` times.
+
+This module provides both halves of the reproduction:
+
+1. :func:`aie_tile_latency`, :func:`aie_spatial_latency` — the paper-faithful
+   AIE-ML cost model (calibrated to Figs. 4-6) driving the micro-benchmark
+   reproductions and the LARE metric.
+
+2. :func:`plan_api`, :func:`plan_spatial`, :func:`plan_gemm` — the TPU-native
+   planner.  API-level tiles become Pallas ``BlockSpec`` block shapes legal for
+   the VREG/MXU tiling; spatial tiles become mesh shardings with an explicit
+   collective-cost model.  The paper's design rules are re-derived for TPU and
+   exposed as the planner's decision procedure (annotated on each plan).
+
+TPU design-rule analogues (constants re-derived in EXPERIMENTS.md §4):
+
+* **DR1'** default API tile: ``(bm, bk, bn)`` with ``bk=bn=512``-class blocks,
+  ``bm`` = the padded batch (sublane multiple).  Chosen by VMEM-bounded search.
+* **DR2'** favor N over K when trading block dims: larger ``bn`` keeps the
+  output block (the accumulator) wide and amortizes A-tile re-reads.
+* **DR3'** spatial expansion prefers K-sharding (reduction axis) while the
+  per-device reduction payload stays small — mirrors cascade-first placement.
+* **DR4'/DR5'** per-device workload knee and floor: below the floor the fixed
+  dispatch + collective latency dominates and extra devices *hurt*.
+* **DR6'** mesh-axis exhaustion: ``P_K`` beyond one mesh axis wraps onto the
+  second ("band spill") and the reduction crosses the slow axis — penalized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Sequence
+
+from repro import hw as hwlib
+
+
+# --------------------------------------------------------------------------
+# Shared plan containers
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ApiPlan:
+    """API-level (within-core) tiling: Pallas BlockSpec block shapes."""
+    block_m: int
+    block_k: int
+    block_n: int
+    r_m: int
+    r_k: int
+    r_n: int
+    vmem_bytes: int
+    est_s: float
+
+    @property
+    def blocks(self) -> tuple[int, int, int]:
+        return (self.block_m, self.block_k, self.block_n)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialPlan:
+    """Spatial (across-core) tiling: mesh sharding factors for K and N."""
+    p_k: int
+    p_n: int
+    q_k: int                      # per-device K extent
+    q_n: int                      # per-device N extent
+    bands: int                    # 1 == fits a single mesh axis (DR6')
+    est_collective_s: float
+
+    @property
+    def tiles(self) -> int:
+        return self.p_k * self.p_n
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPlan:
+    m: int
+    k: int
+    n: int
+    itemsize: int
+    spatial: SpatialPlan
+    api: ApiPlan
+    est_s: float
+    rules: tuple[str, ...]        # which design rules drove the decision
+
+
+# --------------------------------------------------------------------------
+# Paper-faithful AIE-ML cost model (calibrated to Figs. 4-6)
+# --------------------------------------------------------------------------
+
+_AIE_CALL_OVERHEAD_CYC = 6        # per aie::mmul macro-call loop overhead
+_AIE_DMA_SETUP_CYC = 220          # per-tile DMA/lock setup per inference
+_AIE_CASCADE_HOP_CYC = 14         # partial-sum hop west->east
+_AIE_BAND_PENALTY = 0.085         # latency per layer placed in a spilled band
+_AIE_UNROLL = 2                   # manual 2x2x2 unrolling (paper IV-C)
+
+
+def aie_api_legal(s: tuple[int, int, int], m: int, q_k: int, q_n: int,
+                  aie: hwlib.AieMl = hwlib.AIE_ML) -> bool:
+    s_m, s_k, s_n = s
+    if (s_m, s_k, s_n) not in aie.legal_api_tiles_i8:
+        return False
+    # 2x unrolling makes the effective tile twice the base size per dim.
+    return (m % (s_m * _AIE_UNROLL) == 0 and q_k % (s_k * _AIE_UNROLL) == 0
+            and q_n % (s_n * _AIE_UNROLL) == 0)
+
+
+def aie_tile_latency(m: int, q_k: int, q_n: int,
+                     s: tuple[int, int, int] = (4, 8, 8),
+                     aie: hwlib.AieMl = hwlib.AIE_ML) -> float:
+    """Latency (s) of one (m, q_k, q_n) i8 GEMM on ONE AIE-ML compute tile.
+
+    Model: compute cycles at the API shape's calibrated efficiency, local-
+    memory load cycles for the A/B sub-tiles (2x256-bit loads/cycle), per-call
+    loop overhead, and fixed DMA/lock setup.  Shape asymmetry (paper Fig. 4:
+    up to 2x faster when q_n > q_k) enters through the output-accumulator
+    utilization factor.
+    """
+    s_m, s_k, s_n = s
+    r_m = math.ceil(m / (s_m * _AIE_UNROLL))
+    r_k = math.ceil(q_k / (s_k * _AIE_UNROLL))
+    r_n = math.ceil(q_n / (s_n * _AIE_UNROLL))
+    calls = r_m * r_k * r_n
+    macs_per_call = (s_m * s_k * s_n) * _AIE_UNROLL**3
+    eff = aie.api_efficiency(s_m, s_k, s_n)
+    # Output-stationarity: wide-N workloads keep the 2x-unrolled accumulators
+    # busy; K-heavy workloads serialize on the reduction chain.
+    shape_util = min(1.0, 0.55 + 0.45 * min(2.0, q_n / max(q_k, 1)) / 2.0 * 2)
+    if q_k > q_n:
+        shape_util = max(0.5, 1.0 - 0.25 * math.log2(q_k / q_n))
+    compute_cyc = calls * macs_per_call / (aie.macs_per_cycle_int8 * eff * shape_util)
+    # Local-memory traffic: A and B sub-tiles re-read per call (64 B/cycle).
+    load_cyc = calls * (s_m * s_k + s_k * s_n) * _AIE_UNROLL**2 / 64.0
+    cyc = max(compute_cyc, load_cyc) + calls * _AIE_CALL_OVERHEAD_CYC / _AIE_UNROLL \
+        + _AIE_DMA_SETUP_CYC
+    return cyc / aie.clock_hz
+
+
+def aie_spatial_latency(m: int, k: int, n: int, p_k: int, p_n: int,
+                        s: tuple[int, int, int] = (4, 8, 8),
+                        layers_in_band_2: int = 0,
+                        aie: hwlib.AieMl = hwlib.AIE_ML) -> float:
+    """Latency (s) of spatially tiling an (m,k,n) GEMM over p_k x p_n tiles.
+
+    Adds: input streaming over the 32-bit per-tile port, cascade hops for the
+    K-direction partial sums, and the Fig.-6 band-spill contention penalty.
+    """
+    q_k, q_n = math.ceil(k / p_k), math.ceil(n / p_n)
+    t_tile = aie_tile_latency(m, q_k, q_n, s, aie)
+    stream_in_cyc = (m * q_k) / (aie.stream_bits / 8)      # bytes @ 4 B/cycle
+    cascade_cyc = (p_k - 1) * _AIE_CASCADE_HOP_CYC
+    stream_out_cyc = (m * q_n) / (aie.stream_bits / 8)
+    t = t_tile + (stream_in_cyc + cascade_cyc + stream_out_cyc) / aie.clock_hz
+    if layers_in_band_2 > 0:
+        t *= 1.0 + _AIE_BAND_PENALTY * layers_in_band_2
+    return t
+
+
+def aie_tile_interval(m: int, q_k: int, q_n: int,
+                      s: tuple[int, int, int] = (4, 8, 8),
+                      aie: hwlib.AieMl = hwlib.AIE_ML) -> float:
+    """STEADY-STATE initiation interval (s) of one tile — the paper's
+    throughput measure (Fig. 2/Table I report MHz = batch/interval).
+
+    Unlike :func:`aie_tile_latency`, per-inference setup (DMA locks, loop
+    prologue) pipelines away; the interval is bound by the slowest of
+    compute, the 32-bit input stream, and the 32-bit output stream.
+    """
+    s_m, s_k, s_n = s
+    eff = aie.api_efficiency(s_m, s_k, s_n)
+    shape_util = min(1.0, 0.55 + 0.45 * min(2.0, q_n / max(q_k, 1)))
+    shape_util = max(0.5, min(shape_util, 1.0))
+    compute_cyc = (m * q_k * q_n) / (aie.macs_per_cycle_int8 * eff * shape_util)
+    stream_in_cyc = (m * q_k) / (aie.stream_bits / 8)
+    stream_out_cyc = (m * q_n) / (aie.stream_bits / 8)
+    return max(compute_cyc, stream_in_cyc, stream_out_cyc) / aie.clock_hz
+
+
+def aie_spatial_interval(m: int, k: int, n: int, p_k: int, p_n: int,
+                         s: tuple[int, int, int] = (4, 8, 8),
+                         layers_in_band_2: int = 0,
+                         aie: hwlib.AieMl = hwlib.AIE_ML) -> float:
+    """Steady-state interval of a spatially tiled layer: per-tile interval on
+    its (q_k, q_n) slice + cascade chain + band-spill contention (DR6)."""
+    q_k, q_n = math.ceil(k / p_k), math.ceil(n / p_n)
+    cyc = aie_tile_interval(m, q_k, q_n, s, aie) * aie.clock_hz
+    cyc += (p_k - 1) * _AIE_CASCADE_HOP_CYC
+    t = cyc / aie.clock_hz
+    if layers_in_band_2 > 0:
+        t *= 1.0 + _AIE_BAND_PENALTY * layers_in_band_2
+    return t
+
+
+def aie_optimized_interval(layer_shapes, batch: int = 8, *,
+                           max_tiles_per_layer: int = 12,
+                           aie: hwlib.AieMl = hwlib.AIE_ML) -> float:
+    """Deploy a dense pipeline with the Section-IV design rules: per layer,
+    spatially tile over up to `max_tiles_per_layer` tiles, K-expansion first
+    (DR3), DR5 floor on split dims, one band (DR6).  Returns the steady-state
+    pipeline interval (slowest layer)."""
+    n_layers = len(layer_shapes)
+    t_worst = 0.0
+    for n_in, n_out in layer_shapes:
+        best = aie_tile_interval(batch, n_in, n_out, aie=aie)
+        for p_k in (1, 2, 3, 4, 6):
+            for p_n in (1, 2, 3, 4, 6):
+                if p_k * p_n > max_tiles_per_layer:
+                    continue
+                q_k, q_n = n_in / p_k, n_out / p_n
+                # DR5 floor applies to the dims being SPLIT (stream-bound
+                # narrow layers may still split K alone).
+                if (p_k > 1 and q_k < 16) or (p_n > 1 and q_n < 32):
+                    continue
+                if n_layers * p_k > aie.usable_cols:
+                    continue                     # DR6: one band
+                best = min(best, aie_spatial_interval(batch, n_in, n_out,
+                                                      p_k, p_n, aie=aie))
+        t_worst = max(t_worst, best)
+    return t_worst
+
+
+def aie_best_single_tile(m: int, k: int, n: int,
+                         aie: hwlib.AieMl = hwlib.AIE_ML,
+                         ) -> tuple[tuple[int, int, int], float]:
+    """DR1 search: best legal API tile for a single-tile workload."""
+    best = None
+    for s in aie.legal_api_tiles_i8:
+        if not aie_api_legal(s, m, k, n, aie):
+            continue
+        t = aie_tile_latency(m, k, n, s, aie)
+        if best is None or t < best[1]:
+            best = (s, t)
+    if best is None:  # fall back: pad to the default shape
+        best = ((4, 8, 8), aie_tile_latency(m, k, n, (4, 8, 8), aie))
+    return best
+
+
+# --------------------------------------------------------------------------
+# TPU-native planner
+# --------------------------------------------------------------------------
+
+def _ceil_to(x: int, q: int) -> int:
+    return ((x + q - 1) // q) * q
+
+
+def _divisors_leq(x: int, cap: int) -> list[int]:
+    return [d for d in range(1, min(x, cap) + 1) if x % d == 0]
+
+
+def legal_block_dims(extent: int, multiple: int, cap: int) -> list[int]:
+    """Legal Pallas block sizes for one dim: multiples of `multiple` that
+    divide the (padded) extent, capped."""
+    padded = _ceil_to(extent, multiple)
+    out = []
+    b = multiple
+    while b <= min(padded, cap):
+        if padded % b == 0:
+            out.append(b)
+        b += multiple
+    return out or [min(padded, cap)]
+
+
+def plan_api(m: int, q_k: int, q_n: int, *, itemsize: int = 2,
+             tpu: hwlib.TpuV5e = hwlib.TPU_V5E,
+             vmem_budget: int | None = None) -> ApiPlan:
+    """Pick Pallas block shapes for a per-core (m, q_k, q_n) GEMM (DR1'/DR2').
+
+    Search over legal (block_m, block_k, block_n); score with an HBM-traffic +
+    MXU-utilization model; tie-break toward larger block_n (DR2').  The VMEM
+    budget accounts double-buffered A/B blocks plus the f32 accumulator.
+    """
+    vmem = vmem_budget or int(tpu.vmem_bytes * 0.75)
+    sub = tpu.sublanes_for(itemsize)
+    lane = tpu.vreg_lane
+    bm_cands = legal_block_dims(m, sub, 1024)
+    bk_cands = legal_block_dims(q_k, lane, 2048)
+    bn_cands = legal_block_dims(q_n, lane, 2048)
+    best: tuple[float, float, ApiPlan] | None = None
+    for bm, bk, bn in itertools.product(bm_cands, bk_cands, bn_cands):
+        vmem_bytes = 2 * (bm * bk + bk * bn) * itemsize + bm * bn * 4
+        if vmem_bytes > vmem:
+            continue
+        r_m = _ceil_to(m, sub) // bm if _ceil_to(m, sub) % bm == 0 else math.ceil(m / bm)
+        r_k = math.ceil(_ceil_to(q_k, lane) / bk)
+        r_n = math.ceil(_ceil_to(q_n, lane) / bn)
+        # HBM traffic: A re-read per N-block, B re-read per M-block, C once.
+        traffic = (m * q_k * r_n + q_k * q_n * r_m) * itemsize + m * q_n * 4
+        t_mem = traffic / tpu.hbm_bw
+        flops = 2.0 * m * q_k * q_n
+        peak = tpu.peak_int8_ops if itemsize == 1 else tpu.peak_bf16_flops
+        eff = (min(1.0, bm / sub / math.ceil(bm / sub))  # == 1; keep for clarity
+               * min(1.0, m / (r_m * bm))               # M padding waste
+               * min(1.0, q_k / (r_k * bk))
+               * min(1.0, q_n / (r_n * bn)))
+        t_compute = flops / (peak * max(eff, 1e-9))
+        est = max(t_mem, t_compute) + tpu.kernel_overhead_s
+        # DR2' tie-break: prefer wider N blocks at (near-)equal time.
+        score = (est, -bn, -bk)
+        if best is None or score < (best[0], -best[2].block_n, -best[2].block_k):
+            best = (est, -bn, ApiPlan(bm, bk, bn, r_m, r_k, r_n, vmem_bytes, est))
+    assert best is not None
+    return best[2]
+
+
+def collective_time(bytes_per_device: float, group: int, *, axis_bw: float,
+                    kind: str = "reduce_scatter") -> float:
+    """Ring-collective time model over a `group`-sized mesh axis."""
+    if group <= 1 or bytes_per_device <= 0:
+        return 0.0
+    steps = group - 1
+    if kind == "all_reduce":
+        vol = 2.0 * bytes_per_device * steps / group
+    elif kind in ("reduce_scatter", "all_gather"):
+        vol = bytes_per_device * steps / group
+    elif kind == "all_to_all":
+        vol = bytes_per_device * steps / group
+    else:
+        raise ValueError(kind)
+    return vol / axis_bw
+
+
+def plan_spatial(m: int, k: int, n: int, *, itemsize: int = 2,
+                 axis_sizes: Sequence[int] = (16,),
+                 tpu: hwlib.TpuV5e = hwlib.TPU_V5E,
+                 q_k_floor: int = 512, q_n_floor: int = 512,
+                 max_tiles: int | None = None) -> SpatialPlan:
+    """Pick (P_K, P_N) sharding over the mesh axes (DR3'-DR6').
+
+    ``axis_sizes`` lists the usable mesh axes in *preference order* (fast axis
+    first).  Factors beyond ``axis_sizes[0]`` spill onto later axes ("bands"),
+    which multiplies the reduction cost by the hop penalty (DR6').
+    """
+    total_devices = math.prod(axis_sizes)
+    cap = min(total_devices, max_tiles or total_devices)
+    axis0 = axis_sizes[0]
+    best: tuple[float, SpatialPlan] | None = None
+    for p_k in _divisors_leq(max(k // 128, 1), cap):
+        for p_n in _divisors_leq(max(n // 128, 1), cap // p_k):
+            q_k, q_n = math.ceil(k / p_k), math.ceil(n / p_n)
+            if p_k * p_n > 1 and (q_k < q_k_floor or q_n < q_n_floor):
+                continue  # DR5' per-device floor
+            bands = 1 if p_k <= axis0 else math.ceil(p_k / axis0)
+            # Partial-sum reduction over the K group (the "cascade").
+            red_bytes = m * q_n * 4
+            bw = tpu.ici_bw * tpu.ici_links / 2
+            t_red = collective_time(red_bytes, p_k, axis_bw=bw,
+                                    kind="reduce_scatter")
+            if bands > 1:
+                t_red *= 1.0 + 0.5 * (bands - 1)  # DR6' slow-axis wrap penalty
+            api = plan_api(m, q_k, q_n, itemsize=itemsize, tpu=tpu)
+            est = api.est_s + t_red
+            plan = SpatialPlan(p_k, p_n, q_k, q_n, bands, t_red)
+            # DR3' tie-break: prefer K-expansion at (near-)equal time.
+            if best is None or (est, -p_k) < (best[0], -best[1].p_k):
+                best = (est, plan)
+    assert best is not None
+    return best[1]
+
+
+def plan_gemm(m: int, k: int, n: int, *, itemsize: int = 2,
+              axis_sizes: Sequence[int] = (16,),
+              tpu: hwlib.TpuV5e = hwlib.TPU_V5E,
+              max_tiles: int | None = None) -> GemmPlan:
+    """Full two-level plan for one GEMM (paper Alg. 2, TPU-native)."""
+    rules: list[str] = []
+    spatial = plan_spatial(m, k, n, itemsize=itemsize, axis_sizes=axis_sizes,
+                           tpu=tpu, max_tiles=max_tiles)
+    if spatial.p_k > 1:
+        rules.append("DR3'(K-expansion)")
+    if spatial.tiles > 1:
+        rules.append("DR5'(per-device floor held)")
+    if spatial.bands > 1:
+        rules.append("DR6'(band spill penalized)")
+    api = plan_api(m, spatial.q_k, spatial.q_n, itemsize=itemsize, tpu=tpu)
+    rules.append(f"DR1'(block={api.blocks})")
+    if api.block_n >= api.block_k:
+        rules.append("DR2'(N-favored)")
+    est = api.est_s + spatial.est_collective_s
+    return GemmPlan(m, k, n, itemsize, spatial, api, est, tuple(rules))

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (validated via
+interpret=True on CPU; see ops.py for the public entry points)."""

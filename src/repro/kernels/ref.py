@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the per-kernel allclose sweeps in
+``tests/test_kernels.py`` and for the hypothesis property tests.  They are
+deliberately written in the most obvious way (no blocking, no online
+statistics) so a mismatch always indicts the kernel.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def tiled_gemm(x: jax.Array, w: jax.Array,
+               out_dtype: jnp.dtype | None = None) -> jax.Array:
+    out_dtype = out_dtype or (
+        jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else x.dtype)
+    acc = jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else jnp.float32
+    return jnp.dot(x, w, preferred_element_type=acc).astype(out_dtype)
+
+
+def fused_dense(x, w, b, residual=None, *, act: str = "relu",
+                out_dtype=None) -> jax.Array:
+    acts = {
+        "none": lambda v: v,
+        "relu": lambda v: jnp.maximum(v, 0.0),
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "tanh": jnp.tanh,
+        "sigmoid": jax.nn.sigmoid,
+    }
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    y = acts[act](y + b.astype(jnp.float32))
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    return y.astype(out_dtype or x.dtype)
+
+
+def gemm_int8(x, w, w_scale, x_scale=1.0, *, out_dtype=jnp.bfloat16):
+    acc = jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32))
+    scale = jnp.asarray(x_scale, jnp.float32) * jnp.asarray(w_scale, jnp.float32)
+    return (acc.astype(jnp.float32) * scale[None, :]).astype(out_dtype)
+
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None, scale=None):
+    """Full (quadratic) masked softmax attention with GQA broadcast."""
+    b, hq, s, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((s, sk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, _NEG)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(mask[None, None], probs, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def linear_scan(a, b):
+    """h_t = a_t h_{t-1} + b_t via lax.scan (time axis 1)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    _, hs = jax.lax.scan(step, jnp.zeros_like(a32[:, 0]),
+                         (a32.swapaxes(0, 1), b32.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1).astype(a.dtype)
+
+
+def rwkv6_scan(r, k, v, w, u):
+    """RWKV-6 recurrence via lax.scan.  r/k/v/w: (BH, T, D), u: (D,)."""
+    bh, t, d = r.shape
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw
+        kv = kt[:, :, None] * vt[:, None, :]                    # (BH, D, D)
+        out = jnp.einsum("bk,bkv->bv", rt,
+                         s + u[None, :, None] * kv)
+        s = wt[:, :, None] * s + kv
+        return s, out
+
+    r32 = r.astype(jnp.float32).swapaxes(0, 1)
+    k32 = k.astype(jnp.float32).swapaxes(0, 1)
+    v32 = v.astype(jnp.float32).swapaxes(0, 1)
+    w32 = w.astype(jnp.float32).swapaxes(0, 1)
+    s0 = jnp.zeros((bh, d, d), jnp.float32)
+    _, outs = jax.lax.scan(step, s0, (r32, k32, v32, w32))
+    return outs.swapaxes(0, 1).astype(r.dtype)

@@ -1,0 +1,378 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax import (jax locks the device count
+on first init): the dry-run — and only the dry-run — sees 512 placeholder
+host devices so ``make_production_mesh`` can build the 16x16 single-pod and
+2x16x16 multi-pod meshes.  No arrays are ever allocated: parameters, batches
+and caches enter ``lower()`` as sharded ShapeDtypeStructs.
+
+Per cell this records:
+  * ``compiled.memory_analysis()``   -> per-device bytes (proves it fits);
+  * ``compiled.cost_analysis()``     -> HLO FLOPs / bytes for the roofline;
+  * a pass over ``compiled.as_text()`` summing operand bytes of every
+    all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute (collective term of the roofline).
+
+CLI:
+  python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs, partition, sharding as shlib
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt_lib
+from repro.train import step as step_lib
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def input_specs(arch: configs.Arch, shape_name: str, mesh) -> dict:
+    """Sharded ShapeDtypeStructs for one (arch, shape) cell."""
+    cfg = arch.config
+    sh = arch.shapes[shape_name]
+    b, s = sh.global_batch, sh.seq_len
+    dp = shlib.dp_axes(mesh)
+    dp_ok = dp if (b % max(1, _prod(mesh, dp))) == 0 else None
+    tok_sh = NamedSharding(mesh, P(dp_ok, None))
+    out: dict = {}
+    if sh.phase == "train":
+        out["tokens"] = _sds((b, s), jnp.int32, tok_sh)
+        out["labels"] = _sds((b, s), jnp.int32, tok_sh)
+    elif sh.phase == "prefill":
+        out["tokens"] = _sds((b, s), jnp.int32, tok_sh)
+    else:  # decode: one new token against a seq_len-deep state
+        out["tokens"] = _sds((b, 1), jnp.int32, tok_sh)
+    if cfg.family == "encdec":
+        e = cfg.encdec
+        fr_sh = NamedSharding(mesh, P(dp_ok, None, None))
+        if sh.phase != "decode":
+            out["encoder_frames"] = _sds((b, e.encoder_len, cfg.d_model),
+                                         jnp.float32, fr_sh)
+    if cfg.mrope_sections is not None:
+        s_eff = s if sh.phase != "decode" else 1
+        out["mrope_positions"] = _sds(
+            (3, b, s_eff), jnp.int32,
+            NamedSharding(mesh, P(None, dp_ok, None)))
+    return out
+
+
+def _prod(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_len: int, mesh,
+                       ring_local: bool = False):
+    if ring_local and cfg.family == "transformer":
+        from repro.models import transformer as _tr
+        abstract = _tr.lm_cache_specs(cfg, batch, max_len, ring_local=True)
+    else:
+        abstract = api.decode_state_specs(cfg, batch, max_len)
+    shards = partition.cache_shardings(abstract, mesh)
+    return jax.tree.map(
+        lambda sds, sh: _sds(sds.shape, sds.dtype, sh), abstract, shards)
+
+
+# Per-arch training optimizer defaults: f32 AdamW everywhere it fits; the
+# 671B MoE needs Adafactor (8 TB of f32 moments do not fit a 256-chip pod —
+# quantified in EXPERIMENTS.md §Dry-run).
+_OPT_FOR_ARCH = {
+    "deepseek_v3_671b": ("adafactor", {}),
+    "mixtral_8x22b": ("adamw", {"state_dtype": "bfloat16"}),
+    "qwen2_vl_72b": ("adamw", {"state_dtype": "bfloat16"}),
+}
+
+# Per-arch train-step defaults (production config, EXPERIMENTS.md §Dry-run):
+# chunked vocab loss everywhere (100k+ vocabs), microbatch accumulation
+# sized so activations fit 16 GiB HBM next to params+optimizer state.
+_TRAIN_FOR_ARCH = {
+    "gemma2_2b": {"microbatches": 2},
+    "gemma2_9b": {"microbatches": 4},
+    "gemma2_27b": {"microbatches": 4},
+    "qwen2_5_3b": {"microbatches": 2},
+    "whisper_medium": {"microbatches": 2},
+    "mixtral_8x22b": {"microbatches": 8, "acc_dtype": "bfloat16"},
+    "deepseek_v3_671b": {"microbatches": 8, "acc_dtype": "bfloat16"},
+    "rwkv6_7b": {"microbatches": 2},
+    "recurrentgemma_2b": {"microbatches": 4},
+    "qwen2_vl_72b": {"microbatches": 8, "acc_dtype": "bfloat16"},
+}
+
+
+def train_options_for(arch_name: str, overrides: dict | None = None):
+    opts = dict(remat="block", chunked_loss=True, microbatches=1)
+    opts.update(_TRAIN_FOR_ARCH.get(arch_name, {}))
+    opts.update(overrides or {})
+    return step_lib.TrainOptions(**opts)
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile one cell
+# ---------------------------------------------------------------------------
+
+def lower_cell(arch: configs.Arch, shape_name: str, mesh, *,
+               opt_overrides: dict | None = None,
+               train_overrides: dict | None = None,
+               moe_impl: str | None = None,
+               ring_local: bool = False,
+               quant8: bool = False,
+               serve_sp: bool = False):
+    """Returns (lowered, compiled, meta) for one (arch, shape, mesh) cell."""
+    import dataclasses as _dc
+    cfg = arch.config
+    if moe_impl and cfg.moe is not None:
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, impl=moe_impl))
+    sh = arch.shapes[shape_name]
+    rules = (shlib.train_rules(mesh) if sh.phase == "train"
+             else shlib.serve_rules(mesh, seq_shard=serve_sp))
+    specs = input_specs(arch, shape_name, mesh)
+
+    with mesh, shlib.use_rules(mesh, rules):
+        if sh.phase == "train":
+            name, okw = _OPT_FOR_ARCH.get(arch.name, ("adamw", {}))
+            if opt_overrides:
+                name, okw = opt_overrides.get("name", name), \
+                    opt_overrides.get("kw", okw)
+            opt = opt_lib.make(name, lr=3e-4, **okw)
+            init_fn, step_fn = step_lib.build_train_step(
+                cfg, opt, train_options_for(arch.name, train_overrides))
+            state_abs = jax.eval_shape(init_fn,
+                                       jax.ShapeDtypeStruct((2,), jnp.uint32))
+            state_sh = step_lib.state_shardings(state_abs, cfg, mesh)
+            state_in = jax.tree.map(
+                lambda sds, shd: _sds(sds.shape, sds.dtype, shd),
+                state_abs, state_sh)
+            jitted = jax.jit(step_fn, donate_argnums=0)
+            lowered = jitted.lower(state_in, specs)
+        else:
+            params_abs = api.abstract_params(cfg)
+            if quant8:
+                from repro.serve import engine as _eng
+                params_abs = jax.eval_shape(
+                    lambda p: _eng.quantize_params(p), params_abs)
+            p_sh = partition.param_shardings(params_abs, cfg, mesh,
+                                             regime="serve")
+            params_in = jax.tree.map(
+                lambda sds, shd: _sds(sds.shape, sds.dtype, shd),
+                params_abs, p_sh)
+            if sh.phase == "prefill":
+                max_len = sh.seq_len
+                state_in = decode_state_specs(cfg, sh.global_batch, max_len,
+                                              mesh, ring_local=ring_local)
+                extras = {k: v for k, v in specs.items() if k != "tokens"}
+
+                def serve_step(params, tokens, state, extras):
+                    logits, new_state = api.decode_step(
+                        params, cfg, tokens, state, 0, extras=extras)
+                    return logits[:, -1:], new_state
+
+                jitted = jax.jit(serve_step, donate_argnums=2)
+                lowered = jitted.lower(params_in, specs["tokens"], state_in,
+                                       extras)
+            else:
+                max_len = sh.seq_len
+                state_in = decode_state_specs(cfg, sh.global_batch, max_len,
+                                              mesh, ring_local=ring_local)
+                extras = {k: v for k, v in specs.items() if k != "tokens"}
+
+                def serve_step(params, tokens, state, pos, extras):
+                    return api.decode_step(params, cfg, tokens, state, pos,
+                                           extras=extras)
+
+                jitted = jax.jit(serve_step, donate_argnums=2)
+                lowered = jitted.lower(
+                    params_in, specs["tokens"], state_in,
+                    _sds((), jnp.int32), extras)
+        compiled = lowered.compile()
+    meta = {"arch": arch.name, "shape": shape_name, "phase": sh.phase,
+            "mesh": dict(zip(mesh.axis_names, mesh.devices.shape))}
+    return lowered, compiled, meta
+
+
+# ---------------------------------------------------------------------------
+# Collective extraction from compiled HLO
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*[a-z0-9]+\[[0-9,]*\][^=]*?\b"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-collective-type operand bytes + wire bytes from optimized HLO."""
+    stats: dict = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        shapes = _SHAPE_RE.findall(line.split("=", 1)[1].split("(")[0])
+        if not shapes:
+            continue
+        # Result may be a tuple (shape list); sum them.
+        result_bytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        g = 1
+        mg = _GROUPS_RE.search(line)
+        if mg:
+            g = max(1, len([x for x in mg.group(1).split(",") if x.strip()]))
+        if kind == "all-gather":
+            operand = result_bytes // max(g, 1)
+            wire = result_bytes * (g - 1) // max(g, 1)
+        elif kind == "reduce-scatter":
+            operand = result_bytes * g
+            wire = result_bytes * (g - 1)
+        elif kind == "all-reduce":
+            operand = result_bytes
+            wire = 2 * result_bytes * (g - 1) // max(g, 1)
+        else:  # all-to-all / collective-permute
+            operand = result_bytes
+            wire = result_bytes * (g - 1) // max(g, 1) if kind == "all-to-all" \
+                else result_bytes
+        s = stats.setdefault(kind, {"count": 0, "operand_bytes": 0,
+                                    "wire_bytes": 0})
+        s["count"] += 1
+        s["operand_bytes"] += operand
+        s["wire_bytes"] += wire
+    return stats
+
+
+def analyze(lowered, compiled, meta: dict) -> dict:
+    from repro.launch import hlo_analysis
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    text = compiled.as_text()
+    out = dict(meta)
+    # Raw cost_analysis numbers (while bodies counted ONCE — see
+    # hlo_analysis docstring); kept for reference.
+    out["flops_raw_cost_analysis"] = float(cost.get("flops", 0.0))
+    out["bytes_raw_cost_analysis"] = float(cost.get("bytes accessed", 0.0))
+    # Loop-aware numbers (scan bodies x trip counts) — the roofline inputs.
+    la = hlo_analysis.analyze_hlo(text)
+    out["flops"] = la["flops"]
+    out["hlo_bytes"] = la["bytes_est"]
+    out["collectives"] = la["collectives"]
+    out["collective_operand_bytes"] = la["collective_operand_bytes"]
+    out["collective_wire_bytes"] = la["collective_wire_bytes"]
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        out[attr] = int(getattr(mem, attr, 0) or 0)
+    return out
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str, *,
+             train_overrides: dict | None = None,
+             moe_impl: str | None = None, ring_local: bool = False,
+             quant8: bool = False, serve_sp: bool = False) -> dict:
+    arch = configs.get(arch_name)
+    sh = arch.shapes[shape_name]
+    if sh.skip:
+        return {"arch": arch.name, "shape": shape_name, "mesh": mesh_kind,
+                "skipped": sh.skip}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    lowered, compiled, meta = lower_cell(arch, shape_name, mesh,
+                                         train_overrides=train_overrides,
+                                         moe_impl=moe_impl,
+                                         ring_local=ring_local,
+                                         quant8=quant8, serve_sp=serve_sp)
+    result = analyze(lowered, compiled, meta)
+    result["mesh_kind"] = mesh_kind
+    result["compile_s"] = round(time.time() - t0, 1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", type=str, default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="results/dryrun")
+    ap.add_argument("--chunked-loss", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = configs.all_archs() if args.all or not args.arch else [args.arch]
+    shapes = (["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+              if args.all or not args.shape else [args.shape])
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    overrides = {}
+    if args.chunked_loss:
+        overrides["chunked_loss"] = True
+    if args.microbatches:
+        overrides["microbatches"] = args.microbatches
+
+    failures = 0
+    for an in archs:
+        for sn in shapes:
+            for mk in meshes:
+                tag = f"{an.replace('-', '_')}.{sn}.{mk}"
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    res = run_cell(an, sn, mk,
+                                   train_overrides=overrides or None)
+                    status = ("SKIP " + res["skipped"]) if "skipped" in res \
+                        else (f"ok flops={res['flops']:.3e} "
+                              f"temp={res['temp_size_in_bytes']/2**30:.2f}GiB "
+                              f"coll={res['collective_operand_bytes']/2**20:.0f}MiB "
+                              f"({res['compile_s']}s)")
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    failures += 1
+                    res = {"arch": an, "shape": sn, "mesh": mk,
+                           "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    status = f"FAIL {type(e).__name__}: {e}"
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                print(f"[dryrun] {tag:45s} {status}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

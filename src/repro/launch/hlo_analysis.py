@@ -1,0 +1,267 @@
+"""Loop-aware analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body exactly ONCE
+(verified in tests/test_roofline.py), which silently undercounts scanned
+layer stacks by ~num_layers x — and misses that GSPMD-inserted collectives
+inside the layer scan repeat per layer.  This module re-derives the roofline
+inputs from the HLO text with loop multipliers:
+
+1. parse computations and their instructions (result shapes resolvable
+   per-computation; operands resolve through the local symbol table);
+2. find ``while`` ops, extract static trip counts from the condition
+   computation's comparison constant;
+3. DFS from ENTRY accumulating a multiplier per computation
+   (x trip for while bodies, x1 for fusions/calls);
+4. sum, per computation and scaled by its multiplier:
+   * dot FLOPs (2 x prod(result dims) x prod(contracted dims)),
+   * HBM-traffic estimate (instruction results + dot/fusion/collective
+     operands; parameters/GTEs/bitcasts excluded),
+   * collective payloads by kind (operand bytes and ring wire bytes).
+
+The traffic estimate is an op-level approximation of "bytes accessed" (it
+cannot see register/cache reuse inside a fused loop); EXPERIMENTS.md states
+the methodology wherever these numbers appear.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?[a-z0-9]+\[)")
+_SHAPES = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPCODE = re.compile(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+                     r"([a-z][\w\-]*)\(")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)")
+_WHILE = re.compile(r"while\(")
+_COND_BODY = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_GROUPS = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES = {"parameter", "get-tuple-element", "tuple", "bitcast",
+               "constant", "while", "iota", "after-all", "partition-id",
+               "replica-id"}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPES.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _result_text(line: str) -> str:
+    rhs = line.split("=", 1)[1] if "=" in line else ""
+    return rhs.split("(", 1)[0]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    line: str
+    result_bytes: int
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    shapes: dict                      # %name -> result-shape text
+
+
+def parse_computations(text: str) -> dict[str, "Computation"]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and ("->" in line) and ("{" in line):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name = m.group(1)
+        op_m = _OPCODE.search(line)
+        opcode = op_m.group(1) if op_m else "unknown"
+        res_text = _result_text(line)
+        cur.shapes[name] = res_text
+        cur.instrs.append(Instr(name, opcode, line, _shape_bytes(res_text)))
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for ins in cond.instrs:
+        for c in _CONST_INT.findall(ins.line):
+            best = max(best, int(c))
+    return best
+
+
+def _multipliers(comps: dict) -> dict[str, float]:
+    mult: dict[str, float] = defaultdict(float)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return mult
+
+    import sys
+    sys.setrecursionlimit(10000)
+    seen_stack = set()
+
+    def visit(comp: Computation, m: float):
+        mult[comp.name] += m
+        if comp.name in seen_stack:      # defensive (HLO is acyclic)
+            return
+        seen_stack.add(comp.name)
+        for ins in comp.instrs:
+            if _WHILE.search(ins.line):
+                cb = _COND_BODY.search(ins.line)
+                if cb:
+                    trip = _trip_count(comps, cb.group(1))
+                    body = comps.get(cb.group(2))
+                    if body is not None:
+                        visit(body, m * trip)
+                    cond = comps.get(cb.group(1))
+                    if cond is not None:
+                        mult[cond.name] += m * (trip + 1)
+            else:
+                for callee in _CALLS.findall(ins.line):
+                    if callee in comps and "condition=" not in ins.line:
+                        visit(comps[callee], m)
+        seen_stack.discard(comp.name)
+
+    visit(entry, 1.0)
+    return dict(mult)
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    # result dims
+    res = _SHAPES.findall(_result_text(ins.line))
+    if not res:
+        return 0.0
+    n_res = 1
+    for d in res[0][1].split(","):
+        if d:
+            n_res *= int(d)
+    # contracted dims from lhs shape + contracting dims
+    ops = _OPERANDS.findall(ins.line.split("(", 1)[1])
+    contract = 1
+    m = _CONTRACT.search(ins.line)
+    if m and ops:
+        lhs_shape = comp.shapes.get(ops[0], "")
+        lhs = _SHAPES.findall(lhs_shape)
+        if lhs:
+            dims = [int(d) for d in lhs[0][1].split(",") if d]
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    contract *= dims[int(idx)]
+    return 2.0 * n_res * contract
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> int:
+    total = 0
+    args = ins.line.split("(", 1)[1] if "(" in ins.line else ""
+    args = args.split("), ")[0]
+    for op in _OPERANDS.findall(args):
+        total += _shape_bytes(comp.shapes.get(op, ""))
+    return total
+
+
+def analyze_hlo(text: str) -> dict:
+    comps = parse_computations(text)
+    mult = _multipliers(comps)
+    flops = 0.0
+    bytes_est = 0.0
+    coll: dict[str, dict] = {}
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                flops += m * _dot_flops(ins, comp)
+                bytes_est += m * (ins.result_bytes + _operand_bytes(ins, comp))
+            elif any(ins.opcode.startswith(c) for c in _COLLECTIVES):
+                kind = next(c for c in _COLLECTIVES if ins.opcode.startswith(c))
+                rb = ins.result_bytes
+                g = 1
+                mg = _GROUPS_IOTA.search(ins.line)
+                if mg:
+                    g = max(1, int(mg.group(2)))   # [n_groups, group_size]
+                else:
+                    mg = _GROUPS.search(ins.line)
+                    if mg:
+                        g = max(1, len([x for x in mg.group(1).split(",")
+                                        if x.strip()]))
+                if kind == "all-gather":
+                    operand, wire = rb // g, rb * (g - 1) // g
+                elif kind == "reduce-scatter":
+                    operand, wire = rb * g, rb * (g - 1)
+                elif kind == "all-reduce":
+                    operand, wire = rb, 2 * rb * (g - 1) // g
+                else:
+                    operand = rb
+                    wire = rb * (g - 1) // g if kind == "all-to-all" else rb
+                s = coll.setdefault(kind, {"count": 0.0, "operand_bytes": 0.0,
+                                           "wire_bytes": 0.0})
+                s["count"] += m
+                s["operand_bytes"] += m * operand
+                s["wire_bytes"] += m * wire
+                bytes_est += m * rb
+            elif ins.opcode in ("fusion", "custom-call", "convolution",
+                                "scatter", "gather", "dynamic-slice",
+                                "dynamic-update-slice", "sort",
+                                "select-and-scatter", "concatenate"):
+                # ("copy" excluded: CPU layout-assignment artifacts that the
+                # TPU pipeline fuses or elides.)
+                # Materializing ops: result only — their operands are other
+                # ops' results (already counted where produced) or params
+                # (counted at their consuming dot).  Counting both sides of
+                # every edge double-counts; counting top-level elementwise /
+                # convert / broadcast at all charges traffic a TPU fusion
+                # pipeline never pays (CPU fuses far less than Mosaic/XLA-TPU
+                # — validated against an analytic traffic model in
+                # EXPERIMENTS.md §Roofline methodology).
+                bytes_est += m * ins.result_bytes
+    return {
+        "flops": flops,
+        "bytes_est": bytes_est,
+        "collectives": coll,
+        "collective_operand_bytes": sum(s["operand_bytes"]
+                                        for s in coll.values()),
+        "collective_wire_bytes": sum(s["wire_bytes"] for s in coll.values()),
+        "n_computations": len(comps) - 1,
+    }

@@ -1,0 +1,75 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --smoke \\
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpts
+
+On this CPU host the ``--smoke`` reduced configs run end-to-end; on a pod the
+same launcher builds the production mesh, applies the partitioner's
+shardings, and wraps the jitted step in the fault-tolerant TrainDriver
+(checkpoint/restart, straggler detection).  The per-arch production step
+options (microbatches, chunked loss, optimizer) come from the same table the
+dry-run proves (`launch/dryrun.py`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data.pipeline import synth_batch
+from repro.train import fault, optimizer as opt_lib, schedule, step as step_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--opt", default="adamw",
+                    choices=["adamw", "adafactor", "sgd"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="block",
+                    choices=["none", "block", "dots"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    arch = configs.get(args.arch)
+    cfg = arch.smoke if args.smoke else arch.config
+    print(f"[train] arch={arch.name} smoke={args.smoke} "
+          f"params~{cfg.param_count()/1e6:.1f}M steps={args.steps}")
+
+    opt = opt_lib.make(args.opt, lr=schedule.warmup_cosine(
+        args.lr, warmup_steps=max(args.steps // 20, 2),
+        total_steps=args.steps))
+    init_fn, step_fn = step_lib.build_train_step(
+        cfg, opt, step_lib.TrainOptions(
+            remat=args.remat, microbatches=args.microbatches,
+            chunked_loss=cfg.family == "transformer"))
+    state = jax.jit(init_fn)(jax.random.PRNGKey(0))
+    jstep = jax.jit(step_fn, donate_argnums=0)
+
+    def batch_fn(step):
+        return {k: jnp.asarray(v) for k, v in
+                synth_batch(cfg, batch=args.batch, seq=args.seq,
+                            step=step).items()}
+
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix=f"repro_{arch.name}_")
+    driver = fault.TrainDriver(
+        cfg=fault.DriverConfig(ckpt_dir=ckpt, ckpt_every=args.ckpt_every),
+        step_fn=jstep, batch_fn=batch_fn, state=state)
+    driver.run(args.steps)
+    print(f"[train] done at step {driver.step}; events="
+          f"{[e[0] for e in driver.events]}; checkpoints in {ckpt}")
+
+
+if __name__ == "__main__":
+    main()

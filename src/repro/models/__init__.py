@@ -1,0 +1,1 @@
+"""Model zoo: composable pure-JAX definitions for all assigned families."""

@@ -1,0 +1,89 @@
+"""Family-dispatching model API: one surface for train/serve/dry-run code.
+
+  init(cfg, key)                        -> params
+  forward(params, cfg, batch)           -> {"logits", "aux_loss", ...}
+  decode_state_specs(cfg, batch, ...)   -> ShapeDtypeStruct pytree
+  init_decode_state(...)                -> zeroed state
+  decode_step(params, cfg, tokens, state, pos) -> (logits, new_state)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, griffin, rwkv, transformer
+from repro.models.config import ModelConfig
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    if cfg.family == "transformer":
+        return transformer.init_lm(key, cfg)
+    if cfg.family == "encdec":
+        return encdec.init_whisper(key, cfg)
+    if cfg.family == "rwkv":
+        return rwkv.init_rwkv(key, cfg)
+    if cfg.family == "griffin":
+        return griffin.init_griffin(key, cfg)
+    raise ValueError(cfg.family)
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    """Shape-only params (no allocation) — dry-run uses this."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init(cfg, k), key)
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict) -> dict:
+    """batch: {"tokens": (B,S)} + family extras (encoder_frames,
+    mrope_positions, embeddings)."""
+    kw = {}
+    for k in ("mrope_positions", "embeddings", "encoder_frames"):
+        if k in batch:
+            kw[k] = batch[k]
+    if cfg.family == "transformer":
+        return transformer.lm_forward(params, cfg, batch["tokens"], **kw)
+    if cfg.family == "encdec":
+        return encdec.whisper_forward(params, cfg, batch["tokens"], **kw)
+    if cfg.family == "rwkv":
+        return rwkv.rwkv_forward(params, cfg, batch["tokens"], **kw)
+    if cfg.family == "griffin":
+        return griffin.griffin_forward(params, cfg, batch["tokens"], **kw)
+    raise ValueError(cfg.family)
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    if cfg.family == "transformer":
+        return transformer.lm_cache_specs(cfg, batch, max_len)
+    if cfg.family == "encdec":
+        return encdec.whisper_cache_specs(cfg, batch, max_len)
+    if cfg.family == "rwkv":
+        return rwkv.rwkv_state_specs(cfg, batch)
+    if cfg.family == "griffin":
+        window = cfg.griffin.local_window
+        return griffin.griffin_state_specs(cfg, batch,
+                                           min(window, max_len))
+    raise ValueError(cfg.family)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        decode_state_specs(cfg, batch, max_len))
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                state: dict, cache_pos, *, extras: dict | None = None):
+    kw = dict(extras or {})
+    if cfg.family == "transformer":
+        return transformer.lm_decode_step(params, cfg, tokens, state,
+                                          cache_pos, **kw)
+    if cfg.family == "encdec":
+        return encdec.whisper_decode_step(params, cfg, tokens, state,
+                                          cache_pos, **kw)
+    if cfg.family == "rwkv":
+        return rwkv.rwkv_decode_step(params, cfg, tokens, state, cache_pos,
+                                     **kw)
+    if cfg.family == "griffin":
+        return griffin.griffin_decode_step(params, cfg, tokens, state,
+                                           cache_pos, **kw)
+    raise ValueError(cfg.family)

@@ -1,0 +1,276 @@
+"""Griffin / recurrentgemma family: RG-LRU recurrent blocks + local attention.
+
+Layer pattern (config): (rec, rec, attn) repeating.  The recurrent block is
+
+    y = W_out( gelu(W_y x) * RG-LRU(conv1d(W_x x)) )
+
+with the RG-LRU gated diagonal recurrence
+    r_t = sigmoid(W_a u_t + b_a);  i_t = sigmoid(W_i u_t + b_i)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * u_t)
+
+The pure-JAX path evaluates the scan with ``lax.associative_scan`` (O(log T)
+depth, O(T) memory, autodiff-safe); the TPU hot-spot kernel is
+``kernels/rglru.py``.  Local attention uses a bounded window, which is what
+makes the 500k-token decode cell sub-quadratic-feasible for this arch.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (F32, attention, dense_init, dtype_of, mask_padded_vocab,
+                                 init_attention, init_mlp, init_rmsnorm, mlp,
+                                 rmsnorm)
+from repro.runtime import maybe_dequant, maybe_remat
+from repro.sharding import shard
+
+_C_RGLRU = 8.0
+
+
+def init_recurrent_block(key, cfg: ModelConfig) -> dict:
+    g = cfg.griffin
+    d, w = cfg.d_model, g.lru_width
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_y": dense_init(ks[0], (d, w), dt),
+        "w_x": dense_init(ks[1], (d, w), dt),
+        "conv": dense_init(ks[2], (g.conv_width, w), dt, scale=0.3),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_a": dense_init(ks[3], (w, w), dt),
+        "b_a": jnp.zeros((w,), dt),
+        "w_i": dense_init(ks[4], (w, w), dt),
+        "b_i": jnp.zeros((w,), dt),
+        "lam": jnp.asarray(
+            jax.random.uniform(jax.random.fold_in(key, 7), (w,), F32,
+                               0.4, 0.8)),
+        "w_out": dense_init(ks[5], (w, d), dt, scale=1.0 / math.sqrt(w)),
+    }
+
+
+def _causal_conv1d(p: dict, x: jax.Array, *, state: jax.Array | None = None):
+    """Depthwise causal conv, width W.  x (B,T,D); state (B,W-1,D) for decode."""
+    w = p["conv"].shape[0]
+    if state is None:
+        hist = jnp.zeros_like(x[:, :w - 1])
+    else:
+        hist = state.astype(x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv"][i][None, None]
+              for i in range(w))
+    new_state = xp[:, -(w - 1):] if state is not None else None
+    return out + p["conv_b"][None, None], new_state
+
+
+def _rglru_assoc(a: jax.Array, b: jax.Array,
+                 h0: jax.Array | None = None) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t via associative scan along axis 1 (f32)."""
+    if h0 is not None:
+        # Fold the initial state into the first input.
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru(p: dict, u: jax.Array, *, h0: jax.Array | None = None):
+    """RG-LRU over u (B,T,W).  Returns (h (B,T,W), h_final (B,W))."""
+    r = jax.nn.sigmoid(
+        jnp.einsum("btw,wv->btv", u, p["w_a"], preferred_element_type=F32)
+        + p["b_a"].astype(F32))
+    i = jax.nn.sigmoid(
+        jnp.einsum("btw,wv->btv", u, p["w_i"], preferred_element_type=F32)
+        + p["b_i"].astype(F32))
+    log_a = -_C_RGLRU * jax.nn.softplus(p["lam"])[None, None] * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * u.astype(F32))
+    h = _rglru_assoc(a, gated, h0=h0)
+    return h.astype(u.dtype), h[:, -1]
+
+
+def recurrent_block(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                    state: dict | None = None):
+    """x (B,T,D) -> (B,T,D).  state (decode): {"conv": (B,W-1,lru), "h": (B,lru)}."""
+    y = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["w_y"],
+                               preferred_element_type=F32))
+    u = jnp.einsum("btd,dw->btw", x, p["w_x"],
+                   preferred_element_type=F32).astype(x.dtype)
+    u = shard(u, "batch", None, "lru")
+    u, conv_state = _causal_conv1d(p, u, state=state["conv"] if state else None)
+    h, h_fin = rglru(p, u.astype(x.dtype),
+                     h0=state["h"] if state else None)
+    out = (y.astype(x.dtype) * h)
+    z = jnp.einsum("btw,wd->btd", out, p["w_out"], preferred_element_type=F32)
+    new_state = None
+    if state is not None:
+        new_state = {"conv": conv_state.astype(state["conv"].dtype),
+                     "h": h_fin}
+    return z.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full model: pattern-block scan like the transformer family
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 2)
+    dt = dtype_of(cfg)
+    p = {"ln1": init_rmsnorm(cfg.d_model, dt),
+         "ln2": init_rmsnorm(cfg.d_model, dt)}
+    if kind == "rec":
+        p["rec"] = init_recurrent_block(ks[0], cfg)
+    else:
+        p["attn"] = init_attention(ks[0], cfg)
+    p["mlp"] = init_mlp(ks[1], cfg, gated=True)
+    return p
+
+
+def init_griffin(key, cfg: ModelConfig) -> dict:
+    g = cfg.griffin
+    u = len(g.pattern)
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, cfg.num_layers + 2)
+    n_blocks, tail = divmod(cfg.num_layers, u)
+    params: dict = {
+        "emb": dense_init(ks[-1], (cfg.padded_vocab, cfg.d_model), dt, scale=0.02),
+        "final_norm": init_rmsnorm(cfg.d_model, dt),
+    }
+    if n_blocks:
+        params["blocks"] = {
+            f"slot{j}": jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[_init_layer(ks[b * u + j], cfg, g.pattern[j])
+                  for b in range(n_blocks)])
+            for j in range(u)}
+    if tail:
+        params["tail"] = [
+            _init_layer(ks[n_blocks * u + j], cfg, g.pattern[j])
+            for j in range(tail)]
+    return params
+
+
+def _apply_griffin_layer(pl, x, cfg, kind, *, state=None, cache_pos=None):
+    pl = maybe_dequant(pl)
+    h = rmsnorm(pl["ln1"], x, cfg.norm_eps)
+    if kind == "rec":
+        a, new_state = recurrent_block(pl["rec"], h, cfg, state=state)
+    else:
+        ring = None
+        if state is not None and state["k"].shape[2] == cfg.griffin.local_window:
+            ring = cfg.griffin.local_window
+        a, new_state = attention(pl["attn"], h, cfg, kind="local",
+                                 cache=state, cache_pos=cache_pos,
+                                 ring_window=ring)
+    x = x + a
+    f = mlp(pl["mlp"], rmsnorm(pl["ln2"], x, cfg.norm_eps), act="gelu")
+    x = x + f
+    return shard(x, "batch", "seq", None), new_state
+
+
+def griffin_forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                    **_) -> dict:
+    g = cfg.griffin
+    u = len(g.pattern)
+    x = jnp.take(params["emb"], tokens, axis=0)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    x = shard(x, "batch", "seq", None)
+
+    if "blocks" in params:
+        def body(xx, pb):
+            for j in range(u):
+                xx, _ = _apply_griffin_layer(pb[f"slot{j}"], xx, cfg,
+                                             g.pattern[j])
+            return xx, None
+        x, _ = jax.lax.scan(maybe_remat(body), x, params["blocks"])
+    for j, pl in enumerate(params.get("tail", [])):
+        x, _ = _apply_griffin_layer(pl, x, cfg, g.pattern[j])
+
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["emb"].T,
+                        preferred_element_type=F32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    logits = mask_padded_vocab(cfg, logits)
+    return {"logits": shard(logits, "batch", None, "vocab"),
+            "aux_loss": jnp.zeros((), F32)}
+
+
+def griffin_state_specs(cfg: ModelConfig, batch: int, attn_window: int) -> dict:
+    """Decode state: recurrent layers carry (conv, h); attn layers a bounded
+    ring KV cache of `attn_window` (the sub-quadratic long_500k story)."""
+    g = cfg.griffin
+    dt = dtype_of(cfg)
+    u = len(g.pattern)
+    n_blocks, tail = divmod(cfg.num_layers, u)
+    rec = {"conv": jax.ShapeDtypeStruct((batch, g.conv_width - 1, g.lru_width), dt),
+           "h": jax.ShapeDtypeStruct((batch, g.lru_width), F32)}
+    att = {"k": jax.ShapeDtypeStruct(
+               (batch, cfg.num_kv_heads, attn_window, cfg.head_dim), dt),
+           "v": jax.ShapeDtypeStruct(
+               (batch, cfg.num_kv_heads, attn_window, cfg.head_dim), dt)}
+
+    def stacked(tree, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+    specs: dict = {}
+    if n_blocks:
+        specs["blocks"] = {
+            f"slot{j}": stacked(rec if g.pattern[j] == "rec" else att, n_blocks)
+            for j in range(u)}
+    if tail:
+        specs["tail"] = [dict(rec if g.pattern[j] == "rec" else att)
+                         for j in range(tail)]
+    return specs
+
+
+def griffin_init_state(cfg: ModelConfig, batch: int, attn_window: int) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        griffin_state_specs(cfg, batch, attn_window))
+
+
+def griffin_decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                        state: dict, cache_pos, **_):
+    g = cfg.griffin
+    u = len(g.pattern)
+    x = jnp.take(params["emb"], tokens, axis=0)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+
+    new_state: dict = {}
+    if "blocks" in params:
+        def body(xx, inp):
+            pb, st = inp
+            ns = {}
+            for j in range(u):
+                xx, s_j = _apply_griffin_layer(
+                    pb[f"slot{j}"], xx, cfg, g.pattern[j],
+                    state=st[f"slot{j}"], cache_pos=cache_pos)
+                ns[f"slot{j}"] = s_j
+            return xx, ns
+        x, ns = jax.lax.scan(body, x, (params["blocks"], state["blocks"]))
+        new_state["blocks"] = ns
+    if "tail" in params:
+        new_state["tail"] = []
+        for j, pl in enumerate(params["tail"]):
+            x, s_j = _apply_griffin_layer(pl, x, cfg, g.pattern[j],
+                                          state=state["tail"][j],
+                                          cache_pos=cache_pos)
+            new_state["tail"].append(s_j)
+
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["emb"].T,
+                        preferred_element_type=F32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return mask_padded_vocab(cfg, logits), new_state

@@ -1,0 +1,368 @@
+"""Shared neural-network building blocks (pure JAX, param pytrees).
+
+Every block is a pair of functions: ``init_*(key, cfg, ...) -> params`` and
+an apply function ``*(params, x, ...) -> y``.  Params are plain nested dicts
+of jnp arrays so they stay pjit/scan/checkpoint friendly.  Sharding enters
+only through ``repro.sharding.shard`` annotations (no-ops without a mesh).
+
+Compute conventions: weights bf16 (cfg.dtype), norms and softmax statistics
+in f32, matmul accumulation f32 via ``preferred_element_type``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.sharding import shard
+
+F32 = jnp.float32
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape, F32) * scale).astype(dtype)
+
+
+def mask_padded_vocab(cfg, logits: jax.Array) -> jax.Array:
+    """Set the padded vocab columns (cfg.vocab_size..padded_vocab) to -inf so
+    sampling/argmax/CE never select them.  No-op when nothing is padded."""
+    pv = cfg.padded_vocab
+    if pv == cfg.vocab_size:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                   logits.ndim - 1)
+    neg = jnp.asarray(-0.7 * jnp.finfo(jnp.float32).max, logits.dtype)
+    return jnp.where(col < cfg.vocab_size, logits, neg)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    h = x.astype(F32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + eps)
+    return (h * params["scale"].astype(F32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    h = x.astype(F32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    return (h * params["scale"].astype(F32)
+            + params["bias"].astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_table(positions: jax.Array, dim: int, theta: float) -> tuple:
+    """positions (..., S) -> cos/sin tables (..., S, dim/2) in f32."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=F32) / dim))
+    ang = positions.astype(F32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, H, S, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    if cos.ndim == 2:
+        cos_, sin_ = cos[None, None], sin[None, None]
+    else:
+        cos_, sin_ = cos[:, None], sin[:, None]
+    return jnp.concatenate(
+        [x1 * cos_ - x2 * sin_, x2 * cos_ + x1 * sin_], axis=-1
+    ).astype(x.dtype)
+
+
+def mrope_table(positions: jax.Array, dim: int, theta: float,
+                sections: tuple[int, int, int]) -> tuple:
+    """M-RoPE (qwen2-vl): positions (3, B, S) for (t, h, w); the frequency
+    bands are split into three groups, each rotated by its own position id."""
+    cos3, sin3 = rope_table(positions, dim, theta)     # (3, B, S, dim/2)
+    parts_c, parts_s = [], []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts_c.append(cos3[i, ..., start:start + sec])
+        parts_s.append(sin3[i, ..., start:start + sec])
+        start += sec
+    return jnp.concatenate(parts_c, -1), jnp.concatenate(parts_s, -1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, softcap, sliding window, QKV bias) + chunked jnp fallback
+# ---------------------------------------------------------------------------
+
+_NEG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def init_attention(key, cfg: ModelConfig, *, d_model: int | None = None) -> dict:
+    d = d_model or cfg.d_model
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.q_dim), dt),
+        "wk": dense_init(ks[1], (d, cfg.kv_dim), dt),
+        "wv": dense_init(ks[2], (d, cfg.kv_dim), dt),
+        "wo": dense_init(ks[3], (cfg.q_dim, d), dt, scale=1.0 / math.sqrt(cfg.q_dim)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dt)
+    return p
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                      scale=None, chunk: int = 512, q_offset: int = 0):
+    """Flash-style attention in pure XLA: lax.scan over KV chunks with online
+    softmax statistics.  Memory O(S_q * chunk) instead of O(S_q * S_kv).
+
+    q: (B, Hq, Sq, D);  k/v: (B, Hkv, Skv, D);  GQA via head grouping.
+    ``q_offset`` positions the queries inside the KV timeline (prefill=0;
+    decode: q_offset = cache length so far).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    dv = v.shape[-1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    chunk = min(chunk, skv)
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_chunks = k.shape[2] // chunk
+    qg = q.reshape(b, hkv, group, sq, d).astype(F32) * scale
+    kc = k.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, n_chunks, chunk, dv).transpose(2, 0, 1, 3, 4)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb.astype(F32),
+                       preferred_element_type=F32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = ci * chunk + jnp.arange(chunk)
+        mask = k_pos[None, :] < skv                      # padding
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vb.astype(F32), preferred_element_type=F32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, group, sq, 1), _NEG, F32)
+    l0 = jnp.zeros((b, hkv, group, sq, 1), F32)
+    a0 = jnp.zeros((b, hkv, group, sq, dv), F32)
+    # Checkpoint the chunk body: the backward pass otherwise saves the f32
+    # (.., Sq, chunk) probability blocks for EVERY chunk (measured ~8 GiB on
+    # a 2.6B train cell); recomputing them per chunk is the flash discipline.
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l).reshape(b, hq, sq, dv)
+    return out.astype(q.dtype)
+
+
+def attention(params: dict, x: jax.Array, cfg: ModelConfig, *,
+              kind: str = "global",
+              positions: jax.Array | None = None,
+              mrope_positions: jax.Array | None = None,
+              cache: dict | None = None,
+              cache_pos: jax.Array | None = None,
+              cross_kv: tuple | None = None,
+              use_rope: bool = True,
+              ring_window: int | None = None) -> tuple[jax.Array, dict | None]:
+    """GQA attention.  Returns (output, updated_cache).
+
+    Train/prefill: ``cache`` None -> full-sequence chunked attention.
+    Decode: ``cache`` = {"k","v"} ring buffers; x is (B, 1, D) and
+    ``cache_pos`` the write index.
+    Cross-attention (whisper decoder): ``cross_kv`` = (k, v) precomputed.
+    """
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dq->bsq", x, params["wq"], preferred_element_type=F32)
+    if "bq" in params:
+        q = q + params["bq"].astype(F32)
+    q = shard(q.astype(x.dtype).reshape(b, s, h, dh).transpose(0, 2, 1, 3),
+              "batch", "heads", None, None)
+
+    if cross_kv is None:
+        k = jnp.einsum("bsd,dq->bsq", x, params["wk"], preferred_element_type=F32)
+        v = jnp.einsum("bsd,dq->bsq", x, params["wv"], preferred_element_type=F32)
+        if "bk" in params:
+            k = k + params["bk"].astype(F32)
+            v = v + params["bv"].astype(F32)
+        k = k.astype(x.dtype).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+        v = v.astype(x.dtype).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+        if use_rope:
+            if positions is None:
+                base = jnp.arange(s) if cache_pos is None else cache_pos + jnp.arange(s)
+                positions = jnp.broadcast_to(base, (b, s))
+            if cfg.mrope_sections is not None and mrope_positions is not None:
+                cos, sin = mrope_table(mrope_positions, dh, cfg.rope_theta,
+                                       cfg.mrope_sections)
+            else:
+                cos, sin = rope_table(positions, dh, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+    else:
+        k, v = cross_kv
+
+    window = cfg.window if kind == "local" else None
+    new_cache = None
+    if cache is not None and cross_kv is None and ring_window is not None and s > 1:
+        # Ring-buffer prefill: windowed attention over the prompt itself,
+        # then publish only the last `W` tokens into the ring (rolled so that
+        # token j sits at slot j % W, matching the decode write pattern).
+        w_buf = cache["k"].shape[2]
+        out = chunked_attention(q, k, v, causal=True,
+                                window=window or ring_window,
+                                softcap=cfg.attn_softcap, q_offset=cache_pos)
+        keep = min(s, w_buf)
+        k_last, v_last = k[:, :, -keep:], v[:, :, -keep:]
+        if keep < w_buf:
+            k_buf = jax.lax.dynamic_update_slice(cache["k"], k_last,
+                                                 (0, 0, cache_pos, 0))
+            v_buf = jax.lax.dynamic_update_slice(cache["v"], v_last,
+                                                 (0, 0, cache_pos, 0))
+        else:
+            shift = s % w_buf          # first kept token's slot
+            k_buf = jnp.roll(k_last, shift, axis=2)
+            v_buf = jnp.roll(v_last, shift, axis=2)
+        new_cache = {"k": k_buf, "v": v_buf}
+    elif cache is not None and cross_kv is None and ring_window is not None and s == 1:
+        # Ring-buffer decode (bounded window, long-context): the buffer holds
+        # exactly the last `ring_window` tokens; K was roped at its absolute
+        # position, so no re-rotation is needed.
+        slot = jnp.mod(cache_pos, ring_window)
+        k_buf = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, slot, 0))
+        v_buf = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, slot, 0))
+        new_cache = {"k": k_buf, "v": v_buf}
+        out = decode_attention(q, k_buf, v_buf,
+                               jnp.minimum(cache_pos, ring_window - 1),
+                               window=None, softcap=cfg.attn_softcap)
+    elif cache is not None and cross_kv is None:
+        # Decode/prefill: write the new K/V at cache_pos, attend over buffer.
+        k_buf = jax.lax.dynamic_update_slice(
+            cache["k"], k, (0, 0, cache_pos, 0))
+        v_buf = jax.lax.dynamic_update_slice(
+            cache["v"], v, (0, 0, cache_pos, 0))
+        new_cache = {"k": k_buf, "v": v_buf}
+        if s == 1:
+            out = decode_attention(q, k_buf, v_buf, cache_pos + s - 1,
+                                   window=window, softcap=cfg.attn_softcap)
+        else:
+            # Prefill: chunked (flash-style) attention over the buffer —
+            # never materializes (S x S_buf) logits.
+            out = chunked_attention(q, k_buf, v_buf, causal=True,
+                                    window=window, softcap=cfg.attn_softcap,
+                                    q_offset=cache_pos)
+    elif cache is not None:
+        out = decode_attention(q, k, v, None, window=None,
+                               softcap=cfg.attn_softcap)
+        new_cache = cache
+    else:
+        out = chunked_attention(q, k, v, causal=(cross_kv is None and
+                                                 kind != "bidir"),
+                                window=window, softcap=cfg.attn_softcap)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    y = jnp.einsum("bsq,qd->bsd", out, params["wo"], preferred_element_type=F32)
+    return y.astype(x.dtype), new_cache
+
+
+def decode_attention(q, k, v, last_pos, *, window=None, softcap=None,
+                     scale=None):
+    """Single/few-token attention against a (possibly padded) KV buffer.
+
+    q: (B, H, s, D) with small s;  k/v: (B, Hkv, S_buf, D).
+    Positions > last_pos are masked (unwritten cache slots).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hkv, group, sq, d).astype(F32) * scale
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(F32),
+                   preferred_element_type=F32)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if last_pos is not None:
+        q_pos = last_pos - (sq - 1) + jnp.arange(sq)
+        mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(F32),
+                     preferred_element_type=F32)
+    return out.reshape(b, hq, sq, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated / plain)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, *, d_model: int | None = None,
+             d_ff: int | None = None, gated: bool = True) -> dict:
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, f), dt),
+         "w_down": dense_init(ks[1], (f, d), dt, scale=1.0 / math.sqrt(f))}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d, f), dt)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, *, act: str = "silu") -> jax.Array:
+    actf = {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True),
+            "relu": lambda v: jnp.maximum(v, 0.0)}[act]
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"], preferred_element_type=F32)
+    if "w_gate" in params:
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"],
+                          preferred_element_type=F32)
+        h = actf(gate) * up
+    else:
+        h = actf(up)
+    h = shard(h.astype(x.dtype), "batch", None, "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, params["w_down"], preferred_element_type=F32)
+    return y.astype(x.dtype)

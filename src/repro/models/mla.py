@@ -1,0 +1,147 @@
+"""Multi-head Latent Attention (deepseek-v3).
+
+Train/prefill use the *naive* expansion (latents decompressed to full per-head
+K/V, then ordinary attention).  Decode uses the *absorbed* form: the KV cache
+stores only the compressed latent ``c_kv`` (kv_lora_rank) plus the shared
+rope key (qk_rope_head_dim) per token — 576 values/token instead of
+``2 * H * 192`` — and the up-projections are absorbed into the query/output
+paths.  This asymmetric pairing is exactly why the deepseek decode cells fit
+where GQA-sized caches would not (EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (F32, apply_rope, chunked_attention,
+                                 dense_init, dtype_of, init_rmsnorm, rmsnorm,
+                                 rope_table)
+from repro.sharding import shard
+
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "wdq": dense_init(ks[0], (d, m.q_lora_rank), dt),
+        "q_norm": init_rmsnorm(m.q_lora_rank, dt),
+        "wuq": dense_init(ks[1], (m.q_lora_rank, h * qk_dim), dt),
+        "wdkv": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dt),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank, dt),
+        "wukv": dense_init(ks[3], (m.kv_lora_rank,
+                                   h * (m.qk_nope_head_dim + m.v_head_dim)), dt),
+        "wo": dense_init(ks[4], (h * m.v_head_dim, d), dt,
+                         scale=1.0 / math.sqrt(h * m.v_head_dim)),
+    }
+
+
+def _latents(p: dict, x: jax.Array, cfg: ModelConfig):
+    """Shared down-projection: returns (c_kv (B,S,r), k_rope (B,1,S,dr))."""
+    m = cfg.mla
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wdkv"], preferred_element_type=F32)
+    ckv = ckv.astype(x.dtype)
+    c_kv, k_rope = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    c_kv = rmsnorm(p["kv_norm"], c_kv, cfg.norm_eps)
+    return c_kv, k_rope[:, None]          # k_rope as a single shared "head"
+
+
+def _queries(p: dict, x: jax.Array, cfg: ModelConfig, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    cq = jnp.einsum("bsd,dr->bsr", x, p["wdq"], preferred_element_type=F32)
+    cq = rmsnorm(p["q_norm"], cq.astype(x.dtype), cfg.norm_eps)
+    q = jnp.einsum("bsr,rq->bsq", cq, p["wuq"], preferred_element_type=F32)
+    q = q.astype(x.dtype).reshape(b, s, h, qk).transpose(0, 2, 1, 3)
+    q = shard(q, "batch", "heads", None, None)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    cos, sin = rope_table(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope, (cos, sin)
+
+
+def mla_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                  positions: jax.Array | None = None,
+                  cache: dict | None = None,
+                  cache_pos=None) -> tuple[jax.Array, dict | None]:
+    """MLA forward.  Cache (decode): {"c_kv": (B,S,r), "k_rope": (B,1,S,dr)}."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    if positions is None:
+        base = jnp.arange(s) if cache_pos is None else cache_pos + jnp.arange(s)
+        positions = jnp.broadcast_to(base, (b, s))
+    q_nope, q_rope, (cos, sin) = _queries(p, x, cfg, positions)
+    c_kv, k_rope = _latents(p, x, cfg)
+    k_rope = apply_rope(k_rope, cos, sin)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+
+    wukv = p["wukv"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wukv[..., :m.qk_nope_head_dim]          # (r, H, dn)
+    w_uv = wukv[..., m.qk_nope_head_dim:]          # (r, H, dv)
+
+    if cache is None or s > 1:
+        # Naive expansion for train/prefill (flash-chunked, no (S,S) logits).
+        k_nope = jnp.einsum("bsr,rhd->bhsd", c_kv, w_uk,
+                            preferred_element_type=F32).astype(x.dtype)
+        v = jnp.einsum("bsr,rhd->bhsd", c_kv, w_uv,
+                       preferred_element_type=F32).astype(x.dtype)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, h) + k_rope.shape[2:])], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        out = chunked_attention(q, k, v, causal=True, scale=scale)
+        new_cache = None
+        if cache is not None:     # prefill: also publish the compressed cache
+            new_cache = {
+                "c_kv": jax.lax.dynamic_update_slice(
+                    cache["c_kv"], c_kv, (0, cache_pos, 0)),
+                "k_rope": jax.lax.dynamic_update_slice(
+                    cache["k_rope"], k_rope, (0, 0, cache_pos, 0)),
+            }
+    else:
+        # Absorbed decode: scores in latent space, cache stays compressed.
+        c_buf = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv,
+                                             (0, cache_pos, 0))
+        r_buf = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope,
+                                             (0, 0, cache_pos, 0))
+        new_cache = {"c_kv": c_buf, "k_rope": r_buf}
+        q_lat = jnp.einsum("bhsd,rhd->bhsr", q_nope.astype(F32), w_uk.astype(F32),
+                           preferred_element_type=F32)       # absorb W_UK
+        s_lat = jnp.einsum("bhsr,btr->bhst", q_lat, c_buf.astype(F32),
+                           preferred_element_type=F32)
+        s_rope = jnp.einsum("bhsd,bxtd->bhst", q_rope.astype(F32),
+                            r_buf.astype(F32), preferred_element_type=F32)
+        logits = (s_lat + s_rope) * scale
+        last = cache_pos + s - 1
+        t_pos = jnp.arange(c_buf.shape[1])
+        q_pos = last - (s - 1) + jnp.arange(s)
+        mask = t_pos[None, :] <= q_pos[:, None]
+        logits = jnp.where(mask[None, None],
+                           logits, -0.7 * jnp.finfo(F32).max)
+        probs = jax.nn.softmax(logits, axis=-1)
+        probs = jnp.where(mask[None, None], probs, 0.0)
+        o_lat = jnp.einsum("bhst,btr->bhsr", probs, c_buf.astype(F32),
+                           preferred_element_type=F32)
+        out = jnp.einsum("bhsr,rhd->bhsd", o_lat, w_uv.astype(F32),
+                         preferred_element_type=F32).astype(x.dtype)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * m.v_head_dim)
+    y = jnp.einsum("bsq,qd->bsd", out, p["wo"], preferred_element_type=F32)
+    return y.astype(x.dtype), new_cache
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, max_len: int):
+    m = cfg.mla
+    dt = dtype_of(cfg)
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank), dt),
+        "k_rope": jax.ShapeDtypeStruct((batch, 1, max_len, m.qk_rope_head_dim), dt),
+    }

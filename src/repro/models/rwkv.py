@@ -1,0 +1,285 @@
+"""RWKV-6 "Finch" family (rwkv6-7b): attention-free, data-dependent decay.
+
+Structure per block: time-mixing (the RWKV6 recurrence with 5-way
+data-dependent token-shift interpolation) + channel-mixing (squared-relu FFN
+with token shift).  The paper's attention-sharding aspects are inapplicable
+here (DESIGN.md §Arch-applicability); the tiling planner still governs every
+projection GEMM, and the recurrence itself is the Pallas scan kernel
+(``kernels/rwkv6.py``) on TPU.
+
+The pure-JAX training path uses the **chunk-recurrent form**: time is split
+into chunks of 32; within a chunk the recurrence collapses into three
+matmuls (inter-chunk via the carried state, intra-chunk via a decay-weighted
+lower-triangular product, plus the current-token bonus), and only the
+chunk-boundary states are carried through ``lax.scan`` — O(T/C) backward
+memory instead of O(T), and MXU-shaped compute.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (F32, dense_init, dtype_of, init_layernorm, mask_padded_vocab,
+                                 init_rmsnorm, layernorm, rmsnorm)
+from repro.runtime import maybe_dequant, maybe_remat
+from repro.sharding import shard
+
+_LORA_MIX = 32
+_LORA_DECAY = 64
+_CHUNK = 32
+
+
+def _shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """Token shift: x[t-1] (zeros / carried state at t=0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def init_time_mix(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 10)
+    h = d // cfg.rwkv_head_dim
+    return {
+        "mu_x": jnp.zeros((d,), dt),
+        "mu_rkvwg": jnp.zeros((5, d), dt),
+        "w1_mix": dense_init(ks[0], (d, 5 * _LORA_MIX), dt, scale=0.01),
+        "w2_mix": dense_init(ks[1], (5, _LORA_MIX, d), dt, scale=0.01),
+        "w0_decay": jnp.full((d,), -1.0, dt),      # base log-log decay
+        "w1_decay": dense_init(ks[2], (d, _LORA_DECAY), dt, scale=0.01),
+        "w2_decay": dense_init(ks[3], (_LORA_DECAY, d), dt, scale=0.01),
+        "u_bonus": dense_init(ks[4], (d,), dt, scale=0.3),
+        "wr": dense_init(ks[5], (d, d), dt),
+        "wk": dense_init(ks[6], (d, d), dt),
+        "wv": dense_init(ks[7], (d, d), dt),
+        "wg": dense_init(ks[8], (d, d), dt),
+        "wo": dense_init(ks[9], (d, d), dt),
+        "gn": init_layernorm(cfg.rwkv_head_dim, dt),   # per-head group norm
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), dt),
+        "mu_r": jnp.zeros((d,), dt),
+        "wk": dense_init(ks[0], (d, f), dt),
+        "wv": dense_init(ks[1], (f, d), dt, scale=1.0 / math.sqrt(f)),
+        "wr": dense_init(ks[2], (d, d), dt),
+    }
+
+
+def rwkv6_chunked(r, k, v, w, u, *, chunk: int = _CHUNK,
+                  state0: jax.Array | None = None):
+    """Chunk-recurrent RWKV6.  r/k/v/w: (B, H, T, D); u: (H, D).
+    Returns (out (B,H,T,D), final_state (B,H,D,D))."""
+    b, h, t, d = r.shape
+    pad = (-t) % chunk
+    if pad:
+        z = lambda a, c=0.0: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                                     constant_values=c)
+        r, k, v = z(r), z(k), z(v)
+        w = z(w, 1.0)
+    n = r.shape[2] // chunk
+    rc = r.reshape(b, h, n, chunk, d).transpose(2, 0, 1, 3, 4).astype(F32)
+    kc = k.reshape(b, h, n, chunk, d).transpose(2, 0, 1, 3, 4).astype(F32)
+    vc = v.reshape(b, h, n, chunk, d).transpose(2, 0, 1, 3, 4).astype(F32)
+    wc = w.reshape(b, h, n, chunk, d).transpose(2, 0, 1, 3, 4).astype(F32)
+    s0 = state0 if state0 is not None else jnp.zeros((b, h, d, d), F32)
+    mask = jnp.tril(jnp.ones((chunk, chunk), F32), k=-1)   # strict lower
+
+    def step(s, inp):
+        rr, kk, vv, ww = inp
+        logw = jnp.log(jnp.maximum(ww, 1e-12))
+        lp_incl = jnp.cumsum(logw, axis=2)                 # (B,H,C,D)
+        lp_prev = lp_incl - logw                           # exclusive
+        p_c = jnp.exp(lp_incl[:, :, -1:])                  # (B,H,1,D)
+        r_t = rr * jnp.exp(lp_prev)
+        k_t = kk * jnp.exp(-lp_incl)
+        k_up = kk * jnp.exp(lp_incl[:, :, -1:] - lp_incl)
+        inter = jnp.einsum("bhcd,bhde->bhce", r_t, s, preferred_element_type=F32)
+        a = jnp.einsum("bhcd,bhsd->bhcs", r_t, k_t, preferred_element_type=F32)
+        a = a * mask[None, None]
+        intra = jnp.einsum("bhcs,bhse->bhce", a, vv, preferred_element_type=F32)
+        diag = jnp.einsum("bhcd,bhcd->bhc", rr, u[None, :, None, :] * kk)
+        out = inter + intra + diag[..., None] * vv
+        s_new = p_c[:, :, 0][:, :, :, None] * s + jnp.einsum(
+            "bhcd,bhce->bhde", k_up, vv, preferred_element_type=F32)
+        return s_new, out
+
+    s_fin, outs = jax.lax.scan(jax.checkpoint(step), s0, (rc, kc, vc, wc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, n * chunk, d)
+    return out[:, :, :t].astype(r.dtype), s_fin
+
+
+def time_mix(p: dict, x: jax.Array, cfg: ModelConfig, *,
+             state: dict | None = None):
+    """RWKV6 attention-analogue.  x: (B,T,D).  state (decode): {"prev","s"}."""
+    b, t, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    prev = state["prev"] if state is not None else None
+    xx = _shift(x, prev) - x
+    xxx = x + xx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(jnp.einsum("btd,dr->btr", xxx, p["w1_mix"],
+                               preferred_element_type=F32))
+    lora = lora.reshape(b, t, 5, _LORA_MIX)
+    mixes = jnp.einsum("btfr,frd->btfd", lora, p["w2_mix"].astype(F32),
+                       preferred_element_type=F32)
+    mixes = mixes + p["mu_rkvwg"].astype(F32)[None, None]
+    xr, xk, xv, xw, xg = [x + xx * mixes[:, :, i].astype(x.dtype)
+                          for i in range(5)]
+    r = jnp.einsum("btd,de->bte", xr, p["wr"], preferred_element_type=F32)
+    k = jnp.einsum("btd,de->bte", xk, p["wk"], preferred_element_type=F32)
+    v = jnp.einsum("btd,de->bte", xv, p["wv"], preferred_element_type=F32)
+    g = jnp.einsum("btd,de->bte", xg, p["wg"], preferred_element_type=F32)
+    dec = jnp.einsum("btr,rd->btd",
+                     jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["w1_decay"],
+                                         preferred_element_type=F32)),
+                     p["w2_decay"].astype(F32), preferred_element_type=F32)
+    logw = -jnp.exp(jnp.clip(p["w0_decay"].astype(F32)[None, None] + dec,
+                             -8.0, 4.0))
+    w = jnp.exp(logw)                                   # decay in (0,1)
+
+    to_heads = lambda a: a.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    rh, kh, vh, wh = map(to_heads, (r, k, v, w))
+    rh = shard(rh.astype(x.dtype), "batch", "heads", None, None)
+    u = p["u_bonus"].astype(F32).reshape(h, hd)
+
+    if state is None or t > 1:
+        out, s_fin = rwkv6_chunked(rh, kh.astype(x.dtype), vh.astype(x.dtype),
+                                   wh.astype(F32), u,
+                                   state0=state["s"] if state else None)
+    else:
+        # Single-token decode: one recurrence step.
+        s = state["s"]
+        kv = kh[:, :, 0, :, None].astype(F32) * vh[:, :, 0, None, :].astype(F32)
+        out = jnp.einsum("bhd,bhde->bhe", rh[:, :, 0].astype(F32),
+                         s + u[None, :, :, None] * kv)[:, :, None, :]
+        s_fin = wh[:, :, 0, :, None].astype(F32) * s + kv
+        out = out.astype(x.dtype)
+
+    out = out.transpose(0, 2, 1, 3)                     # (B,T,H,hd)
+    out = layernorm(p["gn"], out, 64e-5).reshape(b, t, d)
+    out = out * jax.nn.silu(g.astype(F32)).astype(x.dtype)
+    y = jnp.einsum("btd,de->bte", out, p["wo"], preferred_element_type=F32)
+    new_state = None
+    if state is not None:
+        new_state = {"prev": x[:, -1:], "s": s_fin}
+    return y.astype(x.dtype), new_state
+
+
+def channel_mix(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                state: dict | None = None):
+    prev = state["prev"] if state is not None else None
+    xx = _shift(x, prev) - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.einsum("btd,df->btf", xk, p["wk"], preferred_element_type=F32)
+    k = jnp.square(jnp.maximum(k, 0.0)).astype(x.dtype)
+    k = shard(k, "batch", None, "mlp")
+    v = jnp.einsum("btf,fd->btd", k, p["wv"], preferred_element_type=F32)
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"],
+                                  preferred_element_type=F32))
+    y = (r * v).astype(x.dtype)
+    new_state = {"prev": x[:, -1:]} if state is not None else None
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init_rwkv(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, cfg.num_layers + 3)
+
+    def block(i):
+        k1, k2 = jax.random.split(ks[i])
+        return {"ln1": init_rmsnorm(cfg.d_model, dt),
+                "tmix": init_time_mix(k1, cfg),
+                "ln2": init_rmsnorm(cfg.d_model, dt),
+                "cmix": init_channel_mix(k2, cfg)}
+
+    blocks = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[block(i) for i in range(cfg.num_layers)])
+    return {
+        "emb": dense_init(ks[-1], (cfg.padded_vocab, cfg.d_model), dt, scale=0.02),
+        "ln0": init_rmsnorm(cfg.d_model, dt),
+        "blocks": blocks,
+        "final_norm": init_rmsnorm(cfg.d_model, dt),
+        "unemb": dense_init(ks[-2], (cfg.d_model, cfg.padded_vocab), dt,
+                            scale=0.02),
+    }
+
+
+def _rwkv_block(pl, x, cfg, state):
+    pl = maybe_dequant(pl)
+    a, st_t = time_mix(pl["tmix"], rmsnorm(pl["ln1"], x, cfg.norm_eps), cfg,
+                       state=state["tmix"] if state else None)
+    x = x + a
+    f, st_c = channel_mix(pl["cmix"], rmsnorm(pl["ln2"], x, cfg.norm_eps), cfg,
+                          state=state["cmix"] if state else None)
+    x = x + f
+    x = shard(x, "batch", "seq", None)
+    new_state = {"tmix": st_t, "cmix": st_c} if state else None
+    return x, new_state
+
+
+def rwkv_forward(params: dict, cfg: ModelConfig, tokens: jax.Array, **_) -> dict:
+    x = jnp.take(params["emb"], tokens, axis=0)
+    x = rmsnorm(params["ln0"], x, cfg.norm_eps)
+    x = shard(x, "batch", "seq", None)
+
+    def body(xx, pl):
+        xx, _ = _rwkv_block(pl, xx, cfg, None)
+        return xx, None
+
+    x, _ = jax.lax.scan(maybe_remat(body), x, params["blocks"])
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["unemb"],
+                        preferred_element_type=F32)
+    logits = mask_padded_vocab(cfg, logits)
+    return {"logits": shard(logits, "batch", None, "vocab"),
+            "aux_loss": jnp.zeros((), F32)}
+
+
+def rwkv_state_specs(cfg: ModelConfig, batch: int) -> dict:
+    dt = dtype_of(cfg)
+    h = cfg.d_model // cfg.rwkv_head_dim
+    one = {"tmix": {"prev": jax.ShapeDtypeStruct((batch, 1, cfg.d_model), dt),
+                    "s": jax.ShapeDtypeStruct(
+                        (batch, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim), F32)},
+           "cmix": {"prev": jax.ShapeDtypeStruct((batch, 1, cfg.d_model), dt)}}
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.num_layers,) + s.shape, s.dtype),
+        one)
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        rwkv_state_specs(cfg, batch))
+
+
+def rwkv_decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                     state: dict, cache_pos=None, **_):
+    x = jnp.take(params["emb"], tokens, axis=0)
+    x = rmsnorm(params["ln0"], x, cfg.norm_eps)
+
+    def body(xx, inp):
+        pl, st = inp
+        xx, new_st = _rwkv_block(pl, xx, cfg, st)
+        return xx, new_st
+
+    x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["unemb"],
+                        preferred_element_type=F32)
+    return mask_padded_vocab(cfg, logits), new_state

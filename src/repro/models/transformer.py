@@ -1,0 +1,365 @@
+"""Decoder-only LM family (gemma2, qwen2.5, mixtral, deepseek-v3, qwen2-vl).
+
+Layers are scanned in *pattern blocks*: the repeating unit of
+``cfg.attn_pattern`` (e.g. gemma2's (local, global)) forms one scan step, so
+per-layer heterogeneity is static inside the block while the HLO stays
+O(pattern) instead of O(num_layers) — essential for the 40-cell dry-run's
+compile times.  MoE configs with ``first_k_dense`` (deepseek) run the dense
+prefix as a second scan group.
+
+Public entry points:
+  init_lm / lm_forward (train)          — full-sequence causal logits
+  lm_prefill / lm_decode_step (serve)   — KV-cache paths (MLA: absorbed cache)
+  lm_cache_specs                        — ShapeDtypeStructs for input_specs()
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mla as mla_lib
+from repro.models import moe as moe_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import (F32, attention, dense_init, dtype_of, mask_padded_vocab,
+                                 init_attention, init_mlp, init_rmsnorm, mlp,
+                                 rmsnorm)
+from repro.runtime import maybe_dequant, maybe_remat
+from repro.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _is_moe_layer(cfg: ModelConfig, i: int) -> bool:
+    return cfg.moe is not None and i >= cfg.moe.first_k_dense
+
+
+def _init_layer(key, cfg: ModelConfig, i: int) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    p = {"ln1": init_rmsnorm(cfg.d_model, dt),
+         "ln2": init_rmsnorm(cfg.d_model, dt)}
+    if cfg.mla is not None:
+        p["attn"] = mla_lib.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = init_attention(ks[0], cfg)
+    if _is_moe_layer(cfg, i):
+        p["moe"] = moe_lib.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    if cfg.post_norms:
+        p["post_ln1"] = init_rmsnorm(cfg.d_model, dt)
+        p["post_ln2"] = init_rmsnorm(cfg.d_model, dt)
+    return p
+
+
+def _stack(trees: list) -> dict:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    params: dict = {
+        "emb": dense_init(ks[0], (cfg.padded_vocab, cfg.d_model), dt, scale=0.02),
+        "final_norm": init_rmsnorm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unemb"] = dense_init(ks[1], (cfg.d_model, cfg.padded_vocab), dt,
+                                     scale=0.02)
+    u = len(cfg.attn_pattern)
+    first_dense = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    lkeys = jax.random.split(ks[2], cfg.num_layers)
+    if first_dense:
+        params["dense_blocks"] = _stack(
+            [_init_layer(lkeys[i], cfg, i) for i in range(first_dense)])
+    rest = list(range(first_dense, cfg.num_layers))
+    n_blocks, tail = divmod(len(rest), u)
+    if n_blocks:
+        groups = []
+        for slot in range(u):
+            groups.append(_stack([
+                _init_layer(lkeys[rest[b * u + slot]], cfg, rest[b * u + slot])
+                for b in range(n_blocks)]))
+        params["blocks"] = {f"slot{j}": g for j, g in enumerate(groups)}
+    if tail:
+        params["tail"] = [
+            _init_layer(lkeys[i], cfg, i) for i in rest[n_blocks * u:]]
+    if cfg.mtp:
+        params["mtp"] = {
+            "layer": _init_layer(ks[3], cfg, cfg.num_layers),
+            "norm_h": init_rmsnorm(cfg.d_model, dt),
+            "norm_e": init_rmsnorm(cfg.d_model, dt),
+            "proj": dense_init(jax.random.fold_in(ks[3], 1),
+                               (2 * cfg.d_model, cfg.d_model), dt),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer apply
+# ---------------------------------------------------------------------------
+
+def _apply_layer(p: dict, x: jax.Array, cfg: ModelConfig, *, kind: str,
+                 is_moe: bool, positions, mrope_positions, cache, cache_pos):
+    p = maybe_dequant(p, dtype_of(cfg))
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, new_cache = mla_lib.mla_attention(
+            p["attn"], h, cfg, positions=positions, cache=cache,
+            cache_pos=cache_pos)
+    else:
+        ring = None
+        if (cache is not None and kind == "local" and cfg.window is not None
+                and cache["k"].shape[2] == cfg.window):
+            ring = cfg.window
+        a, new_cache = attention(
+            p["attn"], h, cfg, kind=kind, positions=positions,
+            mrope_positions=mrope_positions, cache=cache, cache_pos=cache_pos,
+            use_rope=cfg.use_rope, ring_window=ring)
+    if cfg.post_norms:
+        a = rmsnorm(p["post_ln1"], a, cfg.norm_eps)
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if is_moe:
+        f, aux = moe_lib.moe_block(p["moe"], h, cfg)
+    else:
+        f, aux = mlp(p["mlp"], h, act=cfg.mlp_act), jnp.zeros((), F32)
+    if cfg.post_norms:
+        f = rmsnorm(p["post_ln2"], f, cfg.norm_eps)
+    x = x + f
+    x = shard(x, "batch", "seq", None)
+    return x, aux, new_cache
+
+
+def _scan_blocks(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                 positions, mrope_positions, caches=None, cache_pos=None):
+    """Runs dense prefix + pattern-block scan + tail.  Returns
+    (x, total_aux, new_caches_or_None)."""
+    u = len(cfg.attn_pattern)
+    first_dense = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    aux_total = jnp.zeros((), F32)
+    new_caches: dict = {}
+
+    if "dense_blocks" in params:
+        db = params["dense_blocks"]
+        cs = caches.get("dense") if caches else None
+
+        if cs is not None:
+            def dense_body(carry, inp):
+                xx, aux = carry
+                pl, cache_l = inp
+                xx, a, nc = _apply_layer(pl, xx, cfg, kind=cfg.layer_kind(0),
+                                         is_moe=False, positions=positions,
+                                         mrope_positions=mrope_positions,
+                                         cache=cache_l, cache_pos=cache_pos)
+                return (xx, aux + a), nc
+            (x, aux_total), nc = jax.lax.scan(maybe_remat(dense_body), (x, aux_total), (db, cs))
+            new_caches["dense"] = nc
+        else:
+            def dense_body_nc(carry, pl):
+                xx, aux = carry
+                xx, a, _ = _apply_layer(pl, xx, cfg, kind=cfg.layer_kind(0),
+                                        is_moe=False, positions=positions,
+                                        mrope_positions=mrope_positions,
+                                        cache=None, cache_pos=None)
+                return (xx, aux + a), None
+            (x, aux_total), _ = jax.lax.scan(maybe_remat(dense_body_nc), (x, aux_total), db)
+
+    if "blocks" in params:
+        blocks = params["blocks"]
+        n_blocks = jax.tree.leaves(blocks["slot0"])[0].shape[0]
+        first_dense_i = first_dense
+
+        def block_body(carry, inp):
+            xx, aux = carry
+            pb = inp[0] if caches else inp
+            cb = inp[1] if caches else None
+            ncs = {}
+            for j in range(u):
+                i = first_dense_i + j            # layer index within pattern
+                xx, a, nc = _apply_layer(
+                    pb[f"slot{j}"], xx, cfg, kind=cfg.attn_pattern[j % u],
+                    is_moe=_is_moe_layer(cfg, first_dense_i + j),
+                    positions=positions, mrope_positions=mrope_positions,
+                    cache=cb[f"slot{j}"] if cb is not None else None,
+                    cache_pos=cache_pos)
+                aux = aux + a
+                if nc is not None:
+                    ncs[f"slot{j}"] = nc
+            return (xx, aux), (ncs if ncs else None)
+
+        if caches:
+            (x, aux_total), ncs = jax.lax.scan(
+                maybe_remat(block_body), (x, aux_total),
+                (blocks, caches["blocks"]))
+            new_caches["blocks"] = ncs
+        else:
+            (x, aux_total), _ = jax.lax.scan(maybe_remat(block_body), (x, aux_total), blocks)
+
+    if "tail" in params:
+        for t_i, pl in enumerate(params["tail"]):
+            i = cfg.num_layers - len(params["tail"]) + t_i
+            cache_l = caches["tail"][t_i] if caches else None
+            x, a, nc = _apply_layer(pl, x, cfg, kind=cfg.layer_kind(i),
+                                    is_moe=_is_moe_layer(cfg, i),
+                                    positions=positions,
+                                    mrope_positions=mrope_positions,
+                                    cache=cache_l, cache_pos=cache_pos)
+            aux_total = aux_total + a
+            if nc is not None:
+                new_caches.setdefault("tail", []).append(nc)
+
+    return x, aux_total, (new_caches if caches else None)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg: ModelConfig, tokens=None, embeddings=None):
+    if embeddings is None:
+        x = jnp.take(params["emb"], tokens, axis=0)
+    else:
+        x = embeddings.astype(dtype_of(cfg))
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return shard(x, "batch", "seq", None)
+
+
+def _unembed(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    w = params.get("unemb")
+    if w is None:
+        w = params["emb"].T
+    logits = jnp.einsum("bsd,dv->bsv", h, w, preferred_element_type=F32)
+    if cfg.logit_softcap is not None:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    logits = mask_padded_vocab(cfg, logits)
+    return shard(logits, "batch", None, "vocab")
+
+
+def lm_forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+               positions=None, mrope_positions=None,
+               embeddings=None, want_hidden: bool = False) -> dict:
+    """Training forward: tokens (B, S) -> f32 logits (B, S, V) + aux loss."""
+    x = _embed(params, cfg, tokens, embeddings)
+    x, aux, _ = _scan_blocks(params, x, cfg, positions=positions,
+                             mrope_positions=mrope_positions)
+    out = {"aux_loss": aux / max(cfg.num_layers, 1)}
+    if cfg.mtp and "mtp" in params:
+        out["mtp_hidden"] = x            # combined with shifted emb in loss
+    if want_hidden:
+        # Chunked-loss path: the caller computes CE from hidden states
+        # without ever materializing the (B, S, V) logits.
+        out["hidden"] = x
+        return out
+    out["logits"] = _unembed(params, cfg, x)
+    return out
+
+
+def mtp_logits(params: dict, cfg: ModelConfig, hidden: jax.Array,
+               next_tokens: jax.Array) -> jax.Array:
+    """deepseek-v3 multi-token prediction head: predict t+2 from
+    (hidden_t, emb(token_{t+1}))."""
+    m = params["mtp"]
+    e = _embed(params, cfg, next_tokens)
+    h = jnp.concatenate([rmsnorm(m["norm_h"], hidden, cfg.norm_eps),
+                         rmsnorm(m["norm_e"], e, cfg.norm_eps)], axis=-1)
+    h = jnp.einsum("bsd,dk->bsk", h, m["proj"],
+                   preferred_element_type=F32).astype(hidden.dtype)
+
+    def _mtp_block(pl, hh):
+        out, _, _ = _apply_layer(pl, hh, cfg, kind="global",
+                                 is_moe=_is_moe_layer(cfg, cfg.num_layers),
+                                 positions=None, mrope_positions=None,
+                                 cache=None, cache_pos=None)
+        return out
+
+    h = maybe_remat(_mtp_block)(m["layer"], h)
+    return _unembed(params, cfg, h)
+
+
+# ----------------------------- serving ------------------------------------
+
+def _cache_shape_layer(cfg: ModelConfig, batch: int, max_len: int, *,
+                       kind: str = "global", ring_local: bool = False):
+    dt = dtype_of(cfg)
+    if cfg.mla is not None:
+        return mla_lib.mla_cache_shape(cfg, batch, max_len)
+    size = max_len
+    if ring_local and kind == "local" and cfg.window is not None:
+        # Sliding-window layers only ever attend the last `window` tokens —
+        # a ring buffer of exactly that size is lossless (the §Perf decode
+        # memory-term lever: gemma2's 23 local layers shrink 8x at 32k).
+        size = min(cfg.window, max_len)
+    return {
+        "k": jax.ShapeDtypeStruct((batch, cfg.num_kv_heads, size,
+                                   cfg.head_dim), dt),
+        "v": jax.ShapeDtypeStruct((batch, cfg.num_kv_heads, size,
+                                   cfg.head_dim), dt),
+    }
+
+
+def lm_cache_specs(cfg: ModelConfig, batch: int, max_len: int, *,
+                   ring_local: bool = False) -> dict:
+    """ShapeDtypeStruct pytree matching _scan_blocks' cache layout."""
+    u = len(cfg.attn_pattern)
+    first_dense = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    rest = cfg.num_layers - first_dense
+    n_blocks, tail = divmod(rest, u)
+
+    def one(kind):
+        return _cache_shape_layer(cfg, batch, max_len, kind=kind,
+                                  ring_local=ring_local)
+
+    def stacked(kind, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype),
+            one(kind))
+
+    specs: dict = {}
+    if first_dense:
+        specs["dense"] = stacked(cfg.layer_kind(0), first_dense)
+    if n_blocks:
+        specs["blocks"] = {f"slot{j}": stacked(cfg.attn_pattern[j], n_blocks)
+                           for j in range(u)}
+    if tail:
+        specs["tail"] = [one(cfg.layer_kind(cfg.num_layers - tail + j))
+                         for j in range(tail)]
+    return specs
+
+
+def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                  ring_local: bool = False) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        lm_cache_specs(cfg, batch, max_len,
+                                       ring_local=ring_local))
+
+
+def lm_decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                   cache: dict, cache_pos, *, mrope_positions=None,
+                   embeddings=None) -> tuple[jax.Array, dict]:
+    """One decode step.  tokens (B, s_small); cache as lm_init_cache.
+    Returns (logits (B, s, V), new_cache)."""
+    x = _embed(params, cfg, tokens, embeddings)
+    x, _, new_caches = _scan_blocks(
+        params, x, cfg, positions=None, mrope_positions=mrope_positions,
+        caches=cache, cache_pos=cache_pos)
+    return _unembed(params, cfg, x), new_caches
+
+
+def lm_prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+               max_len: int, *, mrope_positions=None, embeddings=None):
+    """Prefill: runs the full prompt through the decode path chunk-free by
+    treating the whole prompt as one 'step' written at position 0."""
+    b, s = tokens.shape[:2]
+    cache = lm_init_cache(cfg, b, max_len)
+    return lm_decode_step(params, cfg, tokens, cache, 0,
+                          mrope_positions=mrope_positions,
+                          embeddings=embeddings)

@@ -1,0 +1,230 @@
+"""Parameter partitioning: path-pattern -> PartitionSpec inference.
+
+The spatial level of the paper's Algorithm 2 decides which GEMM dimension of
+each weight is sharded (K -> reduction collectives, N -> free).  For the LM
+substrate this materializes as the standard Megatron/FSDP layout:
+
+* train regime: TP over ``model`` on the "wide" dim + FSDP over the DP axes
+  on the opposite dim; optimizer states ZeRO-shard the same way.
+* serve regime: TP only (weights replicated over DP so decode needs no
+  weight gathers).
+
+Patterns are matched against the ``/``-joined param path; the spec applies to
+the LAST ndim dims named in the pattern (leading stack/scan dims get None).
+Dims that don't divide the mapped axes silently fall back to None — one rule
+table serves every arch x mesh cell.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import sharding as shlib
+
+# (path regex, spec for trailing dims).  "dp" is replaced by the DP axes,
+# "tp" by the model axis.  First match wins.
+_TRAIN_RULES: list[tuple[str, tuple]] = [
+    # MoE expert banks (E, D, F) / (E, F, D): EP on E when divisible (the
+    # fallback logic below drops non-dividing axes, which yields the "tp"
+    # layout automatically for e.g. mixtral's 8 experts on a 16-way axis).
+    (r"moe/w_(gate|up)$", ("ep", "dp", "tp_if_no_ep")),
+    (r"moe/w_down$", ("ep", "tp_if_no_ep", "dp")),
+    (r"moe/router(_bias)?$", (None, None)),
+    (r"moe/shared/w_(gate|up)$", ("dp", "tp")),
+    (r"moe/shared/w_down$", ("tp", "dp")),
+    # MLA
+    (r"attn/wdq$", ("dp", "tp")),
+    (r"attn/wuq$", ("dp", "tp")),
+    (r"attn/wdkv$", ("dp", None)),
+    (r"attn/wukv$", ("dp", "tp")),
+    # Attention projections
+    (r"attn/w[qkv]$", ("dp", "tp")),
+    (r"x?attn/w[qkv]$", ("dp", "tp")),
+    (r"attn/wo$", ("tp", "dp")),
+    (r"x?attn/wo$", ("tp", "dp")),
+    (r"attn/b[qkv]$", (None,)),
+    # MLP
+    (r"mlp/w_(gate|up)$", ("dp", "tp")),
+    (r"mlp/w_down$", ("tp", "dp")),
+    # RWKV
+    (r"tmix/w[rkvg]$", ("dp", "tp")),
+    (r"tmix/wo$", ("tp", "dp")),
+    (r"cmix/wk$", ("dp", "tp")),
+    (r"cmix/wv$", ("tp", "dp")),
+    (r"cmix/wr$", ("dp", "tp")),
+    # Griffin
+    (r"rec/w_[xy]$", ("dp", "tp")),
+    (r"rec/w_[ai]$", ("dp", "tp")),
+    (r"rec/w_out$", ("tp", "dp")),
+    (r"rec/conv$", (None, "tp")),
+    # Embeddings: vocab over model ONLY — FSDP-sharding d_model here forces
+    # a full (V, D) gather + f32 grad inside the loss (measured +>10 GiB on
+    # gemma-27b); vocab-sharded-at-rest is small enough (147 MB/dev @ 256k).
+    (r"(^|/)emb$", ("tp", None)),
+    (r"(^|/)unemb$", (None, "tp")),
+    (r"(^|/)pos_emb$", (None, None)),
+    (r"mtp/proj$", ("dp", "tp")),
+]
+
+_SERVE_OVERRIDES = {"dp": None}     # serve: TP only, replicate over DP
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _resolve(entry, mesh: Mesh, *, serve: bool, has_ep: bool):
+    dp = shlib.dp_axes(mesh)
+    if entry is None:
+        return None
+    if entry == "dp":
+        return None if serve or not dp else dp
+    if entry == "tp":
+        return "model" if "model" in mesh.axis_names else None
+    if entry == "ep":
+        return "model" if has_ep and "model" in mesh.axis_names else None
+    if entry == "tp_if_no_ep":
+        return None if has_ep else (
+            "model" if "model" in mesh.axis_names else None)
+    return entry
+
+
+def _fit_spec(shape: tuple, spec_entries: tuple, mesh: Mesh) -> P:
+    """Prepend None for leading stack dims; drop non-dividing axes."""
+    n_lead = len(shape) - len(spec_entries)
+    entries = (None,) * max(n_lead, 0) + tuple(spec_entries)
+    entries = entries[:len(shape)]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fixed = []
+    for dim, e in zip(shape, entries):
+        if e is None:
+            fixed.append(None)
+            continue
+        axes = (e,) if isinstance(e, str) else tuple(e)
+        kept, prod = [], 1
+        for a in axes:
+            if dim % (prod * sizes[a]) == 0:
+                kept.append(a)
+                prod *= sizes[a]
+        fixed.append(tuple(kept) if len(kept) > 1 else
+                     (kept[0] if kept else None))
+    return P(*fixed)
+
+
+def param_specs(params, cfg, mesh: Mesh, *, regime: str = "train"):
+    """Returns a pytree of PartitionSpec matching `params` (abstract ok)."""
+    serve = regime == "serve"
+    has_ep = (cfg is not None and getattr(cfg, "moe", None) is not None
+              and "model" in mesh.axis_names
+              and cfg.moe.num_experts % mesh.shape["model"] == 0)
+
+    a2a = (cfg is not None and getattr(cfg, "moe", None) is not None
+           and getattr(cfg.moe, "impl", "") == "a2a")
+    world = 1
+    for a in mesh.axis_names:
+        world *= mesh.shape[a]
+    ep2d = (a2a and cfg.moe.num_experts % world == 0)
+    ep2d_axes = tuple(shlib.dp_axes(mesh)) + ("model",)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        # Quantized marker leaves: q8 inherits the parent weight's spec
+        # (same trailing shape); per-column scales shard like the parent
+        # (their singleton dims drop automatically in _fit_spec).
+        if ps.endswith("/q8") or (ps.endswith("/scale") and "ln" not in ps
+                                  and "norm" not in ps and "/gn/" not in ps):
+            ps = ps.rsplit("/", 1)[0]
+        if ep2d and re.search(r"moe/w_(gate|up|down)$", ps):
+            return _fit_spec(leaf.shape, (ep2d_axes, None, None), mesh)
+        if a2a and "moe/shared" in ps:
+            # a2a layout: shared expert FSDP-sharded at rest, gathered
+            # per layer inside the shard_map (matches _moe_a2a's w_spec).
+            dp = shlib.dp_axes(mesh) or None
+            if re.search(r"w_(gate|up)$", ps):
+                return _fit_spec(leaf.shape, (None, dp), mesh)
+            if ps.endswith("w_down"):
+                return _fit_spec(leaf.shape, (dp, None), mesh)
+        # Quantized marker leaves ({"q8","scale"}) share the parent's spec on
+        # q8 and replicate the scale.
+        for pat, entries in _TRAIN_RULES:
+            if re.search(pat, ps):
+                resolved = tuple(
+                    _resolve(e, mesh, serve=serve, has_ep=has_ep)
+                    for e in entries)
+                return _fit_spec(leaf.shape, resolved, mesh)
+        return P()      # norms, biases, small vectors: replicated
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params, cfg, mesh: Mesh, *, regime: str = "train"):
+    specs = param_specs(params, cfg, mesh, regime=regime)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# Decode-state (KV cache / recurrent state) sharding rules: batch over DP,
+# heads over model where divisible.
+_CACHE_RULES: list[tuple[str, tuple]] = [
+    (r"(^|/)(k|v)$", (None, "dp", "tp", None, None)),        # (L,B,H,S,dh)
+    (r"(^|/)x[kv]$", (None, "dp", "tp", None, None)),        # whisper cross
+    (r"c_kv$", (None, "dp", None, None)),                    # MLA latent
+    (r"k_rope$", (None, "dp", None, None, None)),
+    (r"tmix/s$", (None, "dp", "tp", None, None)),            # rwkv state
+    (r"(tmix|cmix)/prev$", (None, "dp", None, None)),
+    (r"(^|/)conv$", (None, "dp", None, "tp")),               # griffin conv
+    (r"(^|/)h$", (None, "dp", "tp")),                        # griffin lru state
+]
+
+
+def cache_specs(state, mesh: Mesh):
+    """PartitionSpecs for a decode-state pytree (ShapeDtypeStructs ok)."""
+
+    model_n = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        for pat, entries in _CACHE_RULES:
+            if re.search(pat, ps):
+                # Right-align on the trailing dims like params do, but cache
+                # rules are written for the full rank: trim from the left.
+                trim = entries[max(0, len(entries) - len(leaf.shape)):]
+                resolved = tuple(
+                    _resolve(e, mesh, serve=False, has_ep=False)
+                    for e in trim)
+                spec = _fit_spec(leaf.shape, resolved, mesh)
+                # KV fallback: when the head count doesn't divide the model
+                # axis (qwen kv=2, mixtral kv=8, MQA kv=1), shard the cache
+                # SEQUENCE over model instead — flash-decoding semantics via
+                # GSPMD partial softmax; otherwise the cache replicates
+                # model_n-fold (measured 60 GiB on mixtral decode_32k).
+                if (re.search(r"(^|/)(k|v)$", ps) and len(leaf.shape) >= 4
+                        and model_n > 1):
+                    entries_ = list(spec) + [None] * (len(leaf.shape)
+                                                      - len(spec))
+                    h_dim, s_dim = len(leaf.shape) - 3, len(leaf.shape) - 2
+                    if entries_[h_dim] is None and                             leaf.shape[s_dim] % model_n == 0:
+                        entries_[s_dim] = "model"
+                        spec = P(*entries_)
+                return spec
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, state)
+
+
+def cache_shardings(state, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        cache_specs(state, mesh),
+                        is_leaf=lambda x: isinstance(x, P))

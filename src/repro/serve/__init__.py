@@ -1,0 +1,1 @@
+"""Serving: engine, continuous batcher, int8 path."""

@@ -1,0 +1,188 @@
+"""Serving engine: prefill/decode step builders + continuous batcher +
+int8 weight quantization + the extreme-edge low-latency path.
+
+Two serving surfaces:
+
+* **LM serving** (the assigned decode/prefill shapes): jitted prefill and
+  decode steps with TP-sharded weights and head/batch-sharded caches, driven
+  by a continuous-batching scheduler (fixed slot count, admit-on-free).
+* **Edge serving** (the paper's own regime): batch-8, weights-on-chip int8
+  dense pipelines deployed through the two-level tiling plan + fused Pallas
+  kernels (`models/edge.py`), with the LARE decision rule choosing the
+  execution regime per layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import partition, runtime
+from repro.models import api
+from repro.models.config import ModelConfig
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# int8 weight quantization (pjit path; kernels/gemm_int8 covers the TPU path)
+# ---------------------------------------------------------------------------
+
+_QUANT_MIN_SIZE = 1 << 16      # only quantize big matmul weights
+
+
+# Embeddings are gathered directly; norm scales/biases must stay exact.
+_QUANT_EXCLUDE = ("emb", "unemb", "pos_emb", "scale", "bias",
+                  "ln0", "ln1", "ln2", "ln_x", "post_ln1", "post_ln2",
+                  "final_norm", "gn", "q_norm", "kv_norm", "norm_h", "norm_e",
+                  "enc_final", "dec_final")
+
+
+def quantize_params(params: Any, *, min_size: int = _QUANT_MIN_SIZE) -> Any:
+    """Per-output-channel symmetric int8 for >=2-D weight leaves.
+
+    Quantized leaves become {"q8","scale"} marker dicts that
+    ``runtime.maybe_dequant`` expands per layer inside the scan body, so at
+    rest HBM holds int8 (the mixtral-8x22b @ TP16 fit story).  Embedding
+    tables are excluded — they are index-gathered outside the dequant hook
+    (and int8 embeddings measurably hurt quality anyway)."""
+
+    def one(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        if any(k in _QUANT_EXCLUDE for k in keys):
+            return leaf
+        if (not isinstance(leaf, jnp.ndarray) and
+                not hasattr(leaf, "shape")):
+            return leaf
+        if leaf.ndim < 2 or leaf.size < min_size or \
+                not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        w = leaf.astype(F32)
+        scale = jnp.max(jnp.abs(w), axis=-2, keepdims=True) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+        return {"q8": q, "scale": scale.astype(F32)}
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def quantized_bytes(params: Any) -> tuple[int, int]:
+    """(bytes_before_assuming_bf16, bytes_after) for reporting."""
+    before = after = 0
+    for leaf in jax.tree.leaves(params):
+        n = int(np.prod(leaf.shape))
+        before += 2 * n
+        after += n if leaf.dtype == jnp.int8 else 2 * n
+    return before, after
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def build_serve_steps(cfg: ModelConfig, *, max_len: int,
+                      quantize: bool = False):
+    """Returns (prefill_fn, decode_fn) — pure functions ready for jit.
+
+    prefill_fn(params, tokens, state)        -> (logits_last, state)
+    decode_fn(params, tokens, state, pos)    -> (logits, state)
+    """
+
+    def prefill_fn(params, tokens, state, extras=None):
+        logits, state = api.decode_step(params, cfg, tokens, state, 0,
+                                        extras=extras or {})
+        return logits[:, -1:], state
+
+    def decode_fn(params, tokens, state, pos, extras=None):
+        return api.decode_step(params, cfg, tokens, state, pos,
+                               extras=extras or {})
+
+    return prefill_fn, decode_fn
+
+
+# ---------------------------------------------------------------------------
+# Continuous batcher
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batching over the jitted decode step.
+
+    Slots hold independent sequences; finished slots admit queued requests
+    immediately (per-slot position tracking; greedy sampling).  CPU-scale
+    smoke models exercise the exact code path the TPU deployment jits.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 256):
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len = slots, max_len
+        self.state = api.init_decode_state(cfg, slots, max_len)
+        self.pos = np.zeros((slots,), np.int32)
+        self.active: list[Request | None] = [None] * slots
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self._decode = jax.jit(
+            lambda p, t, s, pos: api.decode_step(p, cfg, t, s, pos))
+        self._steps = 0
+
+    def submit(self, req: Request):
+        self.queue.put(req)
+
+    def _admit(self):
+        for i in range(self.slots):
+            if self.active[i] is None and not self.queue.empty():
+                req = self.queue.get()
+                # Prefill the slot by stepping its prompt token-by-token
+                # (simple and exact; a chunked prefill is the TPU fast path).
+                tok = np.zeros((self.slots, 1), np.int32)
+                for t in req.prompt:
+                    tok[i, 0] = t
+                    logits, self.state = self._decode(
+                        self.params, jnp.asarray(tok), self.state,
+                        int(self.pos[i]))
+                    self.pos[i] += 1
+                req.out.append(int(jnp.argmax(logits[i, -1])))
+                self.active[i] = req
+
+    def step(self) -> int:
+        """One decode tick across all active slots.  Returns #active."""
+        self._admit()
+        if not any(self.active):
+            return 0
+        tok = np.zeros((self.slots, 1), np.int32)
+        for i, req in enumerate(self.active):
+            if req is not None and req.out:
+                tok[i, 0] = req.out[-1]
+        pos = int(max(self.pos))     # single shared position cursor
+        logits, self.state = self._decode(self.params, jnp.asarray(tok),
+                                          self.state, pos)
+        self._steps += 1
+        n_active = 0
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[i] += 1
+            req.out.append(int(jnp.argmax(logits[i, -1])))
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.active[i] = None
+            else:
+                n_active += 1
+        return n_active
+
+    def run_until_drained(self, max_ticks: int = 10_000):
+        while (not self.queue.empty() or any(self.active)) \
+                and self._steps < max_ticks:
+            self.step()

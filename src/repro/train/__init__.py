@@ -1,0 +1,2 @@
+"""Training substrate: optimizers, schedules, losses, step builder,
+checkpointing, fault tolerance, gradient compression, pipeline parallelism."""

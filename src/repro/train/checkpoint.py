@@ -1,0 +1,154 @@
+"""Sharded, atomic, async checkpoints with elastic restore.
+
+Layout:  <dir>/step_<N>/
+           manifest.json        tree structure, dtypes, shapes, step, mesh
+           <leaf-id>.npy        one file per leaf (host-gathered)
+
+Properties the fault-tolerance tests assert:
+
+* **atomic publish** — writes go to ``step_<N>.tmp`` and are renamed only
+  after fsync, so a crash mid-write never corrupts the latest checkpoint;
+* **async** — ``save_async`` snapshots to host RAM synchronously (cheap) and
+  writes to disk on a background thread, overlapping the next train steps;
+* **elastic restore** — ``restore`` takes the *target* mesh/shardings, so a
+  checkpoint written on a 16x16 mesh can resume on 8x16 (or 1 CPU device):
+  resharding happens at ``device_put`` time from the host-gathered arrays.
+
+On a real multi-host pod each host would write only its addressable shards;
+the manifest format already records per-leaf shape/dtype so that extension
+is a write-strategy swap, not a format change.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _tree_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for k in path:
+            parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+def save(ckpt_dir: str, state: Any, step: int) -> str:
+    """Synchronous atomic checkpoint.  Returns the published path."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    entries = []
+    for i, (path, leaf) in enumerate(_tree_paths(state)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        logical_dtype = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:       # numpy can't serialize bf16
+            arr = arr.view(np.uint16)
+        np.save(os.path.join(tmp, fname), arr)
+        entries.append({"path": path, "file": fname,
+                        "shape": list(arr.shape), "dtype": logical_dtype})
+    manifest = {"step": step, "leaves": entries}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host synchronously, write-to-disk on a worker thread."""
+
+    def __init__(self, ckpt_dir: str, *, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def save_async(self, state: Any, step: int):
+        self.wait()
+        # Host snapshot now (so the donated buffers can be reused).
+        host_state = jax.tree.map(lambda l: np.asarray(jax.device_get(l)),
+                                  state)
+
+        def work():
+            save(self.ckpt_dir, host_state, step)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(latest_steps(self.ckpt_dir))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+
+def latest_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            out.append(int(name.split("_")[1]))
+    return sorted(out)
+
+
+def restore(ckpt_dir: str, state_like: Any, *, step: int | None = None,
+            shardings: Any = None) -> tuple[Any, int]:
+    """Restore into the structure of `state_like` (abstract ok).
+
+    ``shardings`` (optional pytree of NamedSharding) enables elastic restore
+    onto any mesh: arrays are device_put with the target sharding.
+    """
+    steps = latest_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    step = step if step is not None else steps[-1]
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+
+    leaves_like, treedef = _flatten(state_like)
+    named = _tree_paths(state_like)
+    assert len(named) == len(leaves_like)
+    sh_flat = (jax.tree_util.tree_flatten(shardings)[0]
+               if shardings is not None else [None] * len(named))
+    out = []
+    for (pathname, like), sh in zip(named, sh_flat):
+        e = by_path[pathname]
+        arr = np.load(os.path.join(path, e["file"]))
+        if e["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr))
+    return treedef.unflatten(out), manifest["step"]

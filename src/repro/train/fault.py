@@ -1,0 +1,122 @@
+"""Fault tolerance: restart driver, failure injection, straggler mitigation,
+elastic re-meshing.
+
+``TrainDriver`` wraps the jitted step with:
+
+* periodic async checkpoints (atomic publish, see checkpoint.py);
+* restart-on-failure: any exception classified as a node failure rolls the
+  state back to the last published checkpoint and replays — because the data
+  pipeline is a pure function of (seed, step), replay is bit-deterministic;
+* straggler detection: per-step wall times feed an EMA; steps slower than
+  ``straggler_factor`` x the rolling median raise a mitigation callback
+  (on a real pod: quarantine the slow host / trigger re-shard; here the
+  callback is observable by tests via `events`);
+* elastic re-mesh: ``resume(new_mesh)`` restores the latest checkpoint onto
+  a different mesh/shardings (devices lost or gained) and continues.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+
+from repro.train import checkpoint as ckpt_lib
+
+
+class SimulatedNodeFailure(RuntimeError):
+    """Raised by failure-injection hooks to emulate a lost node."""
+
+
+@dataclass
+class DriverConfig:
+    ckpt_dir: str
+    ckpt_every: int = 20
+    keep: int = 3
+    straggler_factor: float = 3.0
+    straggler_window: int = 16
+    max_restarts: int = 8
+
+
+@dataclass
+class TrainDriver:
+    cfg: DriverConfig
+    step_fn: Callable                     # (state, batch) -> (state, metrics)
+    batch_fn: Callable                    # step -> device batch (deterministic)
+    state: Any
+    shardings: Any = None                 # target shardings for restore
+    events: list = field(default_factory=list)
+    _times: list = field(default_factory=list)
+
+    def __post_init__(self):
+        self._ckpt = ckpt_lib.AsyncCheckpointer(self.cfg.ckpt_dir,
+                                                keep=self.cfg.keep)
+        self._restarts = 0
+
+    @property
+    def step(self) -> int:
+        return int(jax.device_get(self.state["step"]))
+
+    def _detect_straggler(self, dt: float, step: int):
+        self._times.append(dt)
+        window = self._times[-self.cfg.straggler_window:]
+        if len(window) >= 4:
+            med = statistics.median(window[:-1])
+            if dt > self.cfg.straggler_factor * med:
+                self.events.append(("straggler", step, dt, med))
+                self.mitigate_straggler(step, dt, med)
+
+    def mitigate_straggler(self, step: int, dt: float, median: float):
+        """Hook: on a real pod -> quarantine host, pre-empt its shards.
+        Default: record only (tests observe `events`)."""
+
+    def run(self, n_steps: int, *, failure_hook: Callable | None = None):
+        """Run `n_steps`, surviving injected failures by restart-and-replay."""
+        target = self.step + n_steps
+        while self.step < target:
+            step = self.step
+            try:
+                if failure_hook is not None:
+                    failure_hook(step)
+                batch = self.batch_fn(step)
+                t0 = time.perf_counter()
+                self.state, metrics = self.step_fn(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+                self._detect_straggler(time.perf_counter() - t0, step)
+                new_step = step + 1
+                if new_step % self.cfg.ckpt_every == 0:
+                    self._ckpt.save_async(self.state, new_step)
+                    self.events.append(("checkpoint", new_step))
+            except SimulatedNodeFailure as e:
+                self._restarts += 1
+                self.events.append(("failure", step, str(e)))
+                if self._restarts > self.cfg.max_restarts:
+                    raise
+                self._restore()
+        self._ckpt.wait()
+        return self.state
+
+    def _restore(self):
+        self._ckpt.wait()
+        steps = ckpt_lib.latest_steps(self.cfg.ckpt_dir)
+        if not steps:
+            self.events.append(("restart_from_init", 0))
+            return                      # keep current state (from step 0)
+        abstract = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), self.state)
+        self.state, step = ckpt_lib.restore(self.cfg.ckpt_dir, abstract,
+                                            shardings=self.shardings)
+        self.events.append(("restored", step))
+
+    def resume_elastic(self, state_like: Any, shardings: Any):
+        """Elastic restart: restore the latest checkpoint onto a NEW mesh
+        (different device count / topology)."""
+        self._ckpt.wait()
+        self.shardings = shardings
+        self.state, step = ckpt_lib.restore(self.cfg.ckpt_dir, state_like,
+                                            shardings=shardings)
+        self.events.append(("elastic_resume", step))
+        return self.state

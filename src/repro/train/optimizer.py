@@ -1,0 +1,249 @@
+"""Optimizers in pure JAX (no optax): AdamW, Adafactor, SGD-momentum.
+
+Large-scale posture:
+
+* **State dtype** is configurable: f32, bf16, or int8 block-quantized
+  (bitsandbytes-style, 256-element blocks with per-block absmax scales).
+  deepseek-v3-671b cannot hold f32 AdamW moments on a 256-chip v5e pod
+  (8 TB > 4 TB HBM); int8 states or Adafactor make it fit — the dry-run
+  memory_analysis in EXPERIMENTS.md quantifies this.
+* **ZeRO-1**: optimizer states inherit the parameters' FSDP sharding (the
+  partitioner's "zero" axes), so moments are sharded over DP for free.
+* **Adafactor** keeps factored second moments for >=2-D leaves (rank-1
+  row/col statistics), the classic memory-floor option for giant models.
+
+API:  opt = make(name, **hp);  state = opt.init(params);
+      params, state = opt.update(grads, state, params, step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+_BLOCK = 256
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization for moment tensors
+# ---------------------------------------------------------------------------
+
+def _q8_encode(x: jax.Array) -> dict:
+    """Block-quantize to int8; shape is recovered from the paired param."""
+    flat = x.astype(F32).reshape(-1)
+    pad = (-flat.size) % _BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(F32)}
+
+
+def _q8_decode(enc: dict, shape: tuple) -> jax.Array:
+    blocks = enc["q"].astype(F32) * enc["s"]
+    size = 1
+    for d in shape:
+        size *= d
+    return blocks.reshape(-1)[:size].reshape(shape)
+
+
+def _moment_store(x: jax.Array, dtype: str):
+    if dtype == "float32":
+        return x.astype(F32)
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    if dtype == "int8":
+        return _q8_encode(x)
+    raise ValueError(dtype)
+
+
+def _moment_load(m, dtype: str, shape: tuple = ()) -> jax.Array:
+    if dtype == "int8":
+        return _q8_decode(m, shape)
+    return m.astype(F32)
+
+
+# Leaves above this element count (e.g. scan-stacked expert banks: a 671B
+# MoE's (58, E, D, F) bank is ~2.6e9 elements per device shard) update
+# slice-wise over the leading dim via lax.map, so the f32 working copies are
+# per-layer (~MBs) instead of per-leaf (~10 GiB) — measured as the deepseek
+# train cell's residual memory spike.
+_MAP_MIN_ELEMS = 1 << 62   # disabled: GSPMD replicates map slices (see step.py)
+
+
+def _maybe_map_update(fn, example_p, *trees):
+    """Apply fn(*slices) over axis 0 when the leaf is a huge stacked bank."""
+    if (example_p.ndim >= 3 and example_p.size >= _MAP_MIN_ELEMS
+            and all(jax.tree.all(jax.tree.map(
+                lambda a: hasattr(a, "shape") and a.shape[:1]
+                == example_p.shape[:1], t)) for t in trees)):
+        return jax.lax.map(lambda xs: fn(*xs), trees)
+    return fn(*trees)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer protocol
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable       # (grads, state, params, step) -> (params, state)
+    name: str
+
+
+def _tree_cast(tree, fn):
+    return jax.tree.map(fn, tree)
+
+
+def make_adamw(*, lr: Callable | float = 1e-3, b1: float = 0.9,
+               b2: float = 0.95, eps: float = 1e-8,
+               weight_decay: float = 0.0,
+               state_dtype: str = "float32") -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, F32), params)
+        return {
+            "m": jax.tree.map(lambda z: _moment_store(z, state_dtype), zeros),
+            "v": jax.tree.map(lambda z: _moment_store(z, state_dtype), zeros),
+        }
+
+    def update(grads, state, params, step, scale=None):
+        lr_t = lr_fn(step)
+        t = step.astype(F32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        is_enc = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+
+        def upd(g, m_enc, v_enc, p):
+            g = g.astype(F32)
+            if scale is not None:
+                g = g * scale
+            m = b1 * _moment_load(m_enc, state_dtype, p.shape) + (1 - b1) * g
+            # v is stored in sqrt-domain when quantized: linear int8 grids
+            # cannot span v's dynamic range (v ~ g^2), sqrt(v) ~ |g| can.
+            v_prev = _moment_load(v_enc, state_dtype, p.shape)
+            if state_dtype == "int8":
+                v_prev = jnp.square(v_prev)
+            v = b2 * v_prev + (1 - b2) * g * g
+            upd_ = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                upd_ = upd_ + weight_decay * p.astype(F32)
+            new_p = (p.astype(F32) - lr_t * upd_).astype(p.dtype)
+            v_store = jnp.sqrt(v) if state_dtype == "int8" else v
+            return (new_p, _moment_store(m, state_dtype),
+                    _moment_store(v_store, state_dtype))
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = jax.tree.flatten(state["m"], is_leaf=is_enc)[0]
+        flat_v = jax.tree.flatten(state["v"], is_leaf=is_enc)[0]
+        new = []
+        for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+            if state_dtype == "int8":
+                new.append(upd(g, m, v, p))
+            else:
+                new.append(_maybe_map_update(upd, p, g, m, v, p))
+        return (tdef.unflatten([n[0] for n in new]),
+                {"m": tdef.unflatten([n[1] for n in new]),
+                 "v": tdef.unflatten([n[2] for n in new])})
+
+    return Optimizer(init=init, update=update, name=f"adamw[{state_dtype}]")
+
+
+def make_adafactor(*, lr: Callable | float = 1e-3, decay: float = 0.8,
+                   eps: float = 1e-30, clip_threshold: float = 1.0,
+                   weight_decay: float = 0.0) -> Optimizer:
+    """Factored second moments (Shazeer & Stern) — beta1=0 variant."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], F32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], F32)}
+            return {"v": jnp.zeros_like(p, F32)}
+        return {"v": jax.tree.map(one, params)}
+
+    def update(grads, state, params, step, scale=None):
+        lr_t = lr_fn(step)
+        t = step.astype(F32) + 1.0
+        beta2 = 1.0 - t ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(F32)
+            if scale is not None:
+                g = g * scale
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] / jnp.mean(vr, axis=-1, keepdims=True)[..., None]
+                         ) * vc[..., None, :]
+                u = g / jnp.sqrt(denom + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g / jnp.sqrt(v + eps)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(F32)
+            return (p.astype(F32) - lr_t * u).astype(p.dtype), new_s
+
+        is_slot = lambda x: isinstance(x, dict) and (set(x) <= {"vr", "vc", "v"})
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = jax.tree.flatten(state["v"], is_leaf=is_slot)[0]
+        new = [_maybe_map_update(upd, p, g, s, p)
+               for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = tdef.unflatten([n[0] for n in new])
+        new_s = tdef.unflatten([n[1] for n in new])
+        return new_p, {"v": new_s}
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def make_sgd(*, lr: Callable | float = 1e-2, momentum: float = 0.9,
+             nesterov: bool = False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, F32), params)}
+
+    def update(grads, state, params, step, scale=None):
+        lr_t = lr_fn(step)
+
+        def upd(g, mu, p):
+            g = g.astype(F32)
+            if scale is not None:
+                g = g * scale
+            mu = momentum * mu + g
+            d = g + momentum * mu if nesterov else mu
+            return (p.astype(F32) - lr_t * d).astype(p.dtype), mu
+
+        out = jax.tree.map(upd, grads, state["mu"], params)
+        leaf = lambda x: isinstance(x, tuple) and len(x) == 2
+        return (jax.tree.map(lambda t: t[0], out, is_leaf=leaf),
+                {"mu": jax.tree.map(lambda t: t[1], out, is_leaf=leaf)})
+
+    return Optimizer(init=init, update=update, name="sgd")
+
+
+def make(name: str, **hp) -> Optimizer:
+    if name == "adamw":
+        return make_adamw(**hp)
+    if name == "adafactor":
+        return make_adafactor(**hp)
+    if name == "sgd":
+        return make_sgd(**hp)
+    raise ValueError(name)

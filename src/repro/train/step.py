@@ -1,0 +1,199 @@
+"""Train-step builder: remat, microbatching, clipping, ZeRO/FSDP shardings.
+
+``build_train_step`` returns (init_fn, step_fn) ready for ``jax.jit`` with
+the partitioner's shardings.  The same builder serves the CPU-scale examples
+(no mesh) and the 512-device dry-run (mesh + shardings), so the compiled
+artifact the roofline reads is exactly the code the examples run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro import partition, runtime
+from repro.models import api, transformer
+from repro.models.config import ModelConfig
+from repro.train import loss as loss_lib
+from repro.train.optimizer import Optimizer
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainOptions:
+    remat: str = "block"            # "none" | "block" | "dots"
+    microbatches: int = 1
+    clip_norm: float = 1.0
+    chunked_loss: bool = False      # vocab-chunked CE (transformer family)
+    acc_dtype: str = "float32"      # microbatch grad accumulator (bf16 for
+                                    # 100B+ models: halves a params-sized buffer)
+    mtp_weight: float = 0.3
+    aux_weight: float = 1.0         # MoE load-balance loss weight multiplier
+    z_loss: float = 0.0
+
+
+def global_norm(tree) -> jax.Array:
+    # All-dims dot_general with f32 accumulation: no f32 materialization of
+    # the (multi-GiB) bf16 gradient leaves, and NO reshape — flattening a
+    # sharded leaf forces a full all-gather under GSPMD (measured TB-scale
+    # regression on the 671B cell).
+    def sq(l):
+        dims = tuple(range(l.ndim))
+        return jax.lax.dot_general(l, l, ((dims, dims), ((), ())),
+                                   preferred_element_type=F32)
+    leaves = [sq(l) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda l: (l * scale.astype(l.dtype)).astype(l.dtype),
+                        tree), norm
+
+
+def make_loss_fn(cfg: ModelConfig, opts: TrainOptions) -> Callable:
+    def loss_fn(params, batch):
+        with runtime.remat_policy(opts.remat):
+            if opts.chunked_loss and cfg.family == "transformer":
+                out = transformer.lm_forward(
+                    params, cfg, batch["tokens"],
+                    mrope_positions=batch.get("mrope_positions"),
+                    embeddings=batch.get("embeddings"),
+                    want_hidden=True)
+                ce = loss_lib.chunked_xent(params, cfg, out["hidden"],
+                                           batch["labels"], z_loss=opts.z_loss)
+            else:
+                out = api.forward(params, cfg, batch)
+                ce = loss_lib.softmax_xent(out["logits"], batch["labels"],
+                                           z_loss=opts.z_loss)
+            total = ce + opts.aux_weight * out.get("aux_loss", 0.0)
+            if cfg.mtp and "mtp_hidden" in out and opts.mtp_weight:
+                # Predict token t+2 from (h_t, emb(label_t == token t+1)).
+                # Keep the FULL sequence through the MTP layer (a sliced
+                # 4095-long seq stops dividing the model axis and forces the
+                # MoE into a conflicting layout — measured as a full expert-
+                # bank replication); slice at the loss instead.
+                mtp_lg = transformer.mtp_logits(params, cfg,
+                                                out["mtp_hidden"],
+                                                batch["labels"])
+                mtp_ce = loss_lib.softmax_xent(mtp_lg[:, :-1],
+                                               batch["labels"][:, 1:])
+                total = total + opts.mtp_weight * mtp_ce
+        return total, {"ce": ce, "aux": out.get("aux_loss", jnp.zeros((), F32))}
+    return loss_fn
+
+
+def build_train_step(cfg: ModelConfig, opt: Optimizer,
+                     opts: TrainOptions = TrainOptions()):
+    """Returns (init_fn(key) -> state, step_fn(state, batch) -> (state, metrics))."""
+    loss_fn = make_loss_fn(cfg, opts)
+
+    def init_fn(key):
+        params = api.init(cfg, key)
+        return {"params": params, "opt": opt.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def step_fn(state, batch):
+        params = state["params"]
+        if opts.microbatches > 1:
+            mb = opts.microbatches
+
+            def reshape(x):
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+            # mrope positions carry a leading (3,) axis — split on axis 1.
+            def reshape_batch(b):
+                out = {}
+                for k, v in b.items():
+                    if k == "mrope_positions":
+                        out[k] = v.reshape(
+                            (v.shape[0], mb, v.shape[1] // mb) + v.shape[2:]
+                        ).swapaxes(0, 1)
+                    else:
+                        out[k] = reshape(v)
+                return out
+
+            mbatch = reshape_batch(batch)
+            acc_dt = jnp.dtype(opts.acc_dtype)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+            def accum(carry, mb_batch):
+                g_acc, l_acc, m_acc = carry
+                (l, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb_batch)
+                g_acc = jax.tree.map(lambda a, b: a + (b / mb).astype(acc_dt),
+                                     g_acc, g)
+                return (g_acc, l_acc + l / mb,
+                        jax.tree.map(lambda a, b: a + b / mb, m_acc, metrics)), None
+
+            init_m = {"ce": jnp.zeros((), F32), "aux": jnp.zeros((), F32)}
+            (grads, l, metrics), _ = jax.lax.scan(
+                accum, (zeros, jnp.zeros((), F32), init_m), mbatch)
+        else:
+            (l, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+
+        # Clip scale is folded INTO the optimizer update (per-leaf transient)
+        # instead of rewriting the whole gradient tree (a full params-sized
+        # copy on 100B+ models).
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, opts.clip_norm / (gnorm + 1e-9))
+        new_params, new_opt = opt.update(grads, state["opt"], params,
+                                         state["step"], scale=scale)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = dict(metrics, loss=l, grad_norm=gnorm,
+                       step=state["step"].astype(F32))
+        return new_state, metrics
+
+    return init_fn, step_fn
+
+
+def state_shardings(state_abstract, cfg, mesh, *, regime="train"):
+    """NamedShardings for the whole train state (ZeRO: moments follow params)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    param_sh = partition.param_shardings(state_abstract["params"], cfg, mesh,
+                                         regime=regime)
+
+    def opt_leaf(path, leaf):
+        # int8-block moment dicts and factored slots: replicate scales,
+        # shard q-blocks over DP when divisible.
+        return NamedSharding(mesh, P())
+
+    opt_sh = jax.tree.map(
+        lambda leaf: NamedSharding(mesh, P()), state_abstract["opt"])
+    # Moments with the same shape as a param reuse the param's sharding.
+    flat_p = {tuple(str(getattr(k, 'key', getattr(k, 'idx', k)))
+                    for k in path): sh
+              for path, sh in jax.tree_util.tree_flatten_with_path(param_sh)[0]}
+
+    def match_moment(path, leaf):
+        keys = tuple(str(getattr(k, 'key', getattr(k, 'idx', k)))
+                     for k in path)
+        for skip in (1, 2):      # drop leading "m"/"v"/"mu"/"v" keys
+            cand = keys[skip:]
+            if cand in flat_p:
+                return flat_p[cand]
+            # adafactor factored slots: vr = param minus last dim,
+            # vc = param minus second-to-last dim.
+            if cand and cand[-1] in ("vr", "vc") and cand[:-1] in flat_p:
+                spec = tuple(flat_p[cand[:-1]].spec)
+                spec = spec + (None,) * (len(spec) - len(spec))
+                drop = -1 if cand[-1] == "vr" else -2
+                new = list(spec)
+                if len(new) >= abs(drop):
+                    del new[drop]
+                return NamedSharding(mesh, P(*new))
+        return NamedSharding(mesh, P())
+
+    opt_sh = jax.tree_util.tree_map_with_path(match_moment,
+                                              state_abstract["opt"])
+    return {"params": param_sh, "opt": opt_sh,
+            "step": NamedSharding(mesh, P())}

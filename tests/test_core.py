@@ -1,0 +1,164 @@
+"""Core-library tests: tiling planner, LARE, boundary cost — including
+hypothesis property tests on the planner/metric invariants."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import hw as hwlib
+from repro.core import boundary, lare, tiling
+
+
+# ---------------------------------------------------------------------------
+# Two-level tiling planner
+# ---------------------------------------------------------------------------
+
+def test_plan_api_legal_blocks():
+    p = tiling.plan_api(8, 4608, 36864, itemsize=2)
+    assert p.block_k % 128 == 0 and p.block_n % 128 == 0
+    assert p.block_m % hwlib.TPU_V5E.sublanes_for(2) == 0
+    assert p.vmem_bytes <= hwlib.TPU_V5E.vmem_bytes
+
+
+@given(st.integers(1, 64), st.sampled_from([128, 192, 256, 1024, 4608]),
+       st.sampled_from([128, 256, 2048, 11008]))
+@settings(max_examples=30, deadline=None)
+def test_plan_api_covers_workload(m, k, n):
+    """Property: block x repeat covers the (padded) workload exactly."""
+    p = tiling.plan_api(m, k, n, itemsize=2)
+    assert p.block_m * p.r_m >= m
+    assert p.block_k * p.r_k >= k
+    assert p.block_n * p.r_n >= n
+    assert p.vmem_bytes <= hwlib.TPU_V5E.vmem_bytes
+
+
+@given(st.sampled_from([1, 2, 4]), st.sampled_from([2048, 4096, 8192]),
+       st.sampled_from([2048, 8192, 32768]))
+@settings(max_examples=20, deadline=None)
+def test_plan_spatial_respects_floor(m_exp, k, n):
+    m = 8 * m_exp
+    sp = tiling.plan_spatial(m, k, n, axis_sizes=(16,))
+    if sp.tiles > 1:
+        assert sp.q_k >= 512 and sp.q_n >= 512       # DR5'
+    assert sp.p_k * sp.q_k >= k and sp.p_n * sp.q_n >= n
+
+
+def test_plan_gemm_rules_annotated():
+    p = tiling.plan_gemm(8, 8192, 8192, axis_sizes=(16,))
+    assert any("DR1'" in r for r in p.rules)
+    assert p.est_s > 0
+
+
+def test_aie_api_ordering_matches_paper():
+    """Paper Fig. 4: (4,8,8) and (4,16,8) outperform the other legal tiles."""
+    t = {s: tiling.aie_tile_latency(8, 128, 128, s)
+         for s in hwlib.AIE_ML.legal_api_tiles_i8}
+    best2 = sorted(t, key=t.get)[:2]
+    assert set(best2) == {(4, 8, 8), (4, 16, 8)}
+
+
+def test_aie_asymmetry_favors_n():
+    """Paper Fig. 4 / DR2: Q_N-larger beats Q_K-larger at equal MACs."""
+    fast = tiling.aie_tile_latency(8, 64, 256)
+    slow = tiling.aie_tile_latency(8, 256, 64)
+    assert fast < slow
+
+
+def test_aie_spatial_k_expansion_beats_n():
+    """Paper Fig. 5 / DR3: for fixed P, more columns (K) is faster."""
+    t_k = tiling.aie_spatial_latency(8, 128, 128, p_k=4, p_n=1)
+    t_n = tiling.aie_spatial_latency(8, 128, 128, p_k=1, p_n=4)
+    assert t_k < t_n
+
+
+def test_aie_band_spill_penalty():
+    """Paper Fig. 6 / DR6: spilling layers into a second band costs latency."""
+    base = tiling.aie_spatial_latency(8, 192, 192, 3, 4)
+    spilled = tiling.aie_spatial_latency(8, 192, 192, 4, 3, layers_in_band_2=1)
+    assert spilled > base * 1.0
+
+
+# ---------------------------------------------------------------------------
+# LARE
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([16, 32, 64, 128, 192, 256]),
+       st.sampled_from([16, 32, 64, 128, 192, 256]))
+@settings(max_examples=25, deadline=None)
+def test_lare_invariants(n_in, n_out):
+    r = lare.lare(n_in, n_out)
+    assert r.lare >= 0
+    assert r.rf_eq >= 1
+    # decision boundary is monotone in the budget
+    assert r.decide(r.lare * 2) == "pl"
+    assert r.decide(r.lare * 0.4) == "aie"
+    # PL curve: interval nondecreasing in rf, resource nonincreasing
+    ivals = [p.interval_s for p in r.pl_curve]
+    res = [p.resource for p in r.pl_curve]
+    assert all(a <= b + 1e-12 for a, b in zip(ivals, ivals[1:]))
+    assert all(a >= b - 1e-9 for a, b in zip(res, res[1:]))
+
+
+def test_lare_grows_with_layer_size():
+    """Bigger layers need more PL resource to match the AIE point."""
+    small = lare.lare(32, 32)
+    big = lare.lare(192, 192)
+    assert big.lare > small.lare
+
+
+def test_lare_tpu_core_equivalence():
+    r = lare.lare_tpu(4096, 14336)
+    assert r.core_eq >= 1
+    # pipeline curve latency decreases with cores
+    lat = [t for _, t in r.pipeline_curve]
+    assert lat[0] > lat[-1]
+
+
+# ---------------------------------------------------------------------------
+# Boundary cost / fusion planner
+# ---------------------------------------------------------------------------
+
+def test_fusion_groups_small_chain():
+    st_ = [boundary.Stage("gemm", 1e-5, 8 * 4096 * 2, 4 << 20),
+           boundary.Stage("bias", 1e-7, 8 * 4096 * 2, 1 << 16),
+           boundary.Stage("gelu", 2e-7, 8 * 4096 * 2, 1 << 16)]
+    groups = boundary.plan_fusion(st_)
+    assert groups == [0, 0, 0]      # everything fuses under VMEM budget
+
+
+def test_fusion_splits_on_vmem():
+    big = boundary.Stage("a", 1e-5, 1 << 20, 90 << 20)
+    big2 = boundary.Stage("b", 1e-5, 1 << 20, 90 << 20)
+    groups = boundary.plan_fusion([big, big2])
+    assert groups == [0, 1]         # cannot co-reside in VMEM
+
+
+def test_chain_latency_monotone_in_crossings():
+    st_ = [boundary.Stage(f"s{i}", 1e-6, 1 << 20, 1 << 16) for i in range(6)]
+    fused = boundary.chain_latency(st_, [0] * 6)
+    split = boundary.chain_latency(st_, list(range(6)))
+    assert split > fused
+
+
+def test_hybrid_split_dp():
+    stages = [
+        boundary.Stage("gemm1", 0, 0, domain_s={"aie": 1e-6, "pl": 3e-6}),
+        boundary.Stage("bitrev", 0, 0, domain_s={"aie": 5e-6, "pl": 1e-6}),
+        boundary.Stage("gemm2", 0, 0, domain_s={"aie": 1e-6, "pl": 3e-6}),
+    ]
+    # Cheap crossings: split wins.
+    assign, cost = boundary.plan_hybrid_split(stages, ["aie", "pl"],
+                                              crossing_s=1e-8)
+    assert assign == ["aie", "pl", "aie"]
+    # Expensive crossings (DR7): stay in one domain.
+    assign2, _ = boundary.plan_hybrid_split(stages, ["aie", "pl"],
+                                            crossing_s=1e-4)
+    assert len(set(assign2)) == 1
+
+
+def test_crossing_cost_aie_calibration():
+    """DR7: ~3.9% of a baseline latency per crossing."""
+    base = 10e-6
+    c = boundary.crossing_cost_aie(8 * 192, base)
+    assert abs(c - 0.039 * base) / (0.039 * base) < 0.2

@@ -1,0 +1,100 @@
+"""Serving tests: engine, continuous batcher, int8 quantized weights,
+edge low-latency path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import api, edge
+from repro.serve import engine
+
+
+def test_quantize_params_marks_big_weights():
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    q = engine.quantize_params(params, min_size=1024)
+    # embeddings stay bf16 (index-gathered); attention weights quantize
+    assert not engine.runtime.is_q8(q["emb"])
+    wq = q["blocks"]["slot0"]["attn"]["wq"]
+    assert isinstance(wq, dict) and wq["q8"].dtype == jnp.int8
+    before, after = engine.quantized_bytes(q)
+    assert after < 0.85 * before
+
+
+def test_quantized_forward_close_to_float():
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    full = api.forward(params, cfg, {"tokens": toks})["logits"]
+    qp = engine.quantize_params(params, min_size=1024)
+    qlg = api.forward(qp, cfg, {"tokens": toks})["logits"]
+    # int8 weights: logits correlate strongly with the float path
+    a = np.asarray(full[..., :cfg.vocab_size], np.float32).reshape(-1)
+    b = np.asarray(qlg[..., :cfg.vocab_size], np.float32).reshape(-1)
+    corr = np.corrcoef(a, b)[0, 1]
+    assert corr > 0.98, corr
+
+
+def test_continuous_batcher_drains():
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    b = engine.ContinuousBatcher(cfg, params, slots=2, max_len=64)
+    reqs = [engine.Request(rid=i,
+                           prompt=np.array([3 + i, 5, 7], np.int32),
+                           max_new=4) for i in range(5)]
+    for r in reqs:
+        b.submit(r)
+    b.run_until_drained(max_ticks=200)
+    for r in reqs:
+        assert r.done and len(r.out) == 4
+        assert all(0 <= t < cfg.padded_vocab for t in r.out)
+
+
+def test_serve_steps_builder():
+    cfg = configs.get("gemma2_2b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    prefill, decode = engine.build_serve_steps(cfg, max_len=32)
+    state = api.init_decode_state(cfg, 2, 32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                              cfg.vocab_size)
+    logits, state = prefill(params, toks, state)
+    assert logits.shape == (2, 1, cfg.padded_vocab)
+    lg2, state = decode(params, toks[:, :1], state, 8)
+    assert lg2.shape == (2, 1, cfg.padded_vocab)
+
+
+# ---------------------------------------------------------------------------
+# Edge path (the paper's own serving regime)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(edge.EDGE_NETS))
+def test_edge_nets_float_forward(name):
+    cfg = edge.edge_config(name)
+    params = edge.init_edge(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (cfg.batch, cfg.dims[0]))
+    y = edge.edge_forward(params, cfg, x)
+    assert y.shape == (cfg.batch, cfg.dims[-1])
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_edge_int8_close_to_float():
+    cfg = edge.edge_config("jet_tagger")
+    params = edge.init_edge(jax.random.PRNGKey(0), cfg)
+    qp = edge.quantize_edge(params)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (cfg.batch, cfg.dims[0])) * 0.5
+    yf = edge.edge_forward(params, cfg, x)
+    yq = edge.edge_forward_q8(qp, cfg, x, x_scale=0.02)
+    # classification argmax agreement
+    agree = float(jnp.mean((jnp.argmax(yf, -1) == jnp.argmax(yq, -1))
+                           .astype(jnp.float32)))
+    assert agree >= 0.75, agree
+
+
+def test_edge_mac_counts_match_paper():
+    assert abs(edge.edge_config("vae").macs - 34_800) / 34_800 < 0.05
+    assert abs(edge.edge_config("qubit").macs - 82_900) / 82_900 < 0.05
+    assert abs(edge.edge_config("autoencoder").macs - 116_700) / 116_700 < 0.05
