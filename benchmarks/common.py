@@ -11,9 +11,30 @@ Numbers are labeled by source:
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
+
+# Rows emitted since the last reset — the runner snapshots these into
+# machine-readable BENCH_<name>.json files so the perf trajectory is
+# trackable across PRs without scraping stdout.
+_RECORDS: list[dict] = []
+
+
+def reset_records() -> None:
+    _RECORDS.clear()
+
+
+def get_records() -> list[dict]:
+    return list(_RECORDS)
+
+
+def write_records(path: str, *, meta: dict | None = None) -> None:
+    payload = {"meta": meta or {}, "rows": get_records()}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def time_call(fn, *args, iters: int = 20, warmup: int = 3) -> float:
@@ -31,3 +52,5 @@ def time_call(fn, *args, iters: int = 20, warmup: int = 3) -> float:
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.3f},{derived}")
+    _RECORDS.append({"name": name, "us_per_call": round(us_per_call, 3),
+                     "derived": derived})

@@ -2,18 +2,24 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig4 table1
+  PYTHONPATH=src python -m benchmarks.run fig8 --json-dir out/
 
-Every row is ``name,us_per_call,derived`` (see benchmarks/common.py for the
-model/measured/tpu-model source labels).
+Every row is ``name,us_per_call,derived`` on stdout (see benchmarks/common.py
+for the model/measured/tpu-model source labels), and each module also writes
+a machine-readable ``BENCH_<name>.json`` snapshot so the perf trajectory is
+tracked across PRs.
 """
 
 from __future__ import annotations
 
-import sys
+import argparse
+import pathlib
+import platform
+import time
 
-from benchmarks import (fig2_scalability, fig3_lare, fig4_api_tiling,
+from benchmarks import (common, fig2_scalability, fig3_lare, fig4_api_tiling,
                         fig5_spatial, fig6_column_exhaustion, fig7_boundary,
-                        table1_deployment)
+                        fig8_planner, table1_deployment)
 
 ALL = {
     "fig2": fig2_scalability.run,
@@ -22,15 +28,34 @@ ALL = {
     "fig5": fig5_spatial.run,
     "fig6": fig6_column_exhaustion.run,
     "fig7": fig7_boundary.run,
+    "fig8": fig8_planner.run,
     "table1": table1_deployment.run,
 }
 
 
-def main() -> None:
-    which = sys.argv[1:] or list(ALL)
-    for name in which:
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.run")
+    ap.add_argument("which", nargs="*", choices=[*ALL, []],
+                    help="benchmarks to run (default: all)")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_<name>.json snapshots")
+    args = ap.parse_args(argv)
+
+    json_dir = pathlib.Path(args.json_dir)
+    json_dir.mkdir(parents=True, exist_ok=True)
+    for name in args.which or list(ALL):
         print(f"\n## {name}")
+        common.reset_records()
+        t0 = time.perf_counter()
         ALL[name]()
+        path = json_dir / f"BENCH_{name}.json"
+        common.write_records(str(path), meta={
+            "benchmark": name,
+            "wall_s": round(time.perf_counter() - t0, 3),
+            "host": platform.machine(),
+            "python": platform.python_version(),
+        })
+        print(f"[wrote {path}]")
 
 
 if __name__ == "__main__":

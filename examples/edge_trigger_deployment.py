@@ -1,21 +1,25 @@
-"""The paper's scenario end-to-end: deploy extreme-edge trigger networks.
+"""The paper's scenario end-to-end: deploy extreme-edge trigger networks
+THROUGH THE DEPLOYMENT PLANNER (``repro.plan``).
 
   PYTHONPATH=src python examples/edge_trigger_deployment.py
 
 For each Table-I workload (VAE, qubit readout, deep autoencoder):
-  1. LARE (Alg. 1) decides the substrate per layer under a PL budget;
+  1. the planner runs LARE (Alg. 1) per layer, searches spatial splits and
+     API tiles (Alg. 2) under column/band constraints, and charges boundary
+     crossings (DR7) — emitting a serializable DeploymentPlan;
   2. weights are int8-quantized (the paper's datatype convention);
-  3. inference runs through the fused Pallas int8 kernels (interpret mode on
-     CPU — identical code compiles to Mosaic on TPU);
-  4. the AIE design-rule interval model reports whether the deployment meets
-     the 40 MHz LHC level-1 trigger rate.
+  3. inference executes the TPU-path plan via the fused Pallas int8 kernels
+     (interpret mode on CPU — identical code compiles to Mosaic on TPU);
+  4. the paper-faithful AIE plan reports whether the deployment meets the
+     40 MHz LHC level-1 trigger rate.
 """
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import lare, tiling
 from repro.models import edge
+from repro.plan import plan_deployment
+from repro.serve.engine import EdgeEngine
 
 
 def main():
@@ -24,32 +28,35 @@ def main():
         cfg = edge.edge_config(name)
         print(f"\n=== {name}: dims={list(cfg.dims)}  macs={cfg.macs} ===")
 
-        # 1. LARE decision per layer.
-        for n_in, n_out in cfg.layer_shapes:
-            r = lare.lare(n_in, n_out)
-            choice = r.decide(pl_budget_per_layer)
-            print(f"  layer {n_in:4d}->{n_out:4d}: LARE={r.lare:8.1f} "
-                  f"rf_eq={r.rf_eq:7.1f}  -> deploy on {choice.upper()}")
+        # 1. Plan the deployment (paper-faithful AIE path).
+        plan = plan_deployment(cfg, target="aie",
+                               pl_budget=pl_budget_per_layer)
+        for l in plan.layers:
+            print(f"  layer {l.n_in:4d}->{l.n_out:4d}: LARE={l.lare:8.1f} "
+                  f"P_KxP_N={l.p_k}x{l.p_n} band={l.band}"
+                  f"  -> deploy on {l.regime.upper()}")
+        for b in plan.boundaries:
+            print(f"  boundary after layer {b.after_layer}: "
+                  f"{b.from_regime}->{b.to_regime} "
+                  f"(+{b.crossing_s * 1e6:.2f}us, DR7)")
 
-        # 2-3. int8 deployment through the fused kernels.
+        # 2-3. int8 deployment executed through the TPU-path plan.
         params = edge.init_edge(jax.random.PRNGKey(0), cfg)
-        qparams = edge.quantize_edge(params)
+        eng = EdgeEngine(cfg, params, x_scale=0.02)
         x = jax.random.normal(jax.random.PRNGKey(1),
                               (cfg.batch, cfg.dims[0])) * 0.5
         y_f = edge.edge_forward(params, cfg, x)
-        y_q = edge.edge_forward_q8(qparams, cfg, x, x_scale=0.02)
+        y_q = eng.infer(x)
         agree = float(jnp.mean((jnp.argmax(y_f, -1) == jnp.argmax(y_q, -1))
                                .astype(jnp.float32)))
-        print(f"  int8 kernel path: output {tuple(y_q.shape)}, "
-              f"argmax agreement vs float = {agree:.2f}")
+        print(f"  planned int8 path: output {tuple(y_q.shape)}, "
+              f"argmax agreement vs float = {agree:.2f}  "
+              f"(plan key {eng.plan.key[:12]}…)")
 
-        # 4. Design-rule interval (model) vs the 40 MHz target.
-        t_naive = max(tiling.aie_tile_interval(cfg.batch, i, o)
-                      for i, o in cfg.layer_shapes)
-        t_opt = tiling.aie_optimized_interval(cfg.layer_shapes, cfg.batch)
-        mhz = cfg.batch / t_opt / 1e6
-        print(f"  AIE naive {cfg.batch/t_naive/1e6:5.1f} MHz -> "
-              f"design rules {mhz:5.1f} MHz  "
+        # 4. All-AIE plan (pl_budget=0) vs the 40 MHz target.
+        opt = plan_deployment(cfg, target="aie", pl_budget=0.0)
+        mhz = opt.inferences_per_s / 1e6
+        print(f"  planned AIE deployment: {mhz:5.1f} MHz  "
               f"({'MEETS' if mhz >= 40 else 'MISSES'} 40 MHz trigger)")
 
 

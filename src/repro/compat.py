@@ -1,0 +1,23 @@
+"""jax version-compatibility aliases.
+
+``jax.shard_map`` graduated from ``jax.experimental.shard_map`` in 0.5 and
+renamed its replication-check kwarg ``check_rep`` -> ``check_vma``; this
+wrapper presents the new-style surface on either jax.
+"""
+
+import inspect
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, **kwargs):
+    if "check_vma" in kwargs and "check_vma" not in _PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(f, **kwargs)

@@ -1,0 +1,11 @@
+"""Version shims for ``jax.experimental.pallas.tpu`` API renames.
+
+Newer jax exposes ``pltpu.CompilerParams``; 0.4.x calls the same class
+``TPUCompilerParams``.  Kernels import the name from here so they compile
+against either.
+"""
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or _pltpu.TPUCompilerParams

@@ -11,19 +11,25 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_mesh(shape, axes):
+    """`jax.make_mesh` with explicit-Auto axis types where the jax version
+    has them (0.5+); older jax has neither `AxisType` nor the kwarg, and its
+    meshes are Auto-only anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(*, data: int | None = None, model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU examples)."""
     n = len(jax.devices())
     data = data if data is not None else max(1, n // model)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((data, model), ("data", "model"))

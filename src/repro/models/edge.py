@@ -95,20 +95,38 @@ def quantize_edge(params: list[dict]) -> list[dict]:
     return qparams
 
 
+def deployment_plan(cfg: EdgeConfig, **kw):
+    """The net's cached TPU-path :class:`DeploymentPlan` (lazy import keeps
+    ``repro.plan`` -> ``repro.models.edge`` one-directional at import time)."""
+    from repro import plan as plan_lib
+    return plan_lib.get_or_plan(cfg, target="tpu", **kw)
+
+
 def edge_forward_q8(qparams: list[dict], cfg: EdgeConfig, x: jax.Array, *,
-                    x_scale: float = 0.05,
-                    block_m: int = 8, block_k: int = 128,
-                    block_n: int = 128) -> jax.Array:
-    """int8 deployment path: per layer, quantize activations per-tensor and
-    run the fused int8 GEMM kernel (one launch per layer — the DR7'-minimal
-    pipeline)."""
+                    x_scale: float = 0.05, plan=None,
+                    block_m: int | None = None, block_k: int | None = None,
+                    block_n: int | None = None) -> jax.Array:
+    """int8 deployment path, compiled from a :class:`DeploymentPlan`.
+
+    Per layer: quantize activations per-tensor and run the fused int8 GEMM
+    kernel with the *plan's* Pallas block shapes (one launch per layer — the
+    DR7'-minimal pipeline).  Explicit ``block_*`` arguments override the plan
+    (the micro-benchmarks sweep them); by default the plan is looked up in
+    the cache, so repeated calls pay the planner search once.
+    """
+    if plan is None and None in (block_m, block_k, block_n):
+        plan = deployment_plan(cfg)
     h = x.astype(F32)
     last = len(qparams) - 1
     for i, p in enumerate(qparams):
+        if plan is not None:
+            bm, bk, bn = plan.layer(i).api_tile
+        else:
+            bm, bk, bn = block_m, block_k, block_n
         hq = jnp.clip(jnp.round(h / x_scale), -127, 127).astype(jnp.int8)
         y = kops.gemm_int8(hq, p["w_q"], p["w_scale"], x_scale,
-                           block_m=block_m, block_k=block_k, block_n=block_n,
-                           out_dtype=F32)
+                           block_m=block_m or bm, block_k=block_k or bk,
+                           block_n=block_n or bn, out_dtype=F32)
         h = y + p["b"][None, :]
         if i != last and cfg.act == "relu":
             h = jnp.maximum(h, 0.0)

@@ -1,0 +1,23 @@
+"""Deployment planner: LARE-driven placement + plan compilation.
+
+The subsystem that composes the paper's decision procedure end-to-end:
+``graph`` builds per-layer dataflow graphs from configs, ``planner`` runs
+LARE + two-level tiling + column/band + boundary-cost search over them, and
+``artifact`` serializes the result as a cache-keyed ``DeploymentPlan`` JSON
+that ``models/edge.py``, ``serve/engine.py`` and the benchmarks execute.
+
+CLI: ``PYTHONPATH=src python -m repro.plan jet_tagger`` (see ``__main__``).
+"""
+
+from repro.plan.artifact import (BoundaryPlan, DeploymentPlan, LayerPlan,
+                                 PlanCache, default_cache, plan_key)
+from repro.plan.calibrate import calibrated_cpu_model
+from repro.plan.graph import DataflowGraph, LayerNode, edge_graph, model_graph
+from repro.plan.planner import as_graph, get_or_plan, plan_deployment
+
+__all__ = [
+    "BoundaryPlan", "DataflowGraph", "DeploymentPlan", "LayerNode",
+    "LayerPlan", "PlanCache", "as_graph", "calibrated_cpu_model",
+    "default_cache", "edge_graph", "get_or_plan", "model_graph", "plan_key",
+    "plan_deployment",
+]

@@ -1,0 +1,87 @@
+"""Planner CLI.
+
+  PYTHONPATH=src python -m repro.plan jet_tagger
+  PYTHONPATH=src python -m repro.plan all --target both --out plans/
+  PYTHONPATH=src python -m repro.plan qwen2_5_3b --kind lm --target tpu
+
+Prints a per-layer plan table and writes the DeploymentPlan JSON artifact
+(``<out>/<net>_<target>.json``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from repro.plan import artifact, planner
+
+
+def _print_plan(plan: artifact.DeploymentPlan) -> None:
+    print(f"\n# {plan.network} [{plan.target}]  batch={plan.batch}  "
+          f"key={plan.key[:12]}…")
+    hdr = (f"{'layer':<10}{'shape':>12}  {'regime':<9}{'LARE':>8}"
+           f"{'P_KxP_N':>9}{'band':>5}  {'tile':<16}{'interval':>11}")
+    print(hdr)
+    for l in plan.layers:
+        rep = f" x{l.repeat}" if l.repeat > 1 else ""
+        print(f"{l.name:<10}{f'{l.n_in}->{l.n_out}{rep}':>12}  "
+              f"{l.regime:<9}{l.lare:>8.1f}{f'{l.p_k}x{l.p_n}':>9}"
+              f"{l.band:>5}  {str(l.api_tile):<16}"
+              f"{l.est_interval_s * 1e6:>9.2f}us")
+    for b in plan.boundaries:
+        print(f"  boundary after layer {b.after_layer}: "
+              f"{b.from_regime}->{b.to_regime} "
+              f"(+{b.crossing_s * 1e6:.2f}us)")
+    print(f"totals: latency={plan.est_latency_s * 1e6:.2f}us  "
+          f"interval={plan.est_interval_s * 1e6:.2f}us  "
+          f"rate={plan.inferences_per_s / 1e6:.2f} MHz")
+
+
+def main(argv: list[str] | None = None) -> int:
+    from repro.models import edge
+
+    ap = argparse.ArgumentParser(prog="python -m repro.plan",
+                                 description=__doc__)
+    ap.add_argument("net", help="edge net name (see EDGE_NETS), an LM arch "
+                                "id with --kind lm, or 'all'")
+    ap.add_argument("--target", choices=("aie", "tpu", "both"),
+                    default="both")
+    ap.add_argument("--kind", choices=("edge", "lm"), default="edge")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--pl-budget", type=float, default=400.0,
+                    help="PL DSP-equivalents per layer for the LARE decision")
+    ap.add_argument("--out", default="plans",
+                    help="directory for the JSON artifacts")
+    args = ap.parse_args(argv)
+
+    if args.kind == "lm":
+        from repro import configs
+        cfgs = [configs.get(args.net).config]
+    elif args.net == "all":
+        cfgs = [edge.edge_config(n) for n in edge.EDGE_NETS]
+    else:
+        if args.net not in edge.EDGE_NETS:
+            print(f"unknown net {args.net!r}; choose from "
+                  f"{sorted(edge.EDGE_NETS)} or 'all'", file=sys.stderr)
+            return 2
+        cfgs = [edge.edge_config(args.net)]
+
+    targets = ("aie", "tpu") if args.target == "both" else (args.target,)
+    if args.kind == "lm":
+        targets = tuple(t for t in targets if t == "tpu") or ("tpu",)
+    out_dir = pathlib.Path(args.out)
+    for cfg in cfgs:
+        for target in targets:
+            plan = planner.plan_deployment(cfg, target=target,
+                                           batch=args.batch,
+                                           pl_budget=args.pl_budget)
+            _print_plan(plan)
+            name = getattr(cfg, "name", plan.network)
+            path = plan.save(out_dir / f"{name}_{target}.json")
+            print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,242 @@
+"""DeploymentPlan — the serializable planner output + the keyed plan cache.
+
+A plan is a pure-data record: the consumers (``models/edge.py``,
+``serve/engine.py``, the benchmarks) execute it without re-running any
+search.  The JSON schema (version ``PLAN_SCHEMA_VERSION``):
+
+.. code-block:: json
+
+    {
+      "schema": 1, "network": "jet_tagger", "target": "tpu",
+      "batch": 8, "key": "<sha256 over config+hardware+planner-version>",
+      "layers": [
+        {"index": 0, "name": "dense0", "n_in": 16, "n_out": 64,
+         "regime": "tiled", "lare": 1.7,
+         "spatial": {"p_k": 1, "p_n": 1, "band": 1},
+         "api_tile": [32, 128, 128],
+         "fuse_group": 0, "est_latency_s": 2.4e-06,
+         "est_interval_s": 1.1e-06, "rules": ["DR1'(block=(32, 128, 128))"]},
+        ...
+      ],
+      "boundaries": [{"after_layer": 2, "crossing_s": 3.1e-06,
+                      "from_regime": "tiled", "to_regime": "pipeline"}],
+      "totals": {"est_latency_s": ..., "est_interval_s": ...,
+                 "inferences_per_s": ...},
+      "serve": {"quantize_weights": true, "prefill_chunk": null}
+    }
+
+``plan_key`` hashes the *inputs* of planning (layer shapes, batch, target,
+every hardware-model constant, planner version), so a cache hit is exactly
+"same question asked again" — re-parameterizing ``hw.py`` or bumping the
+planner invalidates stale artifacts automatically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+
+PLAN_SCHEMA_VERSION = 1
+PLANNER_VERSION = "plan-1"      # bump on any search/cost-model change
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    index: int
+    name: str
+    n_in: int
+    n_out: int
+    regime: str                  # aie path: "pl"|"aie"; tpu: "pipeline"|"tiled"
+    lare: float                  # the metric value that drove the decision
+    p_k: int
+    p_n: int
+    band: int                    # 1-based band the layer's columns land in
+    api_tile: tuple[int, int, int]   # AIE: mmul shape; TPU: Pallas blocks
+    fuse_group: int              # launch-fusion group id (DR7')
+    est_latency_s: float
+    est_interval_s: float
+    act: str = "none"
+    repeat: int = 1
+    rules: tuple[str, ...] = ()
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["api_tile"] = list(self.api_tile)
+        d["rules"] = list(self.rules)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LayerPlan":
+        d = dict(d)
+        d["api_tile"] = tuple(d["api_tile"])
+        d["rules"] = tuple(d.get("rules", ()))
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundaryPlan:
+    after_layer: int
+    from_regime: str
+    to_regime: str
+    crossing_s: float
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BoundaryPlan":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentPlan:
+    network: str
+    target: str                  # "aie" (paper-faithful) | "tpu" (executable)
+    batch: int
+    key: str
+    layers: tuple[LayerPlan, ...]
+    boundaries: tuple[BoundaryPlan, ...]
+    est_latency_s: float
+    est_interval_s: float
+    serve: dict = dataclasses.field(default_factory=dict)
+    schema: int = PLAN_SCHEMA_VERSION
+
+    @property
+    def inferences_per_s(self) -> float:
+        return self.batch / self.est_interval_s if self.est_interval_s else 0.0
+
+    def layer(self, index: int) -> LayerPlan:
+        return self.layers[index]
+
+    def regimes(self) -> list[str]:
+        return [l.regime for l in self.layers]
+
+    # -- serialization ----------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "schema": self.schema,
+            "network": self.network,
+            "target": self.target,
+            "batch": self.batch,
+            "key": self.key,
+            "layers": [l.to_dict() for l in self.layers],
+            "boundaries": [b.to_dict() for b in self.boundaries],
+            "totals": {
+                "est_latency_s": self.est_latency_s,
+                "est_interval_s": self.est_interval_s,
+                "inferences_per_s": self.inferences_per_s,
+            },
+            "serve": dict(self.serve),
+        }
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DeploymentPlan":
+        if d.get("schema") != PLAN_SCHEMA_VERSION:
+            raise ValueError(f"unsupported plan schema: {d.get('schema')!r}")
+        return cls(
+            network=d["network"], target=d["target"], batch=d["batch"],
+            key=d["key"],
+            layers=tuple(LayerPlan.from_dict(l) for l in d["layers"]),
+            boundaries=tuple(BoundaryPlan.from_dict(b)
+                             for b in d["boundaries"]),
+            est_latency_s=d["totals"]["est_latency_s"],
+            est_interval_s=d["totals"]["est_interval_s"],
+            serve=dict(d.get("serve", {})),
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "DeploymentPlan":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str | os.PathLike) -> pathlib.Path:
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(self.to_json() + "\n")
+        return p
+
+    @classmethod
+    def load(cls, path: str | os.PathLike) -> "DeploymentPlan":
+        return cls.from_json(pathlib.Path(path).read_text())
+
+
+# ---------------------------------------------------------------------------
+# Plan keying + cache
+# ---------------------------------------------------------------------------
+
+def _hw_fingerprint(hw_obj) -> dict:
+    """Stable dict of a hardware dataclass's scalar constants."""
+    out = {"class": type(hw_obj).__name__}
+    for f in dataclasses.fields(hw_obj):
+        v = getattr(hw_obj, f.name)
+        out[f.name] = list(v) if isinstance(v, tuple) else v
+    return out
+
+
+def plan_key(graph, target: str, hw_objs: tuple, extra: dict | None = None) -> str:
+    """sha256 over everything the planner's answer depends on."""
+    payload = {
+        "planner": PLANNER_VERSION,
+        "network": graph.name,
+        "kind": graph.kind,
+        "batch": graph.batch,
+        "target": target,
+        "layers": [[n.name, n.n_in, n.n_out, n.act, n.repeat, n.itemsize]
+                   for n in graph.nodes],
+        "hw": [_hw_fingerprint(h) for h in hw_objs],
+        "extra": extra or {},
+    }
+    blob = json.dumps(payload, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+class PlanCache:
+    """In-memory + optional on-disk plan cache keyed on :func:`plan_key`.
+
+    Disk layout: ``<dir>/<key>.json`` — one artifact per key, content equal
+    to ``DeploymentPlan.to_json()``, so cached files double as the CLI's
+    emitted artifacts.
+    """
+
+    def __init__(self, directory: str | os.PathLike | None = None):
+        self._mem: dict[str, DeploymentPlan] = {}
+        self.directory = pathlib.Path(directory) if directory else None
+
+    def get(self, key: str) -> DeploymentPlan | None:
+        if key in self._mem:
+            return self._mem[key]
+        if self.directory is not None:
+            p = self.directory / f"{key}.json"
+            if p.exists():
+                plan = DeploymentPlan.load(p)
+                self._mem[key] = plan
+                return plan
+        return None
+
+    def put(self, plan: DeploymentPlan) -> DeploymentPlan:
+        self._mem[plan.key] = plan
+        if self.directory is not None:
+            plan.save(self.directory / f"{plan.key}.json")
+        return plan
+
+    def clear(self):
+        self._mem.clear()
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+
+_DEFAULT_CACHE: PlanCache | None = None
+
+
+def default_cache() -> PlanCache:
+    """Process-wide cache; set ``REPRO_PLAN_CACHE_DIR`` to persist to disk."""
+    global _DEFAULT_CACHE
+    if _DEFAULT_CACHE is None:
+        _DEFAULT_CACHE = PlanCache(os.environ.get("REPRO_PLAN_CACHE_DIR"))
+    return _DEFAULT_CACHE

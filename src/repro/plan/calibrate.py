@@ -1,0 +1,87 @@
+"""Calibrate a TPU machine model against THIS host's measured kernel path.
+
+The planner's latency estimates come from a :class:`~repro.hw.TpuV5e`
+instance.  On a real v5e the stock constants apply; on the CPU smoke path
+(Pallas ``interpret=True``) every launch is dominated by the interpreter, so
+planned-vs-measured comparisons need a machine model whose *throughput* and
+*per-launch overhead* describe the interpreter, not the MXU.
+
+:func:`calibrated_cpu_model` times jitted multi-launch int8 pipelines — the
+same shape of computation the plan executor runs — at several (depth, width)
+points, least-squares fits ``t = launches * overhead + padded_ops / peak``,
+and returns a ``TpuV5e`` with those constants substituted.  ``padded_ops``
+(not logical FLOPs) is the regressor because ``plan_api``'s efficiency term
+is exactly the padding-waste product: fitting logical ops would double-count
+the waste.  Everything else (the planner search, the plan schema, the
+executors) is unchanged — which is the point: one decision procedure,
+re-parameterized per substrate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro import hw as hwlib
+
+_BM, _BK, _BN = 32, 128, 128
+
+
+def _time_call(fn, *args, iters: int = 5) -> float:
+    import jax
+    jax.block_until_ready(fn(*args))      # warmup / compile
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return ((x + q - 1) // q) * q
+
+
+def calibrated_cpu_model(*, batch: int = 8,
+                         base: hwlib.TpuV5e = hwlib.TPU_V5E) -> hwlib.TpuV5e:
+    """Fit (kernel_overhead_s, effective peak) to measured interpret-mode
+    int8 GEMM pipelines and return the re-parameterized machine model."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import ops as kops
+
+    def pipeline(width: int, depth: int):
+        ws = jnp.ones((depth, width, width), jnp.int8)
+        sc = jnp.ones((width,), jnp.float32)
+        bk = bn = min(_ceil_to(width, 128), 512)
+
+        @jax.jit
+        def f(x):
+            h = x
+            for i in range(depth):
+                y = kops.gemm_int8(h, ws[i], sc, 1.0, block_m=_BM,
+                                   block_k=bk, block_n=bn,
+                                   out_dtype=jnp.float32)
+                h = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+            return h
+
+        x = jnp.ones((batch, width), jnp.int8)
+        ops = depth * 2.0 * _ceil_to(batch, _BM) \
+            * _ceil_to(width, bk) * _ceil_to(width, bn)
+        return _time_call(f, x), depth, ops
+
+    points = [pipeline(128, 2), pipeline(128, 6), pipeline(512, 2)]
+    a = np.array([[float(d), ops] for _, d, ops in points])
+    t = np.array([ti for ti, _, _ in points])
+    (overhead, inv_peak), *_ = np.linalg.lstsq(a, t, rcond=None)
+    peak = 1.0 / inv_peak if inv_peak > 1e-15 else 1e12
+    overhead = max(float(overhead), 1e-6)
+    return dataclasses.replace(
+        base,
+        peak_int8_ops=max(peak, 1e6),
+        peak_bf16_flops=max(peak / 2, 5e5),
+        hbm_bw=1e15,                      # interpreter is compute/overhead-bound
+        kernel_overhead_s=overhead,
+    )

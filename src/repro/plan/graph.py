@@ -1,0 +1,100 @@
+"""Per-layer dataflow graphs — the planner's input representation.
+
+The planner does not walk model code; it walks a :class:`DataflowGraph` of
+:class:`LayerNode` s.  Two front-ends build graphs:
+
+* :func:`edge_graph` — from an ``EdgeConfig`` (the paper's Table-I dense
+  pipelines): one node per dense layer, batch-8, int8 deployment datatype.
+* :func:`model_graph` — from a ``ModelConfig`` (the LM serving surface): one
+  node per *distinct GEMM* of a decode step (wq/wk/wv/wo, the MLP matrices),
+  annotated with the per-block repeat count so the planner prices a whole
+  block and multiplies out.
+
+Nodes carry everything the planner needs (operand extents, activation bytes,
+weight bytes, MAC count) and nothing execution-specific; regimes and tile
+shapes are the planner's output, not the graph's.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerNode:
+    """One GEMM-shaped stage of the pipeline."""
+    index: int
+    name: str
+    n_in: int
+    n_out: int
+    act: str = "none"            # activation fused after the GEMM
+    repeat: int = 1              # identical instances (LM: num_layers)
+    itemsize: int = 1            # deployment datatype bytes (int8 default)
+
+    @property
+    def macs(self) -> int:
+        return self.n_in * self.n_out
+
+    def in_bytes(self, batch: int) -> int:
+        return batch * self.n_in * self.itemsize
+
+    def out_bytes(self, batch: int) -> int:
+        # Activations hand off in f32 before requantization.
+        return batch * self.n_out * 4
+
+    def weight_bytes(self) -> int:
+        return self.n_in * self.n_out * self.itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class DataflowGraph:
+    name: str
+    batch: int
+    nodes: tuple[LayerNode, ...]
+    kind: str = "edge"           # "edge" | "lm"
+
+    @property
+    def macs(self) -> int:
+        return sum(n.macs * n.repeat for n in self.nodes)
+
+    def __iter__(self) -> Iterable[LayerNode]:
+        return iter(self.nodes)
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+
+def edge_graph(cfg) -> DataflowGraph:
+    """Graph of an ``EdgeConfig`` dense pipeline (one node per layer)."""
+    nodes = []
+    last = len(cfg.layer_shapes) - 1
+    for i, (n_in, n_out) in enumerate(cfg.layer_shapes):
+        nodes.append(LayerNode(
+            index=i, name=f"dense{i}", n_in=n_in, n_out=n_out,
+            act=cfg.act if i != last else "none", itemsize=1))
+    return DataflowGraph(name=cfg.name, batch=cfg.batch, nodes=tuple(nodes),
+                         kind="edge")
+
+
+def model_graph(cfg, *, batch: int = 1) -> DataflowGraph:
+    """Graph of a ``ModelConfig`` decode step: the distinct per-block GEMMs.
+
+    LM weights deploy in bf16 unless the planner's quantization rule flips a
+    node to int8, so nodes carry ``itemsize=2`` here.
+    """
+    d, layers = cfg.d_model, cfg.num_layers
+    nodes = [
+        LayerNode(0, "attn.wq", d, cfg.q_dim, repeat=layers, itemsize=2),
+        LayerNode(1, "attn.wk", d, cfg.kv_dim, repeat=layers, itemsize=2),
+        LayerNode(2, "attn.wv", d, cfg.kv_dim, repeat=layers, itemsize=2),
+        LayerNode(3, "attn.wo", cfg.q_dim, d, repeat=layers, itemsize=2),
+    ]
+    n_mlp_in = 2 if cfg.mlp_gated else 1
+    d_ff = cfg.moe.d_ff_expert if cfg.moe is not None else cfg.d_ff
+    nodes.append(LayerNode(4, "mlp.in", d, d_ff * n_mlp_in, repeat=layers,
+                           itemsize=2))
+    nodes.append(LayerNode(5, "mlp.out", d_ff, d, repeat=layers, itemsize=2))
+    nodes.append(LayerNode(6, "unemb", d, cfg.padded_vocab, itemsize=2))
+    return DataflowGraph(name=cfg.name, batch=batch, nodes=tuple(nodes),
+                         kind="lm")

@@ -1,0 +1,363 @@
+"""The deployment planner: compose LARE (Alg. 1), two-level tiling (Alg. 2),
+column-exhaustion/band constraints (Figs. 5/6) and boundary-crossing costs
+(DR7) into one decision procedure over a :class:`~repro.plan.graph.DataflowGraph`.
+
+Two targets:
+
+* ``target="aie"`` — the paper-faithful path.  Every layer runs LARE and is
+  assigned PL (spatial dataflow at the cheapest reuse factor that fits the
+  budget) or AIE (spatial ``P_K x P_N`` tiling + best ``aie::mmul`` API
+  shape).  AIE layers then compete for array columns: when the summed ``P_K``
+  exhausts ``usable_cols`` the planner first tries to *shrink* the split
+  whose interval suffers least, and only spills into a second band when
+  shrinking costs more than the Fig.-6 contention penalty.  PL<->AIE
+  transitions are charged the Fig.-7 crossing cost.
+
+* ``target="tpu"`` — the executable path.  LARE's TPU analogue
+  (:func:`repro.core.lare.lare_tpu`) decides pipelined-cores vs tiled-Pallas
+  per layer; API-level tiles come from :func:`repro.core.tiling.plan_api`
+  (these are the Pallas block shapes ``models/edge.py`` executes); launches
+  are grouped by the DR7' fusion DP and every group boundary is charged the
+  HBM-round-trip + dispatch cost.
+
+Both emit the same :class:`~repro.plan.artifact.DeploymentPlan` schema.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro import hw as hwlib
+from repro.core import boundary, lare, tiling
+from repro.plan.artifact import (BoundaryPlan, DeploymentPlan, LayerPlan,
+                                 default_cache, plan_key)
+from repro.plan.graph import DataflowGraph, edge_graph, model_graph
+
+# Per-layer spatial split candidates on the AIE array (paper Fig. 5 sweep).
+_AIE_SPLITS = (1, 2, 3, 4, 6, 8)
+_AIE_MAX_TILES_PER_LAYER = 12
+
+
+def as_graph(cfg, *, batch: int | None = None) -> DataflowGraph:
+    """Accept an EdgeConfig, a ModelConfig, or an already-built graph."""
+    if isinstance(cfg, DataflowGraph):
+        return cfg
+    if hasattr(cfg, "layer_shapes") and hasattr(cfg, "dims"):
+        return edge_graph(cfg)
+    if hasattr(cfg, "family"):
+        return model_graph(cfg, batch=batch or 1)
+    raise TypeError(f"cannot build a dataflow graph from {type(cfg)!r}")
+
+
+# ---------------------------------------------------------------------------
+# AIE path (paper-faithful)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _AieChoice:
+    """One (P_K, P_N, api tile) candidate for a layer, pre-penalty."""
+    interval_s: float
+    latency_s: float
+    p_k: int
+    p_n: int
+    s: tuple[int, int, int]
+
+
+def _aie_candidates(batch: int, n_in: int, n_out: int,
+                    aie: hwlib.AieMl) -> list[_AieChoice]:
+    """Legal split candidates sorted fastest-first (DR3/DR5 constraints)."""
+    out: list[_AieChoice] = []
+    for p_k in _AIE_SPLITS:
+        for p_n in _AIE_SPLITS:
+            if p_k * p_n > _AIE_MAX_TILES_PER_LAYER or p_n > aie.rows \
+                    or p_k > aie.usable_cols:
+                continue
+            q_k, q_n = math.ceil(n_in / p_k), math.ceil(n_out / p_n)
+            # DR5: floors on the dims being split.
+            if (p_k > 1 and q_k < 16) or (p_n > 1 and q_n < 32):
+                continue
+            best_s, best_i = None, float("inf")
+            for s in aie.legal_api_tiles_i8:
+                t = tiling.aie_tile_interval(batch, q_k, q_n, s, aie)
+                if t < best_i:
+                    best_s, best_i = s, t
+            assert best_s is not None
+            out.append(_AieChoice(
+                interval_s=tiling.aie_spatial_interval(
+                    batch, n_in, n_out, p_k, p_n, best_s, aie=aie),
+                latency_s=tiling.aie_spatial_latency(
+                    batch, n_in, n_out, p_k, p_n, best_s, aie=aie),
+                p_k=p_k, p_n=p_n, s=best_s))
+    out.sort(key=lambda c: (c.interval_s, c.p_k * c.p_n))
+    return out
+
+
+def _resolve_columns(chosen: dict[int, _AieChoice],
+                     cands: dict[int, list[_AieChoice]],
+                     aie: hwlib.AieMl) -> dict[int, int]:
+    """Column-exhaustion resolution: shrink cheap splits until the summed
+    ``P_K`` fits one band, unless shrinking costs more than spilling
+    (Fig. 6).  Returns {layer index: band} and mutates ``chosen``."""
+
+    def cols() -> int:
+        return sum(c.p_k for c in chosen.values())
+
+    spill_interval = _spilled_worst_interval(chosen, aie)
+    while cols() > aie.usable_cols:
+        # Cheapest single-layer shrink that reduces column usage.
+        best_li, best_alt, best_cost = None, None, float("inf")
+        for li, cur in chosen.items():
+            for alt in cands[li]:
+                if alt.p_k < cur.p_k:
+                    cost = alt.interval_s - cur.interval_s
+                    if cost < best_cost:
+                        best_li, best_alt, best_cost = li, alt, cost
+                    break            # candidates are sorted; first is cheapest
+        if best_li is None:
+            break                    # nothing shrinkable: must spill
+        # Worst interval if we shrink vs worst interval if we stop and spill.
+        trial = dict(chosen)
+        trial[best_li] = best_alt
+        shrink_worst = max(c.interval_s for c in trial.values())
+        if shrink_worst > spill_interval:
+            break                    # DR6: the band-2 penalty is cheaper
+        chosen[best_li] = best_alt
+    # Assign bands by cumulative column occupancy in layer order.
+    bands: dict[int, int] = {}
+    col = 0
+    for li in sorted(chosen):
+        c = chosen[li]
+        band = 1 if col + c.p_k <= aie.usable_cols else 2
+        bands[li] = band
+        col += c.p_k
+    return bands
+
+
+def _spilled_worst_interval(chosen: dict[int, _AieChoice],
+                            aie: hwlib.AieMl) -> float:
+    """Worst-layer interval if the current overflow goes to band 2 as-is."""
+    col, n_spilled = 0, 0
+    for li in sorted(chosen):
+        if col + chosen[li].p_k > aie.usable_cols:
+            n_spilled += 1
+        col += chosen[li].p_k
+    worst = 0.0
+    col = 0
+    for li in sorted(chosen):
+        c = chosen[li]
+        t = c.interval_s
+        if col + c.p_k > aie.usable_cols:
+            t *= 1.0 + tiling._AIE_BAND_PENALTY * n_spilled
+        col += c.p_k
+        worst = max(worst, t)
+    return worst
+
+
+def _plan_aie(graph: DataflowGraph, *, pl_budget: float,
+              pl: hwlib.PlFabric, aie: hwlib.AieMl,
+              key: str) -> DeploymentPlan:
+    batch = graph.batch
+    lares = {n.index: lare.lare(n.n_in, n.n_out, batch=batch, pl=pl, aie=aie)
+             for n in graph}
+    regimes = {i: r.decide(pl_budget) for i, r in lares.items()}
+
+    # PL layers: cheapest interval whose resources fit the budget.
+    pl_plans: dict[int, tuple[int, float, float]] = {}   # i -> (rf, ival, lat)
+    for node in graph:
+        if regimes[node.index] != "pl":
+            continue
+        pick = None
+        for rf in pl.legal_reuse_factors(node.n_in, node.n_out):
+            res = pl.resources(node.n_in, node.n_out, rf)
+            if pl.fits(res) and pl.resource_scalar(res) <= pl_budget:
+                pick = rf
+                break                                   # rfs ascend: min II
+        if pick is None:        # budget can't actually host it: send to AIE
+            regimes[node.index] = "aie"
+            continue
+        pl_plans[node.index] = (pick, pl.interval_s(pick),
+                                pl.latency_s(node.n_in, node.n_out, pick,
+                                             batch))
+
+    # AIE layers: spatial-split search + column-exhaustion resolution.
+    cands = {n.index: _aie_candidates(batch, n.n_in, n.n_out, aie)
+             for n in graph if regimes[n.index] == "aie"}
+    chosen = {i: c[0] for i, c in cands.items()}
+    bands = _resolve_columns(chosen, cands, aie)
+    n_band2 = sum(1 for b in bands.values() if b > 1)
+
+    layers: list[LayerPlan] = []
+    for node in graph:
+        i = node.index
+        rules: list[str] = []
+        if regimes[i] == "pl":
+            rf, ival, lat = pl_plans[i]
+            rules.append(f"LARE={lares[i].lare:.1f}<=budget -> PL(rf={rf})")
+            layers.append(LayerPlan(
+                index=i, name=node.name, n_in=node.n_in, n_out=node.n_out,
+                regime="pl", lare=lares[i].lare, p_k=1, p_n=1, band=0,
+                api_tile=(0, 0, 0), fuse_group=i, est_latency_s=lat,
+                est_interval_s=ival, act=node.act, repeat=node.repeat,
+                rules=tuple(rules)))
+            continue
+        c, band = chosen[i], bands[i]
+        penalty = (1.0 + tiling._AIE_BAND_PENALTY * n_band2) if band > 1 else 1.0
+        rules.append(f"LARE={lares[i].lare:.1f}>budget -> AIE")
+        if c.p_k > 1:
+            rules.append(f"DR3(K-expansion P_K={c.p_k})")
+        rules.append(f"DR1(api={c.s})")
+        if band > 1:
+            rules.append(f"DR6(band-2 spill, {n_band2} layers)")
+        layers.append(LayerPlan(
+            index=i, name=node.name, n_in=node.n_in, n_out=node.n_out,
+            regime="aie", lare=lares[i].lare, p_k=c.p_k, p_n=c.p_n, band=band,
+            api_tile=c.s, fuse_group=i, est_latency_s=c.latency_s * penalty,
+            est_interval_s=c.interval_s * penalty, act=node.act,
+            repeat=node.repeat, rules=tuple(rules)))
+
+    # Boundary charges at every PL<->AIE transition (DR7 / Fig. 7).
+    base_latency = sum(l.est_latency_s for l in layers)
+    boundaries: list[BoundaryPlan] = []
+    for prev, nxt in zip(layers, layers[1:]):
+        if prev.regime != nxt.regime:
+            boundaries.append(BoundaryPlan(
+                after_layer=prev.index, from_regime=prev.regime,
+                to_regime=nxt.regime,
+                crossing_s=boundary.crossing_cost_aie(
+                    graph.nodes[prev.index].out_bytes(batch), base_latency,
+                    aie=aie)))
+
+    est_latency = base_latency + sum(b.crossing_s for b in boundaries)
+    est_interval = max(l.est_interval_s for l in layers)
+    return DeploymentPlan(
+        network=graph.name, target="aie", batch=batch, key=key,
+        layers=tuple(layers), boundaries=tuple(boundaries),
+        est_latency_s=est_latency, est_interval_s=est_interval,
+        serve={"quantize_weights": True, "prefill_chunk": None})
+
+
+# ---------------------------------------------------------------------------
+# TPU path (executable)
+# ---------------------------------------------------------------------------
+
+def _plan_tpu(graph: DataflowGraph, *, pipeline_core_budget: int,
+              tpu: hwlib.TpuV5e, key: str) -> DeploymentPlan:
+    batch = graph.batch
+    layers: list[LayerPlan] = []
+    stages: list[boundary.Stage] = []
+    quantize = False
+    for node in graph:
+        itemsize = node.itemsize
+        rt = lare.lare_tpu(node.n_in, node.n_out, batch=batch,
+                           itemsize=itemsize, tpu=tpu,
+                           max_cores=max(pipeline_core_budget, 1))
+        regime = rt.decide(pipeline_core_budget)
+        # inf == "no pipeline width matches the tiled kernel" — store -1 so
+        # the artifact stays strict JSON.
+        core_eq = rt.core_eq if math.isfinite(rt.core_eq) else -1.0
+        api = tiling.plan_api(batch, node.n_in, node.n_out,
+                              itemsize=itemsize, tpu=tpu)
+        rules = [f"core_eq={core_eq:.1f} -> {regime}",
+                 f"DR1'(block={api.blocks})"]
+        if api.block_n >= api.block_k:
+            rules.append("DR2'(N-favored)")
+        if node.macs >= 1 << 16:
+            quantize = True
+        layers.append(LayerPlan(
+            index=node.index, name=node.name, n_in=node.n_in,
+            n_out=node.n_out, regime=regime, lare=core_eq, p_k=1, p_n=1,
+            band=1, api_tile=api.blocks, fuse_group=0,
+            est_latency_s=api.est_s, est_interval_s=api.est_s,
+            act=node.act, repeat=node.repeat, rules=tuple(rules)))
+        stages.append(boundary.Stage(
+            name=node.name, compute_s=api.est_s,
+            out_bytes=node.out_bytes(batch), vmem_bytes=api.vmem_bytes))
+
+    # DR7' launch fusion: group layers whose working sets co-reside in VMEM.
+    groups = boundary.plan_fusion(stages, tpu=tpu)
+    layers = [dataclasses.replace(l, fuse_group=g,
+                                  rules=l.rules + ((f"DR7'(fuse_group={g})",)))
+              for l, g in zip(layers, groups)]
+
+    boundaries: list[BoundaryPlan] = []
+    for prev, nxt in zip(layers, layers[1:]):
+        if prev.fuse_group != nxt.fuse_group or prev.regime != nxt.regime:
+            boundaries.append(BoundaryPlan(
+                after_layer=prev.index, from_regime=prev.regime,
+                to_regime=nxt.regime,
+                crossing_s=boundary.crossing_cost_tpu(
+                    graph.nodes[prev.index].out_bytes(batch), tpu)))
+
+    per_layer = [l.est_latency_s * l.repeat for l in layers]
+    est_latency = sum(per_layer) + sum(b.crossing_s for b in boundaries) \
+        + tpu.kernel_overhead_s        # chain entry dispatch
+    all_pipeline = all(l.regime == "pipeline" for l in layers)
+    est_interval = max(per_layer) if all_pipeline else est_latency
+    return DeploymentPlan(
+        network=graph.name, target="tpu", batch=batch, key=key,
+        layers=tuple(layers), boundaries=tuple(boundaries),
+        est_latency_s=est_latency, est_interval_s=est_interval,
+        serve={"quantize_weights": quantize, "prefill_chunk": None,
+               "decode_regime": ("pipeline" if all_pipeline else "tiled")})
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+_DEFAULTS = {
+    "pl_budget": 400.0,
+    "pipeline_core_budget": 8,
+    "pl": hwlib.PL_FABRIC,
+    "aie": hwlib.AIE_ML,
+    "tpu": hwlib.TPU_V5E,
+}
+
+
+def _resolve(kw: dict) -> dict:
+    """Planner knobs with defaults applied — the single source of truth, so
+    the cache key and the search can never disagree."""
+    unknown = set(kw) - set(_DEFAULTS)
+    if unknown:
+        raise TypeError(f"unknown planner option(s): {sorted(unknown)}")
+    return {**_DEFAULTS, **kw}
+
+
+def _key_for(graph: DataflowGraph, target: str, opts: dict) -> str:
+    if target == "aie":
+        return plan_key(graph, target, (opts["pl"], opts["aie"]),
+                        {"pl_budget": opts["pl_budget"]})
+    if target == "tpu":
+        return plan_key(graph, target, (opts["tpu"],),
+                        {"pipeline_core_budget": opts["pipeline_core_budget"]})
+    raise ValueError(f"unknown target {target!r} (want 'aie' or 'tpu')")
+
+
+def plan_deployment(cfg, *, target: str = "tpu", batch: int | None = None,
+                    **kw) -> DeploymentPlan:
+    """Plan one deployment.  ``cfg`` is an EdgeConfig, ModelConfig or graph.
+
+    Keyword knobs (all optional): ``pl_budget``, ``pipeline_core_budget``,
+    and the hardware models ``pl``/``aie``/``tpu``.
+    """
+    graph = as_graph(cfg, batch=batch)
+    opts = _resolve(kw)
+    key = _key_for(graph, target, opts)
+    if target == "aie":
+        return _plan_aie(graph, pl_budget=opts["pl_budget"], pl=opts["pl"],
+                         aie=opts["aie"], key=key)
+    return _plan_tpu(graph,
+                     pipeline_core_budget=opts["pipeline_core_budget"],
+                     tpu=opts["tpu"], key=key)
+
+
+def get_or_plan(cfg, *, target: str = "tpu", cache=None, **kw) -> DeploymentPlan:
+    """Cache-aware :func:`plan_deployment` (the consumers' entry point)."""
+    cache = cache if cache is not None else default_cache()
+    graph = as_graph(cfg, batch=kw.pop("batch", None))
+    key = _key_for(graph, target, _resolve(kw))
+    hit = cache.get(key)
+    if hit is not None:
+        return hit
+    return cache.put(plan_deployment(graph, target=target, **kw))

@@ -7,9 +7,10 @@ Two serving surfaces:
   decode steps with TP-sharded weights and head/batch-sharded caches, driven
   by a continuous-batching scheduler (fixed slot count, admit-on-free).
 * **Edge serving** (the paper's own regime): batch-8, weights-on-chip int8
-  dense pipelines deployed through the two-level tiling plan + fused Pallas
-  kernels (`models/edge.py`), with the LARE decision rule choosing the
-  execution regime per layer.
+  dense pipelines executed through a compiled :class:`DeploymentPlan`
+  (``repro.plan``): LARE chooses each layer's regime, the two-level tiling
+  search fixes the Pallas block shapes, and :class:`EdgeEngine` runs the
+  result — no hard-coded tiles or regime flags in this module.
 """
 
 from __future__ import annotations
@@ -84,17 +85,41 @@ def quantized_bytes(params: Any) -> tuple[int, int]:
 # Step builders
 # ---------------------------------------------------------------------------
 
+def prepare_params(params: Any, *, plan=None, quantize: bool = False) -> Any:
+    """Apply the plan's weight-format decision (int8 vs bf16) to params."""
+    if plan is not None:
+        quantize = bool(plan.serve.get("quantize_weights", quantize))
+    return quantize_params(params) if quantize else params
+
+
 def build_serve_steps(cfg: ModelConfig, *, max_len: int,
-                      quantize: bool = False):
+                      quantize: bool = False, plan=None):
     """Returns (prefill_fn, decode_fn) — pure functions ready for jit.
 
     prefill_fn(params, tokens, state)        -> (logits_last, state)
     decode_fn(params, tokens, state, pos)    -> (logits, state)
+
+    Execution policy comes from the :class:`DeploymentPlan` when one is
+    given (``repro.plan.get_or_plan(cfg, target="tpu")``): the plan's
+    ``serve`` section selects prefill chunking, and its weight-format
+    decision is applied by :func:`prepare_params`, instead of ad-hoc flags
+    at every call site.
     """
+    chunk = None
+    if plan is not None:
+        chunk = plan.serve.get("prefill_chunk")
 
     def prefill_fn(params, tokens, state, extras=None):
-        logits, state = api.decode_step(params, cfg, tokens, state, 0,
-                                        extras=extras or {})
+        s = tokens.shape[1]
+        if chunk is None or s <= chunk:
+            logits, state = api.decode_step(params, cfg, tokens, state, 0,
+                                            extras=extras or {})
+            return logits[:, -1:], state
+        logits = None
+        for off in range(0, s, chunk):       # unrolled at trace time
+            logits, state = api.decode_step(
+                params, cfg, tokens[:, off:off + chunk], state, off,
+                extras=extras or {})
         return logits[:, -1:], state
 
     def decode_fn(params, tokens, state, pos, extras=None):
@@ -133,25 +158,77 @@ class ContinuousBatcher:
         self.pos = np.zeros((slots,), np.int32)
         self.active: list[Request | None] = [None] * slots
         self.queue: "queue.Queue[Request]" = queue.Queue()
+
+        # Per-slot decode: vmap over the slot axis so every slot advances at
+        # ITS OWN cache position (staggered admissions must not share a
+        # cursor), with `live` masking state writes so idle slots stay
+        # byte-identical (recurrent families have no overwritable cache).
+        # The batch axis is not uniform across state leaves (layer-stacked
+        # caches carry it at axis 1, unstacked tails at axis 0): recover it
+        # per leaf by diffing specs at two batch sizes.
+        s1 = api.decode_state_specs(cfg, 1, max_len)
+        s2 = api.decode_state_specs(cfg, 2, max_len)
+
+        def batch_axis(a, b):
+            for ax, (x, y) in enumerate(zip(a.shape, b.shape)):
+                if x != y:
+                    return ax
+            return 0
+
+        axes = self._axes = jax.tree.map(batch_axis, s1, s2)
+
+        def decode_one(p, tok, state, pos, live):
+            state_b = jax.tree.map(lambda v, ax: jnp.expand_dims(v, ax),
+                                   state, axes)
+            logits, new_state = api.decode_step(p, cfg, tok.reshape(1, 1),
+                                                state_b, pos)
+            new_state = jax.tree.map(
+                lambda old, new, ax: jnp.where(live, jnp.squeeze(new, ax),
+                                               old),
+                state, new_state, axes)
+            return logits[0], new_state
+
         self._decode = jax.jit(
-            lambda p, t, s, pos: api.decode_step(p, cfg, t, s, pos))
+            jax.vmap(decode_one, in_axes=(None, 0, axes, 0, 0),
+                     out_axes=(0, axes)))
         self._steps = 0
 
     def submit(self, req: Request):
         self.queue.put(req)
 
+    def _decode_masked(self, tok: np.ndarray, live: np.ndarray):
+        # Snapshot the host buffers: CPU device_put can alias numpy memory
+        # zero-copy while dispatch is async, so handing jax the live buffers
+        # (mutated by the admit/step loops) races.  The copies are local to
+        # this call and never mutated.
+        logits, self.state = self._decode(
+            self.params, np.array(tok[:, 0]), self.state,
+            self.pos.copy(), live.copy())
+        return logits
+
+    def _reset_slot(self, i: int):
+        """Fresh cache + position for a re-used slot (no stale KV)."""
+        self.state = jax.tree.map(
+            lambda v, ax: v.at[(slice(None),) * ax + (i,)].set(0),
+            self.state, self._axes)
+        self.pos[i] = 0
+
     def _admit(self):
         for i in range(self.slots):
             if self.active[i] is None and not self.queue.empty():
                 req = self.queue.get()
+                if len(req.prompt) == 0:     # nothing to prefill or decode
+                    req.done = True
+                    continue
+                self._reset_slot(i)
                 # Prefill the slot by stepping its prompt token-by-token
                 # (simple and exact; a chunked prefill is the TPU fast path).
                 tok = np.zeros((self.slots, 1), np.int32)
+                live = np.zeros((self.slots,), bool)
+                live[i] = True
                 for t in req.prompt:
                     tok[i, 0] = t
-                    logits, self.state = self._decode(
-                        self.params, jnp.asarray(tok), self.state,
-                        int(self.pos[i]))
+                    logits = self._decode_masked(tok, live)
                     self.pos[i] += 1
                 req.out.append(int(jnp.argmax(logits[i, -1])))
                 self.active[i] = req
@@ -162,12 +239,12 @@ class ContinuousBatcher:
         if not any(self.active):
             return 0
         tok = np.zeros((self.slots, 1), np.int32)
+        live = np.zeros((self.slots,), bool)
         for i, req in enumerate(self.active):
             if req is not None and req.out:
                 tok[i, 0] = req.out[-1]
-        pos = int(max(self.pos))     # single shared position cursor
-        logits, self.state = self._decode(self.params, jnp.asarray(tok),
-                                          self.state, pos)
+                live[i] = True
+        logits = self._decode_masked(tok, live)
         self._steps += 1
         n_active = 0
         for i, req in enumerate(self.active):
@@ -186,3 +263,47 @@ class ContinuousBatcher:
         while (not self.queue.empty() or any(self.active)) \
                 and self._steps < max_ticks:
             self.step()
+
+
+# ---------------------------------------------------------------------------
+# Edge plan executor (the paper's serving regime)
+# ---------------------------------------------------------------------------
+
+class EdgeEngine:
+    """Executes a :class:`DeploymentPlan` for an extreme-edge net.
+
+    The engine owns the quantized weights and the jitted planned forward
+    (per-layer Pallas block shapes from the plan — nothing here hard-codes a
+    tile), and tracks measured wall time against the plan's estimate so
+    deployments can report planned-vs-measured drift.
+    """
+
+    def __init__(self, cfg, params=None, *, plan=None, x_scale: float = 0.05,
+                 seed: int = 0):
+        from repro.models import edge as edge_lib
+        self.cfg = cfg
+        self.plan = plan if plan is not None else edge_lib.deployment_plan(cfg)
+        if params is None:
+            params = edge_lib.init_edge(jax.random.PRNGKey(seed), cfg)
+        self.qparams = edge_lib.quantize_edge(params)
+        self.x_scale = x_scale
+        self._fwd = jax.jit(lambda x: edge_lib.edge_forward_q8(
+            self.qparams, cfg, x, x_scale=x_scale, plan=self.plan))
+        self.calls = 0
+        self.total_s = 0.0
+
+    def infer(self, x) -> jax.Array:
+        import time
+        t0 = time.perf_counter()
+        y = jax.block_until_ready(self._fwd(x))
+        self.total_s += time.perf_counter() - t0
+        self.calls += 1
+        return y
+
+    @property
+    def planned_latency_s(self) -> float:
+        return self.plan.est_latency_s
+
+    @property
+    def measured_mean_s(self) -> float:
+        return self.total_s / self.calls if self.calls else 0.0

@@ -4,7 +4,8 @@ hypothesis property tests on the planner/metric invariants."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st
 
 from repro import hw as hwlib
 from repro.core import boundary, lare, tiling

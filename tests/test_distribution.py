@@ -83,10 +83,9 @@ def test_cache_specs_cover_state():
 # ---------------------------------------------------------------------------
 
 def test_pipeline_apply_single_stage_exact():
-    mesh = make_host_mesh(data=1, model=1)
-    # rename axes so "pod" exists
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch import mesh as mesh_lib
+    # a 1-device mesh whose axis is named "pod"
+    mesh = mesh_lib.make_mesh((1,), ("pod",))
     L, D = 4, 8
     ws = jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * 0.3
 
@@ -147,7 +146,9 @@ def test_analyzer_counts_collectives_with_groups():
         return jax.lax.psum(x, "data")
 
     x = jnp.ones((8, 128))
-    txt = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+    from repro import compat
+    txt = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+
                                 check_vma=False)).lower(x).compile().as_text()
     r = analyze_hlo(txt)
     # group size 1: wire bytes 0, but op counted

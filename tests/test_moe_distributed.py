@@ -19,8 +19,8 @@ _SCRIPT = textwrap.dedent("""
     from repro.models import moe
     from repro.models.config import ModelConfig, MoEConfig
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     base = ModelConfig(
         name="t", family="transformer", num_layers=1, d_model=32,
         num_heads=4, num_kv_heads=4, head_dim=8, d_ff=64, vocab_size=64,

@@ -23,6 +23,48 @@ def test_quantize_params_marks_big_weights():
     assert after < 0.85 * before
 
 
+def test_quantize_params_roundtrip_error_bound():
+    """Per-channel symmetric int8: |w - dequant(q8)| <= scale/2 elementwise."""
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (128, 768), jnp.float32) * 0.3
+    q = engine.quantize_params({"w": w}, min_size=1024)["w"]
+    assert engine.runtime.is_q8(q)
+    deq = engine.runtime.dequant(q, jnp.float32)
+    err = np.abs(np.asarray(w) - np.asarray(deq))
+    bound = np.asarray(q["scale"]) / 2 + 1e-7
+    assert (err <= bound).all()
+    # Per-output-channel scales: one scale per trailing-dim column.
+    assert q["scale"].shape == (1, 768)
+
+
+def test_quantize_params_exclusions_and_small_leaves():
+    params = {
+        "emb": jnp.ones((256, 512), jnp.float32),        # excluded by name
+        "scale": jnp.ones((512, 512), jnp.float32),      # excluded by name
+        "tiny": jnp.ones((4, 4), jnp.float32),           # below min_size
+        "vec": jnp.ones((1 << 18,), jnp.float32),        # 1-D: never quantized
+        "big": jnp.ones((512, 512), jnp.float32),
+    }
+    q = engine.quantize_params(params, min_size=1024)
+    for name in ("emb", "scale", "tiny", "vec"):
+        assert not engine.runtime.is_q8(q[name]), name
+        assert q[name].dtype == jnp.float32
+    assert engine.runtime.is_q8(q["big"])
+
+
+def test_quantized_bytes_accounting():
+    params = {"big": jnp.ones((512, 512), jnp.float32),
+              "small": jnp.ones((8, 8), jnp.float32)}
+    q = engine.quantize_params(params, min_size=1024)
+    before, after = engine.quantized_bytes(q)
+    # before: everything priced at bf16. after: int8 leaves cost 1 B/elem,
+    # the f32-kept leaf and the scales still price at 2 B/elem.
+    n_big, n_small = 512 * 512, 8 * 8
+    n_scale = 512
+    assert before == 2 * (n_big + n_small + n_scale)
+    assert after == n_big + 2 * (n_small + n_scale)
+
+
 def test_quantized_forward_close_to_float():
     cfg = configs.get("qwen2_5_3b").smoke
     params = api.init(cfg, jax.random.PRNGKey(0))
@@ -51,6 +93,79 @@ def test_continuous_batcher_drains():
     for r in reqs:
         assert r.done and len(r.out) == 4
         assert all(0 <= t < cfg.padded_vocab for t in r.out)
+
+
+def _slot_state(batcher, slot):
+    """Slice one slot's decode state (per-leaf batch axis comes from the
+    batcher's axis map)."""
+    return jax.tree.map(lambda v, ax: np.asarray(jnp.take(v, slot, axis=ax),
+                                                 np.float32),
+                        batcher.state, batcher._axes)
+
+
+def test_continuous_batcher_staggered_admission():
+    """Regression: slots admitted at different ticks must decode at their OWN
+    positions — a shared max-position cursor (the old ``max(self.pos)``)
+    writes a late-admitted slot's KV at the earlier slot's offsets and
+    corrupts its cache.  Token-level outputs are argmax over the random smoke
+    model's near-tie logits (not stable across hosts), so the assertion is on
+    cache state, which is where the bug lived."""
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    prompt_a = np.array([3, 5, 7, 11, 13], np.int32)
+    prompt_b = np.array([2, 9], np.int32)
+
+    # Reference: B served alone (prefill + first token), in slot 0.
+    ref = engine.ContinuousBatcher(cfg, params, slots=2, max_len=64)
+    rb = engine.Request(rid=0, prompt=prompt_b, max_new=1)
+    ref.submit(rb)
+    ref.run_until_drained(max_ticks=10)
+    assert rb.done
+
+    # B admitted two ticks after A (longer prompt -> staggered positions).
+    bat = engine.ContinuousBatcher(cfg, params, slots=2, max_len=64)
+    ra = engine.Request(rid=1, prompt=prompt_a, max_new=8)
+    bat.submit(ra)
+    bat.step()
+    bat.step()
+    rb2 = engine.Request(rid=2, prompt=prompt_b, max_new=1)
+    bat.submit(rb2)
+    bat.step()                       # admits B into slot 1, done after prefill
+    assert rb2.done and not ra.done
+    assert bat.pos[0] != bat.pos[1]  # genuinely staggered cursors
+
+    # B's prefill cache must match the B-alone reference exactly: same
+    # tokens written at the same per-slot positions.
+    ref_b = _slot_state(ref, 0)
+    stag_b = _slot_state(bat, 1)
+    for a, b in zip(jax.tree.leaves(ref_b), jax.tree.leaves(stag_b)):
+        np.testing.assert_allclose(a, b, rtol=1e-2, atol=1e-2)
+
+
+def test_continuous_batcher_slot_reuse_isolated():
+    """A slot re-used by a later request starts from a clean cache (no stale
+    KV from the previous occupant)."""
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    prompt = np.array([4, 8, 15], np.int32)
+
+    ref = engine.ContinuousBatcher(cfg, params, slots=1, max_len=64)
+    r0 = engine.Request(rid=0, prompt=prompt, max_new=1)
+    ref.submit(r0)
+    ref.run_until_drained(max_ticks=10)
+
+    bat = engine.ContinuousBatcher(cfg, params, slots=1, max_len=64)
+    warm = engine.Request(rid=1, prompt=np.array([30, 31, 32, 33], np.int32),
+                          max_new=7)
+    r1 = engine.Request(rid=2, prompt=prompt, max_new=1)
+    bat.submit(warm)
+    bat.submit(r1)
+    bat.run_until_drained(max_ticks=40)
+    assert warm.done and r1.done
+    assert bat.pos[0] == ref.pos[0]  # position cursor restarted from zero
+    for a, b in zip(jax.tree.leaves(_slot_state(ref, 0)),
+                    jax.tree.leaves(_slot_state(bat, 0))):
+        np.testing.assert_allclose(a, b, rtol=1e-2, atol=1e-2)
 
 
 def test_serve_steps_builder():
