@@ -7,7 +7,8 @@
 Every row is ``name,us_per_call,derived`` on stdout (see benchmarks/common.py
 for the model/measured/tpu-model source labels), and each module also writes
 a machine-readable ``BENCH_<name>.json`` snapshot so the perf trajectory is
-tracked across PRs.
+tracked across PRs.  When a previous snapshot exists at the output path,
+``benchmarks/trend.py`` prints per-metric deltas against it after each run.
 """
 
 from __future__ import annotations
@@ -19,7 +20,8 @@ import time
 
 from benchmarks import (common, fig2_scalability, fig3_lare, fig4_api_tiling,
                         fig5_spatial, fig6_column_exhaustion, fig7_boundary,
-                        fig8_planner, table1_deployment)
+                        fig8_planner, fig9_coresidency, table1_deployment,
+                        trend)
 
 ALL = {
     "fig2": fig2_scalability.run,
@@ -29,6 +31,7 @@ ALL = {
     "fig6": fig6_column_exhaustion.run,
     "fig7": fig7_boundary.run,
     "fig8": fig8_planner.run,
+    "fig9": fig9_coresidency.run,
     "table1": table1_deployment.run,
 }
 
@@ -49,6 +52,10 @@ def main(argv: list[str] | None = None) -> None:
         t0 = time.perf_counter()
         ALL[name]()
         path = json_dir / f"BENCH_{name}.json"
+        try:
+            previous = trend.load(path) if path.exists() else None
+        except (ValueError, OSError):       # truncated/corrupt old snapshot
+            previous = None
         common.write_records(str(path), meta={
             "benchmark": name,
             "wall_s": round(time.perf_counter() - t0, 3),
@@ -56,6 +63,8 @@ def main(argv: list[str] | None = None) -> None:
             "python": platform.python_version(),
         })
         print(f"[wrote {path}]")
+        if previous is not None:
+            trend.report(previous, trend.load(path))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,125 @@
+"""BENCH trend tracking: diff benchmark snapshots across PRs.
+
+``benchmarks/run.py`` writes a machine-readable ``BENCH_<name>.json`` per
+benchmark.  This module compares the freshly-written snapshot against the
+previously committed one and prints per-metric deltas, so a perf regression
+shows up in the run log instead of silently replacing the old numbers.
+
+  PYTHONPATH=src python -m benchmarks.trend bench/BENCH_fig8.json
+      # vs the committed version (git show HEAD:<path>)
+  PYTHONPATH=src python -m benchmarks.trend new.json --against old.json
+
+``run.py`` calls :func:`report` automatically whenever a previous snapshot
+exists at the output path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+
+# |delta| beyond this fraction of the old value is flagged.  Model-sourced
+# rows are deterministic, so ANY drift there is worth a look; measured rows
+# jitter with the host.
+REGRESSION_PCT = 25.0
+
+
+def load(path: str | pathlib.Path) -> dict:
+    return json.loads(pathlib.Path(path).read_text())
+
+
+def load_committed(path: str | pathlib.Path) -> dict | None:
+    """The snapshot as last committed (``git show HEAD:<relpath>``), or None
+    when the file is new to the repo / we are not in a work tree."""
+    p = pathlib.Path(path).resolve()
+    try:
+        root = pathlib.Path(subprocess.check_output(
+            ["git", "rev-parse", "--show-toplevel"], cwd=p.parent,
+            text=True, stderr=subprocess.DEVNULL).strip())
+        blob = subprocess.check_output(
+            ["git", "show", f"HEAD:{p.relative_to(root).as_posix()}"],
+            cwd=root, text=True, stderr=subprocess.DEVNULL)
+    except (subprocess.CalledProcessError, OSError, ValueError):
+        return None
+    return json.loads(blob)
+
+
+def compare(old_payload: dict, new_payload: dict) -> list[dict]:
+    """Per-metric deltas between two snapshots, keyed by row name."""
+    old = {r["name"]: r for r in old_payload.get("rows", [])}
+    new = {r["name"]: r for r in new_payload.get("rows", [])}
+    out = []
+    for name in sorted(set(old) | set(new)):
+        o, n = old.get(name), new.get(name)
+        if o is None:
+            out.append({"name": name, "status": "new",
+                        "new_us": n["us_per_call"]})
+            continue
+        if n is None:
+            out.append({"name": name, "status": "gone",
+                        "old_us": o["us_per_call"]})
+            continue
+        ou, nu = o["us_per_call"], n["us_per_call"]
+        pct = 100.0 * (nu - ou) / ou if ou else (0.0 if nu == ou else 100.0)
+        status = ("regression" if pct > REGRESSION_PCT
+                  else "improvement" if pct < -REGRESSION_PCT else "steady")
+        out.append({"name": name, "status": status, "old_us": ou,
+                    "new_us": nu, "delta_pct": round(pct, 1)})
+    return out
+
+
+def format_delta(d: dict) -> str:
+    if d["status"] == "new":
+        return f"  NEW        {d['name']}: {d['new_us']:.3f}us"
+    if d["status"] == "gone":
+        return f"  GONE       {d['name']} (was {d['old_us']:.3f}us)"
+    arrow = {"regression": "SLOWER", "improvement": "FASTER",
+             "steady": "~"}[d["status"]]
+    return (f"  {arrow:<10} {d['name']}: {d['old_us']:.3f} -> "
+            f"{d['new_us']:.3f}us ({d['delta_pct']:+.1f}%)")
+
+
+def report(old_payload: dict, new_payload: dict, *,
+           print_fn=print) -> list[dict]:
+    """Print per-metric deltas; returns the structured rows."""
+    deltas = compare(old_payload, new_payload)
+    if not deltas:
+        print_fn("[trend] no rows to compare")
+        return deltas
+    flagged = sum(1 for d in deltas
+                  if d["status"] in ("regression", "gone"))
+    print_fn(f"[trend] {len(deltas)} metrics vs previous snapshot"
+             + (f", {flagged} flagged" if flagged else ""))
+    for d in deltas:
+        if d["status"] != "steady":
+            print_fn(format_delta(d))
+    return deltas
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.trend",
+                                 description=__doc__)
+    ap.add_argument("snapshot", help="current BENCH_<name>.json")
+    ap.add_argument("--against", default=None,
+                    help="previous snapshot (default: committed version "
+                         "via git show HEAD:<path>)")
+    args = ap.parse_args(argv)
+    new_payload = load(args.snapshot)
+    old_payload = (load(args.against) if args.against
+                   else load_committed(args.snapshot))
+    if old_payload is None:
+        print(f"no committed baseline for {args.snapshot}; nothing to diff",
+              file=sys.stderr)
+        return 1
+    deltas = report(old_payload, new_payload)
+    for d in deltas:
+        if d["status"] == "steady":
+            print(format_delta(d))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

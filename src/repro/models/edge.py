@@ -102,6 +102,15 @@ def deployment_plan(cfg: EdgeConfig, **kw):
     return plan_lib.get_or_plan(cfg, target="tpu", **kw)
 
 
+def fleet_deployment(names, *, target: str = "tpu", **kw):
+    """Joint :class:`~repro.plan.multinet.FleetPlan` for several edge nets
+    co-resident on one array (paper Section V-C).  ``names`` are EDGE_NETS
+    keys or ready EdgeConfigs; planner knobs pass through ``kw``."""
+    from repro import plan as plan_lib
+    cfgs = [edge_config(n) if isinstance(n, str) else n for n in names]
+    return plan_lib.plan_fleet(cfgs, target=target, **kw)
+
+
 def edge_forward_q8(qparams: list[dict], cfg: EdgeConfig, x: jax.Array, *,
                     x_scale: float = 0.05, plan=None,
                     block_m: int | None = None, block_k: int | None = None,

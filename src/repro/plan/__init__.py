@@ -5,19 +5,24 @@ The subsystem that composes the paper's decision procedure end-to-end:
 LARE + two-level tiling + column/band + boundary-cost search over them, and
 ``artifact`` serializes the result as a cache-keyed ``DeploymentPlan`` JSON
 that ``models/edge.py``, ``serve/engine.py`` and the benchmarks execute.
+``multinet`` extends the allocator to N co-resident networks sharing one
+array (``plan_fleet`` -> ``FleetPlan``, consumed by ``repro.serve.Router``),
+and ``calibrate.feedback`` writes measured latencies back into the cache.
 
-CLI: ``PYTHONPATH=src python -m repro.plan jet_tagger`` (see ``__main__``).
+CLI: ``PYTHONPATH=src python -m repro.plan jet_tagger`` (see ``__main__``;
+naming several nets plans them as a fleet).
 """
 
 from repro.plan.artifact import (BoundaryPlan, DeploymentPlan, LayerPlan,
                                  PlanCache, default_cache, plan_key)
-from repro.plan.calibrate import calibrated_cpu_model
+from repro.plan.calibrate import calibrated_cpu_model, feedback
 from repro.plan.graph import DataflowGraph, LayerNode, edge_graph, model_graph
+from repro.plan.multinet import FleetPlan, TenantPlan, plan_fleet
 from repro.plan.planner import as_graph, get_or_plan, plan_deployment
 
 __all__ = [
-    "BoundaryPlan", "DataflowGraph", "DeploymentPlan", "LayerNode",
-    "LayerPlan", "PlanCache", "as_graph", "calibrated_cpu_model",
-    "default_cache", "edge_graph", "get_or_plan", "model_graph", "plan_key",
-    "plan_deployment",
+    "BoundaryPlan", "DataflowGraph", "DeploymentPlan", "FleetPlan",
+    "LayerNode", "LayerPlan", "PlanCache", "TenantPlan", "as_graph",
+    "calibrated_cpu_model", "default_cache", "edge_graph", "feedback",
+    "get_or_plan", "model_graph", "plan_deployment", "plan_fleet", "plan_key",
 ]

@@ -3,9 +3,12 @@
   PYTHONPATH=src python -m repro.plan jet_tagger
   PYTHONPATH=src python -m repro.plan all --target both --out plans/
   PYTHONPATH=src python -m repro.plan qwen2_5_3b --kind lm --target tpu
+  PYTHONPATH=src python -m repro.plan jet_tagger tau_select --target aie
 
 Prints a per-layer plan table and writes the DeploymentPlan JSON artifact
-(``<out>/<net>_<target>.json``).
+(``<out>/<net>_<target>.json``).  Naming MORE THAN ONE net plans them as a
+co-resident fleet (joint column packing, paper Section V-C) and writes a
+``FleetPlan`` artifact (``<out>/fleet_<n1>+<n2>_<target>.json``).
 """
 
 from __future__ import annotations
@@ -14,7 +17,7 @@ import argparse
 import pathlib
 import sys
 
-from repro.plan import artifact, planner
+from repro.plan import artifact, multinet, planner
 
 
 def _print_plan(plan: artifact.DeploymentPlan) -> None:
@@ -38,13 +41,31 @@ def _print_plan(plan: artifact.DeploymentPlan) -> None:
           f"rate={plan.inferences_per_s / 1e6:.2f} MHz")
 
 
+def _print_fleet(fleet: multinet.FleetPlan) -> None:
+    print(f"\n# fleet {fleet.name} [{fleet.target}]  "
+          f"key={fleet.key[:12]}…  band1_cols={fleet.band1_cols_used}")
+    print(f"{'tenant':<14}{'cols':>10}  {'planned':>11}{'+cross':>10}"
+          f"{'budget':>11}")
+    for t in fleet.tenants:
+        cols = (f"{t.col_offset}..{t.col_offset + t.cols - 1}"
+                if t.cols else "-")
+        print(f"{t.net_id:<14}{cols:>10}  "
+              f"{t.plan.est_latency_s * 1e6:>9.2f}us"
+              f"{t.crossing_s * 1e6:>8.2f}us"
+              f"{t.latency_budget_s * 1e6:>9.2f}us")
+    for t in fleet.tenants:
+        _print_plan(t.plan)
+
+
 def main(argv: list[str] | None = None) -> int:
     from repro.models import edge
 
     ap = argparse.ArgumentParser(prog="python -m repro.plan",
                                  description=__doc__)
-    ap.add_argument("net", help="edge net name (see EDGE_NETS), an LM arch "
-                                "id with --kind lm, or 'all'")
+    ap.add_argument("net", nargs="+",
+                    help="edge net name (see EDGE_NETS), an LM arch id with "
+                         "--kind lm, or 'all'; several names plan a "
+                         "co-resident fleet")
     ap.add_argument("--target", choices=("aie", "tpu", "both"),
                     default="both")
     ap.add_argument("--kind", choices=("edge", "lm"), default="edge")
@@ -57,20 +78,33 @@ def main(argv: list[str] | None = None) -> int:
 
     if args.kind == "lm":
         from repro import configs
-        cfgs = [configs.get(args.net).config]
-    elif args.net == "all":
+        cfgs = [configs.get(n).config for n in args.net]
+    elif args.net == ["all"]:
         cfgs = [edge.edge_config(n) for n in edge.EDGE_NETS]
     else:
-        if args.net not in edge.EDGE_NETS:
-            print(f"unknown net {args.net!r}; choose from "
-                  f"{sorted(edge.EDGE_NETS)} or 'all'", file=sys.stderr)
-            return 2
-        cfgs = [edge.edge_config(args.net)]
+        for n in args.net:
+            if n not in edge.EDGE_NETS:
+                print(f"unknown net {n!r}; choose from "
+                      f"{sorted(edge.EDGE_NETS)} or 'all'", file=sys.stderr)
+                return 2
+        cfgs = [edge.edge_config(n) for n in args.net]
 
     targets = ("aie", "tpu") if args.target == "both" else (args.target,)
     if args.kind == "lm":
         targets = tuple(t for t in targets if t == "tpu") or ("tpu",)
     out_dir = pathlib.Path(args.out)
+
+    # Several nets named explicitly: plan them as one co-resident fleet.
+    if len(args.net) > 1 and args.net != ["all"]:
+        for target in targets:
+            fleet = multinet.plan_fleet(cfgs, target=target,
+                                        batch=args.batch,
+                                        pl_budget=args.pl_budget)
+            _print_fleet(fleet)
+            path = fleet.save(out_dir / f"fleet_{fleet.name}_{target}.json")
+            print(f"wrote {path}")
+        return 0
+
     for cfg in cfgs:
         for target in targets:
             plan = planner.plan_deployment(cfg, target=target,

@@ -29,6 +29,16 @@ search.  The JSON schema (version ``PLAN_SCHEMA_VERSION``):
 every hardware-model constant, planner version), so a cache hit is exactly
 "same question asked again" — re-parameterizing ``hw.py`` or bumping the
 planner invalidates stale artifacts automatically.
+
+Schema v2 (PR 2) additions — v1 artifacts still load unchanged:
+
+* a top-level ``"kind"`` ("edge" | "lm") so consumers can pick an executor
+  without re-deriving it from the config;
+* the free-form ``serve`` section may carry the continuous-batching policy
+  (``slots``, ``prefill_chunk``, ``admit_per_tick``, ``max_new_cap``) and a
+  ``calibration`` record written back by ``plan.calibrate.feedback``;
+* the multi-network ``FleetPlan`` artifact (``repro.plan.multinet``) embeds
+  per-tenant ``DeploymentPlan`` dicts in this same schema.
 """
 
 from __future__ import annotations
@@ -39,8 +49,8 @@ import json
 import os
 import pathlib
 
-PLAN_SCHEMA_VERSION = 1
-PLANNER_VERSION = "plan-1"      # bump on any search/cost-model change
+PLAN_SCHEMA_VERSION = 2
+PLANNER_VERSION = "plan-2"      # bump on any search/cost-model change
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +112,7 @@ class DeploymentPlan:
     est_latency_s: float
     est_interval_s: float
     serve: dict = dataclasses.field(default_factory=dict)
+    kind: str = "edge"           # "edge" | "lm" (graph kind; v2 addition)
     schema: int = PLAN_SCHEMA_VERSION
 
     @property
@@ -118,6 +129,7 @@ class DeploymentPlan:
     def to_dict(self) -> dict:
         return {
             "schema": self.schema,
+            "kind": self.kind,
             "network": self.network,
             "target": self.target,
             "batch": self.batch,
@@ -137,7 +149,10 @@ class DeploymentPlan:
 
     @classmethod
     def from_dict(cls, d: dict) -> "DeploymentPlan":
-        if d.get("schema") != PLAN_SCHEMA_VERSION:
+        # v1 artifacts (PR 1) load unchanged; they are normalized to the
+        # current schema on the way in ("kind" defaults to "edge", the only
+        # kind v1 consumers executed).
+        if d.get("schema") not in (1, PLAN_SCHEMA_VERSION):
             raise ValueError(f"unsupported plan schema: {d.get('schema')!r}")
         return cls(
             network=d["network"], target=d["target"], batch=d["batch"],
@@ -148,6 +163,7 @@ class DeploymentPlan:
             est_latency_s=d["totals"]["est_latency_s"],
             est_interval_s=d["totals"]["est_interval_s"],
             serve=dict(d.get("serve", {})),
+            kind=d.get("kind", "edge"),
         )
 
     @classmethod

@@ -27,6 +27,51 @@ from repro import hw as hwlib
 _BM, _BK, _BN = 32, 128, 128
 
 
+def feedback(plan, measured_latency_s: float, *, cache=None):
+    """Write a measured end-to-end latency back into the plan cache.
+
+    The plan's per-layer/boundary estimates are rescaled by
+    ``measured / planned`` and a ``calibration`` record lands in the plan's
+    ``serve`` section; the updated plan is re-``put`` under its ORIGINAL key,
+    so the next ``get_or_plan`` with the same question returns calibrated
+    costs instead of the cold model (the small autotuning loop: plans improve
+    across runs).  Tile/regime decisions are untouched — only the cost
+    annotations move."""
+    from repro.plan.artifact import default_cache
+    if measured_latency_s <= 0:
+        raise ValueError(f"measured latency must be > 0, "
+                         f"got {measured_latency_s}")
+    if plan.est_latency_s <= 0:
+        raise ValueError("plan has no positive latency estimate to calibrate")
+    # The TPU path's total carries a fixed entry-dispatch overhead on top of
+    # the per-layer/boundary parts; scale only the parts so the invariant
+    # est_latency == sum(parts) + overhead survives calibration (a naive
+    # proportional rescale would double-count the overhead into the layers).
+    parts = sum(l.est_latency_s * l.repeat for l in plan.layers) \
+        + sum(b.crossing_s for b in plan.boundaries)
+    overhead = max(plan.est_latency_s - parts, 0.0)
+    if parts > 0 and measured_latency_s > overhead:
+        scale = (measured_latency_s - overhead) / parts
+    else:                           # degenerate: fall back to proportional
+        scale = measured_latency_s / plan.est_latency_s
+    layers = tuple(dataclasses.replace(
+        l, est_latency_s=l.est_latency_s * scale,
+        est_interval_s=l.est_interval_s * scale) for l in plan.layers)
+    bounds = tuple(dataclasses.replace(b, crossing_s=b.crossing_s * scale)
+                   for b in plan.boundaries)
+    calibrated = dataclasses.replace(
+        plan, layers=layers, boundaries=bounds,
+        est_latency_s=measured_latency_s,
+        est_interval_s=plan.est_interval_s
+        * (measured_latency_s / plan.est_latency_s),
+        serve={**plan.serve,
+               "calibration": {"measured_latency_s": measured_latency_s,
+                               "scale": scale}})
+    cache = cache if cache is not None else default_cache()
+    cache.put(calibrated)
+    return calibrated
+
+
 def _time_call(fn, *args, iters: int = 5) -> float:
     import jax
     jax.block_until_ready(fn(*args))      # warmup / compile

@@ -1,0 +1,331 @@
+"""Multi-network co-residency planner (paper Section V-C).
+
+Section V-C's deployments place *multiple* networks on the AI Engine array at
+once: each net keeps its own spatial pipeline, but all of them draw columns
+from the same ``usable_cols`` budget and every spilled layer raises the
+shared band-2 contention penalty.  This module extends the single-net
+allocator (:mod:`repro.plan.planner`) to N :class:`DataflowGraph` s:
+
+* ``target="aie"`` — joint column packing.  Every net runs its own LARE pass
+  (per-net ``pl_budget``), then ALL nets' AIE layers enter one
+  :func:`planner._resolve_columns` call keyed by ``(tenant, layer)``: the
+  shrink-vs-spill rule now trades one net's split width against another net's
+  spill penalty, exactly the Fig.-6 economics applied fleet-wide.  Tenants
+  receive contiguous, non-overlapping band-1 column ranges
+  (``col_offset``/``cols``), and each net's off-array hand-off is charged a
+  DR7 crossing (:func:`repro.core.boundary.crossing_cost_aie`) — co-resident
+  nets stream results out through the same PLIO boundary.
+
+* ``target="tpu"`` — the executable path: nets time-share one chip, so each
+  is planned by the single-net TPU search, the hand-off between co-scheduled
+  launch chains is charged :func:`crossing_cost_tpu`, and the plan's
+  ``serve`` section gains the continuous-batching policy the runtime reads
+  (``slots`` split across LM tenants, ``prefill_chunk``).
+
+The output is a :class:`FleetPlan` (schema v2): per-tenant
+:class:`DeploymentPlan` s plus column assignments and the latency budgets the
+serving router (:mod:`repro.serve.router`) enforces.  ``FleetPlan.load`` also
+accepts a PR-1 v1 ``DeploymentPlan`` artifact and wraps it as a
+single-tenant fleet, so existing plan files keep working.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+
+from repro.core import boundary
+from repro.plan import planner
+from repro.plan.artifact import (PLAN_SCHEMA_VERSION, PLANNER_VERSION,
+                                 DeploymentPlan, default_cache)
+
+# Default headroom between planned and enforced latency: the router flags a
+# tenant when measured latency exceeds budget_factor x planned (matching the
+# repo-wide planned-vs-measured 2x acceptance band).
+DEFAULT_BUDGET_FACTOR = 2.0
+
+
+def _band1_cols(plan: DeploymentPlan) -> int:
+    """Band-1 array columns a plan occupies (0 off the AIE target)."""
+    if plan.target != "aie":
+        return 0
+    return sum(l.p_k for l in plan.layers
+               if l.regime == "aie" and l.band == 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantPlan:
+    """One network's slice of the fleet: its plan, its columns, its budget."""
+    net_id: str                  # unique within the fleet (router dispatch key)
+    plan: DeploymentPlan
+    col_offset: int              # first band-1 column on the array (aie; 0 tpu)
+    cols: int                    # band-1 columns occupied (0 on tpu)
+    crossing_s: float            # DR7 off-array/inter-chain hand-off charge
+    latency_budget_s: float      # enforced by the serving router
+
+    @property
+    def total_latency_s(self) -> float:
+        """Planned per-inference latency including the net-boundary charge."""
+        return self.plan.est_latency_s + self.crossing_s
+
+    def to_dict(self) -> dict:
+        return {
+            "net_id": self.net_id,
+            "col_offset": self.col_offset,
+            "cols": self.cols,
+            "crossing_s": self.crossing_s,
+            "latency_budget_s": self.latency_budget_s,
+            "plan": self.plan.to_dict(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TenantPlan":
+        return cls(net_id=d["net_id"], plan=DeploymentPlan.from_dict(d["plan"]),
+                   col_offset=d["col_offset"], cols=d["cols"],
+                   crossing_s=d["crossing_s"],
+                   latency_budget_s=d["latency_budget_s"])
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetPlan:
+    """N co-resident deployments on one array, with per-tenant budgets."""
+    name: str
+    target: str
+    key: str
+    tenants: tuple[TenantPlan, ...]
+    est_latency_s: float         # worst tenant (spatially concurrent nets)
+    schema: int = PLAN_SCHEMA_VERSION
+
+    def tenant(self, net_id: str) -> TenantPlan:
+        for t in self.tenants:
+            if t.net_id == net_id:
+                return t
+        raise KeyError(f"no tenant {net_id!r} in fleet {self.name!r}")
+
+    @property
+    def net_ids(self) -> list[str]:
+        return [t.net_id for t in self.tenants]
+
+    @property
+    def band1_cols_used(self) -> int:
+        return sum(t.cols for t in self.tenants)
+
+    # -- serialization ----------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "schema": self.schema,
+            "kind": "fleet",
+            "name": self.name,
+            "target": self.target,
+            "key": self.key,
+            "tenants": [t.to_dict() for t in self.tenants],
+            "totals": {
+                "est_latency_s": self.est_latency_s,
+                "band1_cols_used": self.band1_cols_used,
+            },
+        }
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FleetPlan":
+        if "tenants" not in d:
+            # A bare DeploymentPlan artifact (schema v1 or v2): wrap it as a
+            # single-tenant fleet so PR-1 plan files keep loading.
+            return cls.from_plan(DeploymentPlan.from_dict(d))
+        if d.get("schema") not in (1, PLAN_SCHEMA_VERSION):
+            raise ValueError(f"unsupported fleet schema: {d.get('schema')!r}")
+        tenants = tuple(TenantPlan.from_dict(t) for t in d["tenants"])
+        return cls(name=d["name"], target=d["target"], key=d["key"],
+                   tenants=tenants,
+                   est_latency_s=d["totals"]["est_latency_s"])
+
+    @classmethod
+    def from_json(cls, s: str) -> "FleetPlan":
+        return cls.from_dict(json.loads(s))
+
+    @classmethod
+    def from_plan(cls, plan: DeploymentPlan, *,
+                  budget_factor: float = DEFAULT_BUDGET_FACTOR) -> "FleetPlan":
+        """Wrap a single-net :class:`DeploymentPlan` as a one-tenant fleet."""
+        cols = _band1_cols(plan)
+        tenant = TenantPlan(
+            net_id=plan.network, plan=plan, col_offset=0, cols=cols,
+            crossing_s=0.0,
+            latency_budget_s=budget_factor * plan.est_latency_s)
+        return cls(name=plan.network, target=plan.target,
+                   key=f"fleet:{plan.key}", tenants=(tenant,),
+                   est_latency_s=plan.est_latency_s)
+
+    def save(self, path: str | os.PathLike) -> pathlib.Path:
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(self.to_json() + "\n")
+        return p
+
+    @classmethod
+    def load(cls, path: str | os.PathLike) -> "FleetPlan":
+        return cls.from_json(pathlib.Path(path).read_text())
+
+
+# ---------------------------------------------------------------------------
+# Fleet planning
+# ---------------------------------------------------------------------------
+
+def _fleet_key(graphs, target: str, opts: dict) -> str:
+    """sha256 over the ordered per-net plan keys — same nets, same order,
+    same hardware and knobs => same fleet answer."""
+    payload = {
+        "planner": PLANNER_VERSION,
+        "fleet": [planner._key_for(g, target, opts) for g in graphs],
+        "target": target,
+    }
+    blob = json.dumps(payload, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+def _net_ids(graphs) -> list[str]:
+    """Unique tenant ids (duplicate nets get an #index suffix)."""
+    seen: dict[str, int] = {}
+    out = []
+    for g in graphs:
+        n = seen.get(g.name, 0)
+        seen[g.name] = n + 1
+        out.append(g.name if n == 0 else f"{g.name}#{n}")
+    return out
+
+
+def _cached_or(plan: DeploymentPlan, cache) -> DeploymentPlan:
+    """Adopt calibrated COSTS from the cache under the same per-tenant key
+    (that is where ``calibrate.feedback`` parks measured latencies), while
+    keeping the freshly-computed serve POLICY: the serve knobs
+    (``serve_slots_total``/``prefill_chunk``) are not part of the fleet key,
+    so a cache hit must not override what this call asked for.  Tiles and
+    regimes are identical by keying either way."""
+    hit = cache.get(plan.key)
+    if hit is None:
+        return plan
+    serve = dict(plan.serve)
+    if "calibration" in hit.serve:
+        serve["calibration"] = hit.serve["calibration"]
+    return dataclasses.replace(hit, serve=serve)
+
+
+def _plan_fleet_aie(graphs, ids, *, key: str, budget_factor: float,
+                    cache, opts: dict) -> FleetPlan:
+    pl, aie = opts["pl"], opts["aie"]
+    preps = [planner._aie_prepare(g, pl_budget=opts["pl_budget"], pl=pl,
+                                  aie=aie) for g in graphs]
+
+    # Joint column resolution: all nets' AIE layers in one pool, keyed by
+    # (tenant, layer) so band assignment walks tenants in placement order.
+    cands = {(ti, li): c
+             for ti, p in enumerate(preps) for li, c in p.cands.items()}
+    chosen = {k: c[0] for k, c in cands.items()}
+    bands = planner._resolve_columns(chosen, cands, aie)
+    n_band2 = sum(1 for b in bands.values() if b > 1)
+
+    tenants: list[TenantPlan] = []
+    col = 0
+    for ti, (g, prep, net_id) in enumerate(zip(graphs, preps, ids)):
+        t_chosen = {li: chosen[(ti, li)] for li in prep.cands}
+        t_bands = {li: bands[(ti, li)] for li in prep.cands}
+        layers = planner._aie_layers(g, prep, t_chosen, t_bands, n_band2)
+        bounds, est_latency, est_interval = planner._aie_totals(g, layers, aie)
+        plan = DeploymentPlan(
+            network=g.name, target="aie", batch=g.batch,
+            key=f"{key}:{net_id}",
+            layers=tuple(layers), boundaries=tuple(bounds),
+            est_latency_s=est_latency, est_interval_s=est_interval,
+            serve={"quantize_weights": True, "prefill_chunk": None},
+            kind=g.kind)
+        plan = _cached_or(plan, cache)
+        # DR7 at the net boundary: the net's result streams off-array through
+        # the PLIO fabric shared by every co-resident tenant.
+        last = g.nodes[-1]
+        crossing = boundary.crossing_cost_aie(
+            last.out_bytes(g.batch), plan.est_latency_s, aie=aie)
+        cols_used = _band1_cols(plan)
+        tenants.append(TenantPlan(
+            net_id=net_id, plan=plan, col_offset=col, cols=cols_used,
+            crossing_s=crossing,
+            latency_budget_s=budget_factor
+            * (plan.est_latency_s + crossing)))
+        col += cols_used
+
+    est = max(t.total_latency_s for t in tenants)
+    name = "+".join(ids)
+    return FleetPlan(name=name, target="aie", key=key,
+                     tenants=tuple(tenants), est_latency_s=est)
+
+
+def _plan_fleet_tpu(graphs, ids, *, key: str, budget_factor: float,
+                    serve_slots_total: int, prefill_chunk: int | None,
+                    cache, opts: dict) -> FleetPlan:
+    tpu = opts["tpu"]
+    n_lm = sum(1 for g in graphs if g.kind == "lm") or 1
+    tenants: list[TenantPlan] = []
+    for g, net_id in zip(graphs, ids):
+        plan = planner._plan_tpu(
+            g, pipeline_core_budget=opts["pipeline_core_budget"], tpu=tpu,
+            key=f"{key}:{net_id}")
+        serve = dict(plan.serve)
+        if g.kind == "lm":
+            # The continuous batcher reads its policy from here (instead of
+            # the old hard-coded constants): a fair slot share across LM
+            # tenants, plan-chosen chunked-prefill size, one admission per
+            # tick so a burst on one tenant cannot monopolize a step.
+            serve.update({
+                "slots": max(1, serve_slots_total // n_lm),
+                "prefill_chunk": prefill_chunk,
+                "admit_per_tick": 1,
+            })
+        plan = _cached_or(dataclasses.replace(plan, serve=serve), cache)
+        crossing = boundary.crossing_cost_tpu(g.nodes[-1].out_bytes(g.batch),
+                                              tpu)
+        tenants.append(TenantPlan(
+            net_id=net_id, plan=plan, col_offset=0, cols=0,
+            crossing_s=crossing,
+            latency_budget_s=budget_factor
+            * (plan.est_latency_s + crossing)))
+    est = max(t.total_latency_s for t in tenants)
+    return FleetPlan(name="+".join(ids), target="tpu", key=key,
+                     tenants=tuple(tenants), est_latency_s=est)
+
+
+def plan_fleet(cfgs, *, target: str = "tpu", batch: int | None = None,
+               budget_factor: float = DEFAULT_BUDGET_FACTOR,
+               serve_slots_total: int = 8, prefill_chunk: int | None = 8,
+               cache=None, **kw) -> FleetPlan:
+    """Place N networks on one array/chip.  ``cfgs`` are EdgeConfigs,
+    ModelConfigs or pre-built graphs; planner knobs (``pl_budget``,
+    ``pipeline_core_budget``, ``pl``/``aie``/``tpu``) pass through ``kw``.
+
+    Per-tenant plans are looked up in ``cache`` (the process-wide default
+    cache unless given) under their fleet-scoped keys before the fresh plan
+    is used, which closes the autotune loop: measured latencies written back
+    by ``calibrate.feedback`` / ``EdgeEngine.record_calibration`` are picked
+    up by the next ``plan_fleet`` of the same fleet.
+    """
+    if not cfgs:
+        raise ValueError("plan_fleet needs at least one network")
+    graphs = [planner.as_graph(c, batch=batch) for c in cfgs]
+    ids = _net_ids(graphs)
+    opts = planner._resolve(kw)
+    key = _fleet_key(graphs, target, opts)
+    cache = cache if cache is not None else default_cache()
+    if target == "aie":
+        return _plan_fleet_aie(graphs, ids, key=key,
+                               budget_factor=budget_factor, cache=cache,
+                               opts=opts)
+    if target == "tpu":
+        return _plan_fleet_tpu(graphs, ids, key=key,
+                               budget_factor=budget_factor,
+                               serve_slots_total=serve_slots_total,
+                               prefill_chunk=prefill_chunk, cache=cache,
+                               opts=opts)
+    raise ValueError(f"unknown target {target!r} (want 'aie' or 'tpu')")

@@ -93,12 +93,16 @@ def _aie_candidates(batch: int, n_in: int, n_out: int,
     return out
 
 
-def _resolve_columns(chosen: dict[int, _AieChoice],
-                     cands: dict[int, list[_AieChoice]],
-                     aie: hwlib.AieMl) -> dict[int, int]:
+def _resolve_columns(chosen: dict, cands: dict,
+                     aie: hwlib.AieMl) -> dict:
     """Column-exhaustion resolution: shrink cheap splits until the summed
     ``P_K`` fits one band, unless shrinking costs more than spilling
-    (Fig. 6).  Returns {layer index: band} and mutates ``chosen``."""
+    (Fig. 6).  Returns {layer key: band} and mutates ``chosen``.
+
+    Keys only need to sort stably (ints for a single net; ``(tenant, layer)``
+    tuples when the fleet packer pools several nets' layers into one joint
+    resolution), so co-resident networks compete for the same columns under
+    the same shrink-vs-spill rule."""
 
     def cols() -> int:
         return sum(c.p_k for c in chosen.values())
@@ -123,47 +127,62 @@ def _resolve_columns(chosen: dict[int, _AieChoice],
         if shrink_worst > spill_interval:
             break                    # DR6: the band-2 penalty is cheaper
         chosen[best_li] = best_alt
-    # Assign bands by cumulative column occupancy in layer order.
+    # Assign bands first-fit in layer order: only band-1 residents consume
+    # band-1 columns, so one oversized layer spilling does not cascade every
+    # later layer (or, fleet-wide, every later tenant) into band 2 while
+    # band-1 columns sit free.
     bands: dict[int, int] = {}
     col = 0
     for li in sorted(chosen):
         c = chosen[li]
-        band = 1 if col + c.p_k <= aie.usable_cols else 2
-        bands[li] = band
-        col += c.p_k
+        if col + c.p_k <= aie.usable_cols:
+            bands[li] = 1
+            col += c.p_k
+        else:
+            bands[li] = 2
     return bands
 
 
-def _spilled_worst_interval(chosen: dict[int, _AieChoice],
-                            aie: hwlib.AieMl) -> float:
-    """Worst-layer interval if the current overflow goes to band 2 as-is."""
-    col, n_spilled = 0, 0
-    for li in sorted(chosen):
-        if col + chosen[li].p_k > aie.usable_cols:
-            n_spilled += 1
-        col += chosen[li].p_k
-    worst = 0.0
+def _spilled_worst_interval(chosen: dict, aie: hwlib.AieMl) -> float:
+    """Worst-layer interval if the current overflow goes to band 2 as-is
+    (same first-fit band rule as the final assignment)."""
+    spilled = []
     col = 0
     for li in sorted(chosen):
-        c = chosen[li]
-        t = c.interval_s
-        if col + c.p_k > aie.usable_cols:
-            t *= 1.0 + tiling._AIE_BAND_PENALTY * n_spilled
-        col += c.p_k
+        if col + chosen[li].p_k <= aie.usable_cols:
+            col += chosen[li].p_k
+        else:
+            spilled.append(li)
+    worst = 0.0
+    penalty = 1.0 + tiling._AIE_BAND_PENALTY * len(spilled)
+    for li in sorted(chosen):
+        t = chosen[li].interval_s * (penalty if li in spilled else 1.0)
         worst = max(worst, t)
     return worst
 
 
-def _plan_aie(graph: DataflowGraph, *, pl_budget: float,
-              pl: hwlib.PlFabric, aie: hwlib.AieMl,
-              key: str) -> DeploymentPlan:
+@dataclasses.dataclass
+class _AiePrep:
+    """Per-graph LARE decisions + PL picks + AIE candidate lists — everything
+    the column allocator needs, before any columns are committed.  Shared by
+    the single-net path and the multi-network fleet packer
+    (:mod:`repro.plan.multinet`), which pools several preps' candidates into
+    one joint :func:`_resolve_columns` call."""
+    lares: dict[int, lare.LareResult]
+    regimes: dict[int, str]
+    pl_plans: dict[int, tuple[int, float, float]]   # i -> (rf, ival, lat)
+    cands: dict[int, list[_AieChoice]]
+
+
+def _aie_prepare(graph: DataflowGraph, *, pl_budget: float,
+                 pl: hwlib.PlFabric, aie: hwlib.AieMl) -> _AiePrep:
     batch = graph.batch
     lares = {n.index: lare.lare(n.n_in, n.n_out, batch=batch, pl=pl, aie=aie)
              for n in graph}
     regimes = {i: r.decide(pl_budget) for i, r in lares.items()}
 
     # PL layers: cheapest interval whose resources fit the budget.
-    pl_plans: dict[int, tuple[int, float, float]] = {}   # i -> (rf, ival, lat)
+    pl_plans: dict[int, tuple[int, float, float]] = {}
     for node in graph:
         if regimes[node.index] != "pl":
             continue
@@ -180,30 +199,36 @@ def _plan_aie(graph: DataflowGraph, *, pl_budget: float,
                                 pl.latency_s(node.n_in, node.n_out, pick,
                                              batch))
 
-    # AIE layers: spatial-split search + column-exhaustion resolution.
     cands = {n.index: _aie_candidates(batch, n.n_in, n.n_out, aie)
              for n in graph if regimes[n.index] == "aie"}
-    chosen = {i: c[0] for i, c in cands.items()}
-    bands = _resolve_columns(chosen, cands, aie)
-    n_band2 = sum(1 for b in bands.values() if b > 1)
+    return _AiePrep(lares=lares, regimes=regimes, pl_plans=pl_plans,
+                    cands=cands)
 
+
+def _aie_layers(graph: DataflowGraph, prep: _AiePrep,
+                chosen: dict[int, _AieChoice], bands: dict[int, int],
+                n_band2: int) -> list[LayerPlan]:
+    """Materialize LayerPlans from resolved choices.  ``n_band2`` is the
+    band-2 population of the WHOLE array (fleet-wide under co-residency), so
+    contention is priced against every spilled layer, not just this net's."""
     layers: list[LayerPlan] = []
     for node in graph:
         i = node.index
         rules: list[str] = []
-        if regimes[i] == "pl":
-            rf, ival, lat = pl_plans[i]
-            rules.append(f"LARE={lares[i].lare:.1f}<=budget -> PL(rf={rf})")
+        if prep.regimes[i] == "pl":
+            rf, ival, lat = prep.pl_plans[i]
+            rules.append(
+                f"LARE={prep.lares[i].lare:.1f}<=budget -> PL(rf={rf})")
             layers.append(LayerPlan(
                 index=i, name=node.name, n_in=node.n_in, n_out=node.n_out,
-                regime="pl", lare=lares[i].lare, p_k=1, p_n=1, band=0,
+                regime="pl", lare=prep.lares[i].lare, p_k=1, p_n=1, band=0,
                 api_tile=(0, 0, 0), fuse_group=i, est_latency_s=lat,
                 est_interval_s=ival, act=node.act, repeat=node.repeat,
                 rules=tuple(rules)))
             continue
         c, band = chosen[i], bands[i]
         penalty = (1.0 + tiling._AIE_BAND_PENALTY * n_band2) if band > 1 else 1.0
-        rules.append(f"LARE={lares[i].lare:.1f}>budget -> AIE")
+        rules.append(f"LARE={prep.lares[i].lare:.1f}>budget -> AIE")
         if c.p_k > 1:
             rules.append(f"DR3(K-expansion P_K={c.p_k})")
         rules.append(f"DR1(api={c.s})")
@@ -211,12 +236,20 @@ def _plan_aie(graph: DataflowGraph, *, pl_budget: float,
             rules.append(f"DR6(band-2 spill, {n_band2} layers)")
         layers.append(LayerPlan(
             index=i, name=node.name, n_in=node.n_in, n_out=node.n_out,
-            regime="aie", lare=lares[i].lare, p_k=c.p_k, p_n=c.p_n, band=band,
-            api_tile=c.s, fuse_group=i, est_latency_s=c.latency_s * penalty,
+            regime="aie", lare=prep.lares[i].lare, p_k=c.p_k, p_n=c.p_n,
+            band=band, api_tile=c.s, fuse_group=i,
+            est_latency_s=c.latency_s * penalty,
             est_interval_s=c.interval_s * penalty, act=node.act,
             repeat=node.repeat, rules=tuple(rules)))
+    return layers
 
-    # Boundary charges at every PL<->AIE transition (DR7 / Fig. 7).
+
+def _aie_totals(graph: DataflowGraph, layers: list[LayerPlan],
+                aie: hwlib.AieMl
+                ) -> tuple[list[BoundaryPlan], float, float]:
+    """Boundary charges at every PL<->AIE transition (DR7 / Fig. 7) and the
+    resulting latency/interval totals."""
+    batch = graph.batch
     base_latency = sum(l.est_latency_s for l in layers)
     boundaries: list[BoundaryPlan] = []
     for prev, nxt in zip(layers, layers[1:]):
@@ -227,14 +260,26 @@ def _plan_aie(graph: DataflowGraph, *, pl_budget: float,
                 crossing_s=boundary.crossing_cost_aie(
                     graph.nodes[prev.index].out_bytes(batch), base_latency,
                     aie=aie)))
-
     est_latency = base_latency + sum(b.crossing_s for b in boundaries)
     est_interval = max(l.est_interval_s for l in layers)
+    return boundaries, est_latency, est_interval
+
+
+def _plan_aie(graph: DataflowGraph, *, pl_budget: float,
+              pl: hwlib.PlFabric, aie: hwlib.AieMl,
+              key: str) -> DeploymentPlan:
+    prep = _aie_prepare(graph, pl_budget=pl_budget, pl=pl, aie=aie)
+    chosen = {i: c[0] for i, c in prep.cands.items()}
+    bands = _resolve_columns(chosen, prep.cands, aie)
+    n_band2 = sum(1 for b in bands.values() if b > 1)
+    layers = _aie_layers(graph, prep, chosen, bands, n_band2)
+    boundaries, est_latency, est_interval = _aie_totals(graph, layers, aie)
     return DeploymentPlan(
-        network=graph.name, target="aie", batch=batch, key=key,
+        network=graph.name, target="aie", batch=graph.batch, key=key,
         layers=tuple(layers), boundaries=tuple(boundaries),
         est_latency_s=est_latency, est_interval_s=est_interval,
-        serve={"quantize_weights": True, "prefill_chunk": None})
+        serve={"quantize_weights": True, "prefill_chunk": None},
+        kind=graph.kind)
 
 
 # ---------------------------------------------------------------------------
@@ -299,7 +344,8 @@ def _plan_tpu(graph: DataflowGraph, *, pipeline_core_budget: int,
         layers=tuple(layers), boundaries=tuple(boundaries),
         est_latency_s=est_latency, est_interval_s=est_interval,
         serve={"quantize_weights": quantize, "prefill_chunk": None,
-               "decode_regime": ("pipeline" if all_pipeline else "tiled")})
+               "decode_regime": ("pipeline" if all_pipeline else "tiled")},
+        kind=graph.kind)
 
 
 # ---------------------------------------------------------------------------

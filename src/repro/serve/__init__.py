@@ -1,1 +1,14 @@
-"""Serving: engine, continuous batcher, int8 path."""
+"""Serving: engine, continuous batcher, int8 path, multi-tenant router.
+
+``engine`` holds the step builders, the plan-driven :class:`ContinuousBatcher`
+and the :class:`EdgeEngine` plan executor; ``router``/``tenant``/``metrics``
+form the multi-tenant runtime over a :class:`repro.plan.FleetPlan` —
+co-resident networks dispatched by net id under per-tenant latency budgets.
+"""
+
+from repro.serve.metrics import TenantMetrics
+from repro.serve.router import Router, TenantOverBudget
+from repro.serve.tenant import Tenant, edge_tenant, lm_tenant
+
+__all__ = ["Router", "Tenant", "TenantMetrics", "TenantOverBudget",
+           "edge_tenant", "lm_tenant"]

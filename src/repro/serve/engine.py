@@ -140,23 +140,73 @@ class Request:
     max_new: int = 16
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    filled: int = 0                  # prompt tokens prefilled so far (chunked)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    """Continuous-batching policy, read from a plan's ``serve`` section.
+
+    The batcher used to hard-code all of this; now the deployment plan (and
+    the fleet planner's per-tenant serve sections) decides.  ``None`` keeps
+    the permissive default for that knob."""
+    slots: int = 4
+    prefill_chunk: int | None = None   # prompt tokens prefilled per tick
+    admit_per_tick: int | None = None  # max admissions per tick
+    max_new_cap: int | None = None     # evict: hard cap on generated tokens
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {self.slots}")
+        for name in ("prefill_chunk", "admit_per_tick", "max_new_cap"):
+            v = getattr(self, name)
+            # A zero chunk would stall prefill forever (no progress, no
+            # decode, and run_until_drained's tick bound never advances).
+            if v is not None and v < 1:
+                raise ValueError(f"{name} must be >= 1 or None, got {v}")
+
+    @classmethod
+    def from_plan(cls, plan, **overrides) -> "BatchPolicy":
+        serve = dict(getattr(plan, "serve", None) or {})
+        slots = serve.get("slots")
+        kw = {
+            # `is None`, not truthiness: an explicit 0 in a plan must reach
+            # __post_init__'s validation, not silently become the default.
+            "slots": cls.slots if slots is None else slots,
+            "prefill_chunk": serve.get("prefill_chunk"),
+            "admit_per_tick": serve.get("admit_per_tick"),
+            "max_new_cap": serve.get("max_new_cap"),
+        }
+        kw.update(overrides)
+        return cls(**kw)
 
 
 class ContinuousBatcher:
     """Fixed-slot continuous batching over the jitted decode step.
 
     Slots hold independent sequences; finished slots admit queued requests
-    immediately (per-slot position tracking; greedy sampling).  CPU-scale
-    smoke models exercise the exact code path the TPU deployment jits.
+    (per-slot position tracking; greedy sampling).  Admission, eviction and
+    chunked-prefill sizes come from a :class:`BatchPolicy` — pass ``plan=``
+    (a :class:`~repro.plan.artifact.DeploymentPlan`) to read the policy from
+    the plan's ``serve`` section instead of the defaults.  CPU-scale smoke
+    models exercise the exact code path the TPU deployment jits.
     """
 
-    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 256):
+    def __init__(self, cfg: ModelConfig, params, *, slots: int | None = None,
+                 max_len: int = 256, plan=None,
+                 policy: "BatchPolicy | None" = None):
         self.cfg, self.params = cfg, params
-        self.slots, self.max_len = slots, max_len
-        self.state = api.init_decode_state(cfg, slots, max_len)
-        self.pos = np.zeros((slots,), np.int32)
-        self.active: list[Request | None] = [None] * slots
+        if policy is None:
+            policy = (BatchPolicy.from_plan(plan) if plan is not None
+                      else BatchPolicy())
+        if slots is not None:           # explicit arg outranks the plan
+            policy = dataclasses.replace(policy, slots=slots)
+        self.policy = policy
+        self.plan = plan
+        self.slots, self.max_len = policy.slots, max_len
+        self.state = api.init_decode_state(cfg, self.slots, max_len)
+        self.pos = np.zeros((self.slots,), np.int32)
+        self.active: list[Request | None] = [None] * self.slots
         self.queue: "queue.Queue[Request]" = queue.Queue()
 
         # Per-slot decode: vmap over the slot axis so every slot advances at
@@ -213,51 +263,95 @@ class ContinuousBatcher:
             self.state, self._axes)
         self.pos[i] = 0
 
-    def _admit(self):
-        for i in range(self.slots):
-            if self.active[i] is None and not self.queue.empty():
-                req = self.queue.get()
-                if len(req.prompt) == 0:     # nothing to prefill or decode
-                    req.done = True
-                    continue
-                self._reset_slot(i)
-                # Prefill the slot by stepping its prompt token-by-token
-                # (simple and exact; a chunked prefill is the TPU fast path).
-                tok = np.zeros((self.slots, 1), np.int32)
-                live = np.zeros((self.slots,), bool)
-                live[i] = True
-                for t in req.prompt:
-                    tok[i, 0] = t
-                    logits = self._decode_masked(tok, live)
-                    self.pos[i] += 1
-                req.out.append(int(jnp.argmax(logits[i, -1])))
-                self.active[i] = req
+    @property
+    def n_active(self) -> int:
+        """Occupied slots (the router's occupancy numerator)."""
+        return sum(1 for r in self.active if r is not None)
 
-    def step(self) -> int:
-        """One decode tick across all active slots.  Returns #active."""
-        self._admit()
+    def _max_new(self, req: Request) -> int:
+        """Eviction policy: the plan's cap bounds every request's budget."""
+        cap = self.policy.max_new_cap
+        return req.max_new if cap is None else min(req.max_new, cap)
+
+    def _prefill_tick(self, i: int, req: Request):
+        """Advance slot ``i``'s prefill by at most ``prefill_chunk`` tokens
+        (the whole prompt when the policy sets no chunk).  Emits the first
+        generated token once the prompt is fully consumed."""
+        chunk = self.policy.prefill_chunk
+        limit = (len(req.prompt) if chunk is None
+                 else min(len(req.prompt), req.filled + chunk))
+        if req.filled >= limit:
+            return
+        tok = np.zeros((self.slots, 1), np.int32)
+        live = np.zeros((self.slots,), bool)
+        live[i] = True
+        logits = None
+        for t in req.prompt[req.filled:limit]:
+            tok[i, 0] = t
+            logits = self._decode_masked(tok, live)
+            self.pos[i] += 1
+        req.filled = limit
+        if req.filled == len(req.prompt):
+            req.out.append(int(jnp.argmax(logits[i, -1])))
+
+    def _admit(self, wait_s: float = 0.0) -> int:
+        """Fill free slots from the queue.  ``wait_s > 0`` blocks on the
+        FIRST pop (``queue.get(timeout=...)``) so an idle serving loop parks
+        in the kernel instead of spinning on ``queue.empty()``."""
+        admitted = 0
+        for i in range(self.slots):
+            if self.active[i] is not None:
+                continue
+            cap = self.policy.admit_per_tick
+            if cap is not None and admitted >= cap:
+                break
+            try:
+                req = (self.queue.get(timeout=wait_s) if wait_s > 0
+                       else self.queue.get_nowait())
+            except queue.Empty:
+                break
+            wait_s = 0.0                 # block at most once per tick
+            if len(req.prompt) == 0:     # nothing to prefill or decode
+                req.done = True
+                continue
+            self._reset_slot(i)
+            req.filled = 0
+            self.active[i] = req
+            admitted += 1
+        return admitted
+
+    def step(self, wait_s: float = 0.0) -> int:
+        """One tick: admit, advance chunked prefills, decode live slots.
+        Returns #active.  ``wait_s`` bounds the blocking idle wait — applied
+        only when EVERY slot is empty, so a busy batcher never stalls its
+        live decodes waiting for new arrivals."""
+        self._admit(wait_s=wait_s if not any(self.active) else 0.0)
+        # Slots mid-prefill (including just-admitted ones) advance by one
+        # chunk instead of decoding; with no chunk configured the whole
+        # prompt lands in this tick, which is the pre-policy behavior.
+        for i, req in enumerate(self.active):
+            if req is not None and req.filled < len(req.prompt):
+                self._prefill_tick(i, req)
         if not any(self.active):
             return 0
         tok = np.zeros((self.slots, 1), np.int32)
         live = np.zeros((self.slots,), bool)
         for i, req in enumerate(self.active):
-            if req is not None and req.out:
+            if req is not None and req.out and req.filled >= len(req.prompt):
                 tok[i, 0] = req.out[-1]
                 live[i] = True
-        logits = self._decode_masked(tok, live)
-        self._steps += 1
-        n_active = 0
-        for i, req in enumerate(self.active):
-            if req is None:
-                continue
-            self.pos[i] += 1
-            req.out.append(int(jnp.argmax(logits[i, -1])))
-            if len(req.out) >= req.max_new:
-                req.done = True
-                self.active[i] = None
-            else:
-                n_active += 1
-        return n_active
+        if live.any():
+            logits = self._decode_masked(tok, live)
+            self._steps += 1
+            for i, req in enumerate(self.active):
+                if req is None or not live[i]:
+                    continue
+                self.pos[i] += 1
+                req.out.append(int(jnp.argmax(logits[i, -1])))
+                if len(req.out) >= self._max_new(req):
+                    req.done = True
+                    self.active[i] = None
+        return self.n_active
 
     def run_until_drained(self, max_ticks: int = 10_000):
         while (not self.queue.empty() or any(self.active)) \
@@ -307,3 +401,20 @@ class EdgeEngine:
     @property
     def measured_mean_s(self) -> float:
         return self.total_s / self.calls if self.calls else 0.0
+
+    def reset_measurements(self):
+        """Drop accumulated timings (e.g. after jit warmup)."""
+        self.calls, self.total_s = 0, 0.0
+
+    def record_calibration(self, cache=None):
+        """Autotune hook: write the measured mean latency back into the plan
+        cache (:func:`repro.plan.calibrate.feedback`), so a re-plan with the
+        same key returns calibrated costs.  Returns the calibrated plan and
+        adopts it as this engine's plan (tiles are unchanged — only cost
+        annotations move)."""
+        from repro.plan import calibrate
+        if not self.calls:
+            raise RuntimeError("no measurements recorded yet")
+        self.plan = calibrate.feedback(self.plan, self.measured_mean_s,
+                                       cache=cache)
+        return self.plan

@@ -1,0 +1,89 @@
+"""Per-tenant serving metrics: latency, occupancy, budget accounting.
+
+Counters are plain host-side state (no jax) updated by the router on every
+dispatch; :meth:`TenantMetrics.snapshot` is what the router's ``report()``
+surfaces and what the benchmarks/tests assert on.  Latencies are kept in a
+bounded window so a long-lived router's percentiles track recent behavior.
+"""
+
+from __future__ import annotations
+
+import collections
+import math
+
+
+class TenantMetrics:
+    """Latency/occupancy/budget counters for one tenant."""
+
+    def __init__(self, net_id: str, *,
+                 latency_budget_s: float = math.inf, window: int = 256):
+        self.net_id = net_id
+        self.latency_budget_s = latency_budget_s
+        self.window = window
+        self.reset()
+
+    def reset(self):
+        self.count = 0
+        self.total_s = 0.0
+        self.budget_violations = 0
+        self.consecutive_violations = 0
+        self._latencies = collections.deque(maxlen=self.window)
+        self._occ_sum = 0.0
+        self._occ_n = 0
+
+    # -- observations -----------------------------------------------------
+    def observe_latency(self, dt_s: float) -> bool:
+        """Record one request's latency; returns True when within budget."""
+        self.count += 1
+        self.total_s += dt_s
+        self._latencies.append(dt_s)
+        within = dt_s <= self.latency_budget_s
+        if within:
+            self.consecutive_violations = 0
+        else:
+            self.budget_violations += 1
+            self.consecutive_violations += 1
+        return within
+
+    def observe_occupancy(self, active: int, capacity: int):
+        """Record one scheduling tick's slot occupancy."""
+        self._occ_sum += active / capacity if capacity else 0.0
+        self._occ_n += 1
+
+    # -- derived ----------------------------------------------------------
+    @property
+    def mean_s(self) -> float:
+        return self.total_s / self.count if self.count else 0.0
+
+    @property
+    def p50_s(self) -> float:
+        """Median over the window — robust to scheduler spikes, so it is
+        what benchmarks compare against planned latency."""
+        if not self._latencies:
+            return 0.0
+        xs = sorted(self._latencies)
+        return xs[len(xs) // 2]
+
+    @property
+    def p95_s(self) -> float:
+        if not self._latencies:
+            return 0.0
+        xs = sorted(self._latencies)
+        return xs[min(len(xs) - 1, int(math.ceil(0.95 * len(xs))) - 1)]
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slots busy across observed ticks."""
+        return self._occ_sum / self._occ_n if self._occ_n else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "net_id": self.net_id,
+            "count": self.count,
+            "mean_s": self.mean_s,
+            "p50_s": self.p50_s,
+            "p95_s": self.p95_s,
+            "latency_budget_s": self.latency_budget_s,
+            "budget_violations": self.budget_violations,
+            "occupancy": self.occupancy,
+        }

@@ -1,0 +1,192 @@
+"""Request router: multi-tenant dispatch over a co-residency FleetPlan.
+
+The router is the runtime half of :func:`repro.plan.plan_fleet`: one
+:class:`~repro.serve.tenant.Tenant` (engine + metrics + budget) per
+co-resident network, dispatch by net id, and per-tenant latency-budget
+enforcement.
+
+Two dispatch surfaces, matching the two serving paths:
+
+* **edge** — :meth:`infer` is synchronous: route to the tenant's
+  :class:`EdgeEngine`, time the call, record it against the tenant's budget.
+* **lm** — :meth:`submit` enqueues a request on the tenant's plan-driven
+  :class:`ContinuousBatcher`; :meth:`step` ticks every LM tenant once
+  (round-robin, so one tenant's burst cannot starve another) and completes
+  request latencies as they drain.  The idle path blocks in
+  ``queue.get(timeout=...)`` instead of spinning.
+
+Budget enforcement is two-level: every over-budget request increments the
+tenant's violation counters, and with ``shed_after=k`` the router starts
+REFUSING (:class:`TenantOverBudget`) a tenant's traffic after ``k``
+consecutive violations — shedding one misbehaving tenant instead of letting
+it drag every co-resident net past its deadline.  Shedding is a half-open
+circuit: after ``k`` consecutive refusals one probe request is admitted; a
+within-budget probe resets the violation streak and re-opens the tenant, an
+over-budget probe keeps it shed.  :meth:`reset_metrics` re-opens
+unconditionally.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Iterable
+
+from repro.serve.tenant import Tenant, edge_tenant, lm_tenant
+
+
+class TenantOverBudget(RuntimeError):
+    """Raised when a shedding router refuses a persistently late tenant."""
+
+
+class Router:
+    def __init__(self, tenants: Iterable[Tenant], *,
+                 shed_after: int | None = None):
+        self._tenants: dict[str, Tenant] = {}
+        for t in tenants:
+            if t.net_id in self._tenants:
+                raise ValueError(f"duplicate tenant id {t.net_id!r}")
+            self._tenants[t.net_id] = t
+        self.shed_after = shed_after
+        self._inflight: dict[str, list[tuple]] = {
+            nid: [] for nid in self._tenants}
+        self._refused: dict[str, int] = {nid: 0 for nid in self._tenants}
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def from_fleet(cls, fleet, *, engines: dict | None = None,
+                   lm: dict | None = None, shed_after: int | None = None,
+                   x_scale: float = 0.05, seed: int = 0) -> "Router":
+        """Build a router from a :class:`FleetPlan`.
+
+        Edge tenants get an :class:`EdgeEngine` automatically (fresh params
+        unless ``engines[net_id]`` supplies a pre-built engine).  LM tenants
+        need weights, so pass ``lm={net_id: (cfg, params)}`` (batcher built
+        plan-driven) or a ready engine via ``engines``.
+        """
+        tenants = []
+        for tp in fleet.tenants:
+            if engines and tp.net_id in engines:
+                tenants.append(Tenant(
+                    net_id=tp.net_id, plan=tp.plan,
+                    engine=engines[tp.net_id],
+                    latency_budget_s=tp.latency_budget_s))
+            elif tp.plan.kind == "lm":
+                if not lm or tp.net_id not in lm:
+                    raise ValueError(
+                        f"LM tenant {tp.net_id!r} needs (cfg, params) via "
+                        f"lm= or a pre-built engine via engines=")
+                cfg, params = lm[tp.net_id]
+                tenants.append(lm_tenant(tp, cfg, params))
+            else:
+                tenants.append(edge_tenant(tp, x_scale=x_scale, seed=seed))
+        return cls(tenants, shed_after=shed_after)
+
+    # -- lookup -----------------------------------------------------------
+    def tenant(self, net_id: str) -> Tenant:
+        try:
+            return self._tenants[net_id]
+        except KeyError:
+            raise KeyError(f"unknown net id {net_id!r}; tenants: "
+                           f"{sorted(self._tenants)}") from None
+
+    @property
+    def net_ids(self) -> list[str]:
+        return list(self._tenants)
+
+    def over_budget(self, net_id: str) -> bool:
+        """True when the tenant is currently shed (consecutive violations
+        reached ``shed_after``)."""
+        t = self.tenant(net_id)
+        return (self.shed_after is not None
+                and t.metrics.consecutive_violations >= self.shed_after)
+
+    def _admission_check(self, t: Tenant):
+        if self.shed_after is None \
+                or t.metrics.consecutive_violations < self.shed_after:
+            return
+        # Half-open: after shed_after consecutive refusals, admit one probe.
+        # Its measured latency decides whether the tenant re-opens (streak
+        # reset on a within-budget observation) or stays shed.
+        if self._refused[t.net_id] >= self.shed_after:
+            self._refused[t.net_id] = 0
+            return
+        self._refused[t.net_id] += 1
+        raise TenantOverBudget(
+            f"tenant {t.net_id!r} shed: "
+            f"{t.metrics.consecutive_violations} consecutive requests "
+            f"over the {t.metrics.latency_budget_s * 1e6:.1f}us budget")
+
+    # -- edge path (synchronous) ------------------------------------------
+    def infer(self, net_id: str, x):
+        """Route one edge inference; measured against the tenant's budget."""
+        t = self.tenant(net_id)
+        self._admission_check(t)
+        t0 = time.perf_counter()
+        y = t.engine.infer(x)
+        t.metrics.observe_latency(time.perf_counter() - t0)
+        return y
+
+    # -- lm path (continuous batching) ------------------------------------
+    def submit(self, net_id: str, request):
+        """Enqueue an LM request on its tenant's batcher."""
+        t = self.tenant(net_id)
+        self._admission_check(t)
+        self._inflight[net_id].append((request, time.perf_counter()))
+        t.engine.submit(request)
+        return request
+
+    def step(self, wait_s: float = 0.0) -> int:
+        """Tick every LM tenant's batcher once; returns total active slots.
+        The blocking idle wait ``wait_s`` is applied only when EVERY LM
+        tenant is idle, and at most once per router tick — one idle tenant
+        must not stall a busy co-tenant's decodes."""
+        lm = [t for t in self._tenants.values() if t.kind == "lm"]
+        all_idle = all(t.engine.n_active == 0 and t.engine.queue.empty()
+                       for t in lm)
+        remaining_wait = wait_s if all_idle else 0.0
+        total = 0
+        for t in lm:
+            nid = t.net_id
+            n = t.engine.step(wait_s=remaining_wait)
+            remaining_wait = 0.0
+            t.metrics.observe_occupancy(t.engine.n_active, t.slots)
+            total += n
+            # Complete latencies for drained requests.
+            now = time.perf_counter()
+            still = []
+            for req, t0 in self._inflight[nid]:
+                if req.done:
+                    t.metrics.observe_latency(now - t0)
+                else:
+                    still.append((req, t0))
+            self._inflight[nid] = still
+        return total
+
+    def run_until_drained(self, max_ticks: int = 10_000,
+                          wait_s: float = 0.0):
+        """Drive all LM tenants until every queue and slot is empty."""
+        for _ in range(max_ticks):
+            pending = any(
+                not t.engine.queue.empty() or t.engine.n_active
+                for t in self._tenants.values() if t.kind == "lm")
+            if not pending:
+                return
+            self.step(wait_s=wait_s)
+
+    # -- reporting --------------------------------------------------------
+    def report(self) -> dict:
+        """Per-tenant metrics + planned-vs-budget context."""
+        out = {}
+        for nid, t in self._tenants.items():
+            snap = t.metrics.snapshot()
+            snap["planned_latency_s"] = t.plan.est_latency_s
+            snap["kind"] = t.kind
+            snap["shed"] = self.over_budget(nid)
+            out[nid] = snap
+        return out
+
+    def reset_metrics(self):
+        """Zero every tenant's counters (e.g. after jit warmup)."""
+        for t in self._tenants.values():
+            t.metrics.reset()
+        self._refused = {nid: 0 for nid in self._tenants}

@@ -1,0 +1,67 @@
+"""Tenant — one co-resident network inside the serving runtime.
+
+A tenant binds a :class:`~repro.plan.multinet.TenantPlan` slice (the plan,
+the column range, the latency budget) to a live engine: an
+:class:`~repro.serve.engine.EdgeEngine` for extreme-edge nets, a
+:class:`~repro.serve.engine.ContinuousBatcher` for LM nets.  The router owns
+one tenant per net id and never reaches around it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+from repro.serve.metrics import TenantMetrics
+
+
+@dataclasses.dataclass
+class Tenant:
+    net_id: str
+    plan: Any                    # DeploymentPlan (the tenant's slice)
+    engine: Any                  # EdgeEngine | ContinuousBatcher
+    # Seeds metrics.latency_budget_s; AFTER construction the metrics copy is
+    # the live one — enforcement, reporting and runtime adjustments all read
+    # and write ``tenant.metrics.latency_budget_s``.
+    latency_budget_s: float = math.inf
+    metrics: TenantMetrics = None
+
+    def __post_init__(self):
+        if self.metrics is None:
+            self.metrics = TenantMetrics(
+                self.net_id, latency_budget_s=self.latency_budget_s)
+
+    @property
+    def kind(self) -> str:
+        """"edge" (synchronous infer) or "lm" (batched decode)."""
+        return getattr(self.plan, "kind", "edge")
+
+    @property
+    def slots(self) -> int:
+        """Batching capacity (1 for the synchronous edge path)."""
+        return getattr(self.engine, "slots", 1)
+
+
+def edge_tenant(tenant_plan, *, cfg=None, params=None, x_scale: float = 0.05,
+                seed: int = 0) -> Tenant:
+    """Build an edge tenant from a fleet's :class:`TenantPlan`: the engine
+    executes exactly the tenant's planned Pallas blocks."""
+    from repro.models import edge as edge_lib
+    from repro.serve.engine import EdgeEngine
+    plan = tenant_plan.plan
+    if cfg is None:
+        cfg = edge_lib.edge_config(plan.network)
+    engine = EdgeEngine(cfg, params, plan=plan, x_scale=x_scale, seed=seed)
+    return Tenant(net_id=tenant_plan.net_id, plan=plan, engine=engine,
+                  latency_budget_s=tenant_plan.latency_budget_s)
+
+
+def lm_tenant(tenant_plan, cfg, params, *, max_len: int = 256) -> Tenant:
+    """Build an LM tenant: a plan-driven continuous batcher (slots, chunked
+    prefill and admit policy all read from the tenant plan's serve section)."""
+    from repro.serve.engine import ContinuousBatcher
+    plan = tenant_plan.plan
+    batcher = ContinuousBatcher(cfg, params, plan=plan, max_len=max_len)
+    return Tenant(net_id=tenant_plan.net_id, plan=plan, engine=batcher,
+                  latency_budget_s=tenant_plan.latency_budget_s)

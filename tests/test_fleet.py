@@ -1,0 +1,535 @@
+"""Multi-tenant serving runtime tests: fleet planner (joint column packing),
+FleetPlan artifact (schema v2 + v1 compat), router/tenant/metrics,
+plan-driven continuous batcher, calibration feedback, BENCH trend."""
+
+import json
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from benchmarks import trend
+from repro import configs
+from repro import hw as hwlib
+from repro import plan as plan_lib
+from repro.models import api, edge
+from repro.serve import Router, TenantMetrics, TenantOverBudget, engine
+
+
+# ---------------------------------------------------------------------------
+# Fleet planner: joint column packing (paper Section V-C)
+# ---------------------------------------------------------------------------
+
+def test_fleet_aie_columns_disjoint_within_array():
+    cfgs = [edge.edge_config(n) for n in ("jet_tagger", "tau_select", "vae")]
+    fleet = plan_lib.plan_fleet(cfgs, target="aie", pl_budget=0.0)
+    assert len(fleet.tenants) == 3
+    assert fleet.band1_cols_used <= hwlib.AIE_ML.usable_cols
+    # Contiguous, non-overlapping column ranges in placement order.
+    spans = [(t.col_offset, t.col_offset + t.cols) for t in fleet.tenants]
+    for (_, a_end), (b_start, _) in zip(spans, spans[1:]):
+        assert a_end == b_start
+    for t in fleet.tenants:
+        assert set(t.plan.regimes()) == {"aie"}
+        assert t.cols > 0 and t.crossing_s > 0
+        assert t.latency_budget_s > t.plan.est_latency_s
+
+
+def test_fleet_aie_all_nets_contention():
+    """All five Table-I nets jointly: the shared column budget still holds,
+    and no net gets FASTER than its solo plan (co-residency can shrink or
+    spill a net's splits, never improve them)."""
+    cfgs = [edge.edge_config(n) for n in edge.EDGE_NETS]
+    fleet = plan_lib.plan_fleet(cfgs, target="aie", pl_budget=0.0)
+    band1 = sum(l.p_k for t in fleet.tenants for l in t.plan.layers
+                if l.regime == "aie" and l.band == 1)
+    assert band1 <= hwlib.AIE_ML.usable_cols
+    for cfg, t in zip(cfgs, fleet.tenants):
+        solo = plan_lib.plan_deployment(cfg, target="aie", pl_budget=0.0)
+        assert t.plan.est_interval_s >= solo.est_interval_s - 1e-15
+
+
+def test_fleet_tpu_serve_policy_injected():
+    """LM tenants get the batching policy in their serve section; edge
+    tenants keep the plain executor serve section."""
+    lm_cfg = configs.get("qwen2_5_3b").smoke
+    fleet = plan_lib.plan_fleet(
+        [edge.edge_config("jet_tagger"), lm_cfg], target="tpu",
+        serve_slots_total=6, prefill_chunk=4)
+    edge_t, lm_t = fleet.tenants
+    assert edge_t.plan.kind == "edge" and "slots" not in edge_t.plan.serve
+    assert lm_t.plan.kind == "lm"
+    assert lm_t.plan.serve["slots"] == 6          # only LM tenant -> all slots
+    assert lm_t.plan.serve["prefill_chunk"] == 4
+    assert lm_t.plan.serve["admit_per_tick"] == 1
+
+
+def test_fleet_key_sensitivity():
+    cfgs = [edge.edge_config("jet_tagger"), edge.edge_config("tau_select")]
+    f1 = plan_lib.plan_fleet(cfgs, target="aie", pl_budget=0.0)
+    f2 = plan_lib.plan_fleet(list(reversed(cfgs)), target="aie",
+                             pl_budget=0.0)
+    assert f1.key != f2.key                       # placement order matters
+    assert f1.key != plan_lib.plan_fleet(cfgs, target="tpu").key
+
+
+def test_fleet_duplicate_nets_get_unique_ids():
+    cfgs = [edge.edge_config("jet_tagger")] * 2
+    fleet = plan_lib.plan_fleet(cfgs, target="aie", pl_budget=0.0)
+    assert fleet.net_ids == ["jet_tagger", "jet_tagger#1"]
+    assert fleet.tenant("jet_tagger#1").col_offset \
+        == fleet.tenant("jet_tagger").cols
+
+
+def test_fleet_empty_rejected():
+    with pytest.raises(ValueError):
+        plan_lib.plan_fleet([])
+
+
+# ---------------------------------------------------------------------------
+# FleetPlan artifact: schema v2 round-trip + v1 backward compat
+# ---------------------------------------------------------------------------
+
+def test_fleet_json_roundtrip(tmp_path):
+    cfgs = [edge.edge_config(n) for n in ("jet_tagger", "tau_select")]
+    fleet = plan_lib.plan_fleet(cfgs, target="aie", pl_budget=0.0)
+    s = fleet.to_json()
+    json.loads(s)                                  # strict JSON
+    assert plan_lib.FleetPlan.from_json(s) == fleet
+    p = fleet.save(tmp_path / "fleet.json")
+    assert plan_lib.FleetPlan.load(p) == fleet
+
+
+def _as_v1_dict(plan: plan_lib.DeploymentPlan) -> dict:
+    """Re-create a PR-1 v1 artifact dict (no 'kind', schema 1)."""
+    d = plan.to_dict()
+    d["schema"] = 1
+    d.pop("kind")
+    return d
+
+
+def test_v1_deployment_plan_still_loads(tmp_path):
+    plan = plan_lib.plan_deployment(edge.edge_config("jet_tagger"),
+                                    target="tpu")
+    p = tmp_path / "v1.json"
+    p.write_text(json.dumps(_as_v1_dict(plan)))
+    loaded = plan_lib.DeploymentPlan.load(p)
+    assert loaded.network == plan.network
+    assert loaded.schema == plan_lib.artifact.PLAN_SCHEMA_VERSION
+    assert loaded.kind == "edge"                   # v1 default
+    assert loaded.layers == plan.layers
+
+
+def test_fleet_load_wraps_v1_plan(tmp_path):
+    """FleetPlan.load on a PR-1 single-net artifact => one-tenant fleet."""
+    plan = plan_lib.plan_deployment(edge.edge_config("tau_select"),
+                                    target="tpu")
+    p = tmp_path / "v1.json"
+    p.write_text(json.dumps(_as_v1_dict(plan)))
+    fleet = plan_lib.FleetPlan.load(p)
+    assert fleet.net_ids == ["tau_select"]
+    t = fleet.tenants[0]
+    assert t.plan.layers == plan.layers
+    assert t.latency_budget_s == pytest.approx(2.0 * plan.est_latency_s)
+
+
+def test_unknown_schema_rejected():
+    with pytest.raises(ValueError):
+        plan_lib.DeploymentPlan.from_dict({"schema": 99})
+    with pytest.raises(ValueError):
+        plan_lib.FleetPlan.from_dict({"schema": 99, "tenants": []})
+
+
+# ---------------------------------------------------------------------------
+# Calibration feedback (autotune hook)
+# ---------------------------------------------------------------------------
+
+def test_calibration_feedback_updates_cache():
+    cfg = edge.edge_config("jet_tagger")
+    cache = plan_lib.PlanCache()
+    plan = plan_lib.get_or_plan(cfg, target="tpu", cache=cache)
+    measured = plan.est_latency_s * 2.0
+    cal = plan_lib.feedback(plan, measured, cache=cache)
+    assert cal.est_latency_s == pytest.approx(measured)
+    assert cal.key == plan.key                    # same question, same key
+    # Tile decisions untouched; per-layer costs rescaled by one factor.
+    scale = cal.serve["calibration"]["scale"]
+    assert scale > 1.0
+    for l0, l1 in zip(plan.layers, cal.layers):
+        assert l1.api_tile == l0.api_tile and l1.regime == l0.regime
+        assert l1.est_latency_s == pytest.approx(scale * l0.est_latency_s)
+    # The fixed dispatch overhead is NOT folded into the layers: the total
+    # still decomposes as parts + overhead after calibration.
+    parts = sum(l.est_latency_s * l.repeat for l in cal.layers) \
+        + sum(b.crossing_s for b in cal.boundaries)
+    overhead = plan.est_latency_s \
+        - sum(l.est_latency_s * l.repeat for l in plan.layers) \
+        - sum(b.crossing_s for b in plan.boundaries)
+    assert parts + overhead == pytest.approx(measured)
+    # The next same-key plan request returns the calibrated costs.
+    again = plan_lib.get_or_plan(cfg, target="tpu", cache=cache)
+    assert again is cal
+
+
+def test_fleet_replan_picks_up_calibration():
+    """The fleet autotune loop: feedback on a tenant plan, then a re-plan of
+    the SAME fleet returns the calibrated costs (and budgets derived from
+    them)."""
+    cfgs = [edge.edge_config("jet_tagger"), edge.edge_config("tau_select")]
+    cache = plan_lib.PlanCache()
+    fleet = plan_lib.plan_fleet(cfgs, target="tpu", cache=cache)
+    t0 = fleet.tenants[0]
+    measured = t0.plan.est_latency_s * 3.0
+    plan_lib.feedback(t0.plan, measured, cache=cache)
+    again = plan_lib.plan_fleet(cfgs, target="tpu", cache=cache)
+    assert again.tenants[0].plan.est_latency_s == pytest.approx(measured)
+    assert "calibration" in again.tenants[0].plan.serve
+    assert again.tenants[0].latency_budget_s == pytest.approx(
+        2.0 * (measured + again.tenants[0].crossing_s))
+    # The uncalibrated tenant is unaffected.
+    assert again.tenants[1].plan.est_latency_s == pytest.approx(
+        fleet.tenants[1].plan.est_latency_s)
+
+
+def test_fleet_cache_hit_keeps_requested_serve_policy():
+    """A calibrated cache hit contributes COSTS only; the serve policy must
+    reflect what THIS plan_fleet call asked for (the serve knobs are not
+    part of the fleet key)."""
+    lm_cfg = configs.get("qwen2_5_3b").smoke
+    cache = plan_lib.PlanCache()
+    fleet = plan_lib.plan_fleet([lm_cfg], target="tpu", cache=cache,
+                                serve_slots_total=8, prefill_chunk=8)
+    plan = fleet.tenants[0].plan
+    plan_lib.feedback(plan, plan.est_latency_s * 2.0, cache=cache)
+    again = plan_lib.plan_fleet([lm_cfg], target="tpu", cache=cache,
+                                serve_slots_total=2, prefill_chunk=16)
+    t = again.tenants[0]
+    assert t.plan.serve["slots"] == 2             # fresh policy wins
+    assert t.plan.serve["prefill_chunk"] == 16
+    assert "calibration" in t.plan.serve          # calibrated costs kept
+    assert t.plan.est_latency_s == pytest.approx(2.0 * plan.est_latency_s)
+
+
+def test_calibration_feedback_rejects_bad_measurement():
+    plan = plan_lib.plan_deployment(edge.edge_config("jet_tagger"),
+                                    target="tpu")
+    with pytest.raises(ValueError):
+        plan_lib.feedback(plan, 0.0, cache=plan_lib.PlanCache())
+
+
+def test_edge_engine_record_calibration():
+    cfg = edge.edge_config("tau_select")
+    cache = plan_lib.PlanCache()
+    plan = plan_lib.get_or_plan(cfg, target="tpu", cache=cache)
+    eng = engine.EdgeEngine(cfg, plan=plan, x_scale=0.02)
+    with pytest.raises(RuntimeError):
+        eng.record_calibration(cache=cache)       # nothing measured yet
+    x = jax.random.normal(jax.random.PRNGKey(0), (cfg.batch, cfg.dims[0]))
+    eng.infer(x)
+    cal = eng.record_calibration(cache=cache)
+    assert cal.est_latency_s == pytest.approx(eng.measured_mean_s)
+    assert plan_lib.get_or_plan(cfg, target="tpu", cache=cache) is cal
+
+
+# ---------------------------------------------------------------------------
+# Router + tenants + metrics
+# ---------------------------------------------------------------------------
+
+def _edge_fleet(names=("jet_tagger", "tau_select")):
+    return plan_lib.plan_fleet([edge.edge_config(n) for n in names],
+                               target="tpu")
+
+
+def test_router_dispatch_and_metrics():
+    fleet = _edge_fleet()
+    router = Router.from_fleet(fleet)
+    for nid in router.net_ids:
+        cfg = edge.edge_config(nid)
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (cfg.batch, cfg.dims[0])) * 0.5
+        y = router.infer(nid, x)
+        assert y.shape == (cfg.batch, cfg.dims[-1])
+    rep = router.report()
+    for nid in router.net_ids:
+        assert rep[nid]["count"] == 1
+        assert rep[nid]["mean_s"] > 0
+        assert rep[nid]["kind"] == "edge"
+    with pytest.raises(KeyError):
+        router.infer("no_such_net", None)
+
+
+def test_router_engine_matches_direct_execution():
+    """Routing must not change the math: router output == a directly-built
+    EdgeEngine executing the same tenant plan with the same seed."""
+    fleet = _edge_fleet(("jet_tagger",))
+    router = Router.from_fleet(fleet, seed=0)
+    cfg = edge.edge_config("jet_tagger")
+    direct = engine.EdgeEngine(cfg, plan=fleet.tenants[0].plan, seed=0)
+    x = jax.random.normal(jax.random.PRNGKey(2),
+                          (cfg.batch, cfg.dims[0])) * 0.5
+    np.testing.assert_allclose(np.asarray(router.infer("jet_tagger", x)),
+                               np.asarray(direct.infer(x)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_router_budget_violations_and_shedding():
+    fleet = _edge_fleet(("jet_tagger",))
+    router = Router.from_fleet(fleet, shed_after=2)
+    t = router.tenant("jet_tagger")
+    t.metrics.latency_budget_s = 1e-12            # impossible budget
+    cfg = edge.edge_config("jet_tagger")
+    x = jax.random.normal(jax.random.PRNGKey(3), (cfg.batch, cfg.dims[0]))
+    router.infer("jet_tagger", x)
+    assert not router.over_budget("jet_tagger")
+    router.infer("jet_tagger", x)
+    assert router.over_budget("jet_tagger")
+    assert t.metrics.budget_violations == 2
+    with pytest.raises(TenantOverBudget):
+        router.infer("jet_tagger", x)             # shed, not served
+    router.reset_metrics()                        # re-opens the tenant
+    t.metrics.latency_budget_s = 1e9
+    router.infer("jet_tagger", x)
+    assert not router.over_budget("jet_tagger")
+
+
+def test_router_shed_tenant_reopens_via_probe():
+    """Half-open shedding: after shed_after refusals one probe is admitted,
+    and a within-budget probe re-opens the tenant."""
+    fleet = _edge_fleet(("tau_select",))
+    router = Router.from_fleet(fleet, shed_after=2)
+    t = router.tenant("tau_select")
+    cfg = edge.edge_config("tau_select")
+    x = jax.random.normal(jax.random.PRNGKey(4), (cfg.batch, cfg.dims[0]))
+    t.metrics.latency_budget_s = 1e-12
+    router.infer("tau_select", x)
+    router.infer("tau_select", x)                 # 2 violations -> shed
+    for _ in range(2):                            # shed_after refusals
+        with pytest.raises(TenantOverBudget):
+            router.infer("tau_select", x)
+    t.metrics.latency_budget_s = 1e9              # tenant recovered
+    router.infer("tau_select", x)                 # the admitted probe
+    assert not router.over_budget("tau_select")
+    router.infer("tau_select", x)                 # serving normally again
+
+
+def test_router_lm_tenant_plan_driven_batcher():
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    fleet = plan_lib.plan_fleet([cfg], target="tpu", serve_slots_total=2,
+                                prefill_chunk=2)
+    nid = fleet.net_ids[0]
+    router = Router.from_fleet(fleet, lm={nid: (cfg, params)})
+    t = router.tenant(nid)
+    assert t.kind == "lm" and t.engine.slots == 2
+    assert t.engine.policy.prefill_chunk == 2
+    reqs = [engine.Request(rid=i, prompt=np.array([3 + i, 5, 7], np.int32),
+                           max_new=3) for i in range(3)]
+    for r in reqs:
+        router.submit(nid, r)
+    router.run_until_drained(max_ticks=300)
+    for r in reqs:
+        assert r.done and len(r.out) == 3
+    rep = router.report()[nid]
+    assert rep["count"] == 3                      # request latencies recorded
+    assert rep["occupancy"] > 0
+    assert rep["mean_s"] > 0
+
+
+def test_tenant_metrics_counters():
+    m = TenantMetrics("x", latency_budget_s=1.0)
+    assert m.observe_latency(0.5) is True
+    assert m.observe_latency(2.0) is False
+    assert m.budget_violations == 1 and m.consecutive_violations == 1
+    assert m.observe_latency(0.1) is True
+    assert m.consecutive_violations == 0          # success resets the streak
+    m.observe_occupancy(2, 4)
+    m.observe_occupancy(4, 4)
+    assert m.occupancy == pytest.approx(0.75)
+    assert m.mean_s == pytest.approx((0.5 + 2.0 + 0.1) / 3)
+    assert m.p50_s == 0.5
+    assert m.p95_s == 2.0
+    snap = m.snapshot()
+    assert snap["count"] == 3 and snap["budget_violations"] == 1
+    m.reset()
+    assert m.count == 0 and m.occupancy == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Plan-driven continuous batcher
+# ---------------------------------------------------------------------------
+
+def _lm_plan_with_serve(cfg, serve):
+    plan = plan_lib.plan_deployment(cfg, target="tpu")
+    return plan_lib.DeploymentPlan.from_dict(
+        {**plan.to_dict(), "serve": serve})
+
+
+def test_batcher_reads_policy_from_plan():
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    plan = _lm_plan_with_serve(cfg, {"slots": 2, "prefill_chunk": 2,
+                                     "admit_per_tick": 1, "max_new_cap": 2})
+    b = engine.ContinuousBatcher(cfg, params, plan=plan, max_len=64)
+    assert b.slots == 2
+    assert b.policy.prefill_chunk == 2 and b.policy.max_new_cap == 2
+
+
+def test_batcher_chunked_prefill_spreads_over_ticks():
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    plan = _lm_plan_with_serve(cfg, {"slots": 1, "prefill_chunk": 2})
+    b = engine.ContinuousBatcher(cfg, params, plan=plan, max_len=64)
+    req = engine.Request(rid=0, prompt=np.array([3, 5, 7, 11, 13], np.int32),
+                         max_new=8)
+    b.submit(req)
+    b.step()                          # admit + first 2-token chunk
+    assert req.filled == 2 and not req.out and b.pos[0] == 2
+    b.step()                          # second chunk
+    assert req.filled == 4 and not req.out
+    b.step()                          # final chunk -> first token + 1 decode
+    assert req.filled == 5 and len(req.out) == 2
+
+
+def test_batcher_chunked_prefill_matches_unchunked_state():
+    """Chunking only spreads prefill across ticks; the slot's cache and
+    cursor must end up identical to the one-shot path (token-level outputs
+    are near-tie argmaxes — assert on state, per the repo convention)."""
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    prompt = np.array([4, 8, 15, 16, 23], np.int32)
+
+    def drained(serve):
+        plan = _lm_plan_with_serve(cfg, serve)
+        b = engine.ContinuousBatcher(cfg, params, plan=plan, max_len=64)
+        b.submit(engine.Request(rid=0, prompt=prompt.copy(), max_new=3))
+        b.run_until_drained(max_ticks=50)
+        return b
+
+    one_shot = drained({"slots": 1})
+    chunked = drained({"slots": 1, "prefill_chunk": 2})
+    assert one_shot.pos[0] == chunked.pos[0]
+    for a, c in zip(jax.tree.leaves(one_shot.state),
+                    jax.tree.leaves(chunked.state)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(c, np.float32),
+                                   rtol=1e-2, atol=1e-2)
+
+
+def test_batcher_max_new_cap_evicts():
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    plan = _lm_plan_with_serve(cfg, {"slots": 1, "max_new_cap": 2})
+    b = engine.ContinuousBatcher(cfg, params, plan=plan, max_len=64)
+    req = engine.Request(rid=0, prompt=np.array([3, 5], np.int32),
+                         max_new=50)               # plan cap overrides
+    b.submit(req)
+    b.run_until_drained(max_ticks=20)
+    assert req.done and len(req.out) == 2
+
+
+def test_batcher_admit_per_tick_limits_admissions():
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    plan = _lm_plan_with_serve(cfg, {"slots": 2, "admit_per_tick": 1})
+    b = engine.ContinuousBatcher(cfg, params, plan=plan, max_len=64)
+    for i in range(2):
+        b.submit(engine.Request(rid=i, prompt=np.array([3 + i], np.int32),
+                                max_new=8))
+    b.step()
+    assert b.n_active == 1                         # one admission per tick
+    b.step()
+    assert b.n_active == 2
+
+
+def test_batch_policy_rejects_stalling_values():
+    with pytest.raises(ValueError):
+        engine.BatchPolicy(prefill_chunk=0)       # would never make progress
+    with pytest.raises(ValueError):
+        engine.BatchPolicy(slots=0)
+    with pytest.raises(ValueError):
+        engine.BatchPolicy(admit_per_tick=0)
+    # An explicit 0 in a plan's serve section must fail validation too, not
+    # be coerced to the default by a truthiness check.
+    class _P:
+        serve = {"slots": 0}
+    with pytest.raises(ValueError):
+        engine.BatchPolicy.from_plan(_P())
+
+
+def test_router_idle_tenant_does_not_stall_busy_cotenant():
+    """The router-level idle wait applies only when EVERY LM tenant is
+    idle: tenant A being drained must not throttle tenant B's decodes."""
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    fleet = plan_lib.plan_fleet([cfg, cfg], target="tpu",
+                                serve_slots_total=2, prefill_chunk=None)
+    a, b = fleet.net_ids
+    router = Router.from_fleet(fleet, lm={a: (cfg, params),
+                                          b: (cfg, params)})
+    router.submit(b, engine.Request(rid=0, prompt=np.array([3], np.int32),
+                                    max_new=4))
+    router.step()                                 # b busy, a idle
+    t0 = time.perf_counter()
+    router.step(wait_s=30.0)
+    assert time.perf_counter() - t0 < 10.0        # no per-tenant parking
+
+
+def test_batcher_busy_step_does_not_block_on_empty_queue():
+    """The blocking idle wait applies only when every slot is empty: a busy
+    batcher must keep decoding at full rate."""
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    b = engine.ContinuousBatcher(cfg, params, slots=2, max_len=32)
+    b.submit(engine.Request(rid=0, prompt=np.array([3, 5], np.int32),
+                            max_new=8))
+    b.step()                                      # admit; slot 0 busy
+    t0 = time.perf_counter()
+    b.step(wait_s=30.0)                           # free slot + empty queue
+    assert time.perf_counter() - t0 < 10.0        # decoded, did not park
+
+
+def test_batcher_idle_blocks_instead_of_spinning():
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    b = engine.ContinuousBatcher(cfg, params, slots=1, max_len=32)
+    t0 = time.perf_counter()
+    assert b.step(wait_s=0.2) == 0                 # idle: parks in the kernel
+    assert time.perf_counter() - t0 >= 0.15
+    # A queued request is admitted without burning the full wait.
+    b.submit(engine.Request(rid=0, prompt=np.array([7], np.int32), max_new=1))
+    assert b.step(wait_s=30.0) >= 0
+    assert b._steps >= 1                           # it actually decoded
+
+
+# ---------------------------------------------------------------------------
+# BENCH trend tracking
+# ---------------------------------------------------------------------------
+
+def test_trend_compare_classifies_deltas():
+    old = {"rows": [{"name": "a", "us_per_call": 10.0},
+                    {"name": "b", "us_per_call": 1.0},
+                    {"name": "d", "us_per_call": 5.0}]}
+    new = {"rows": [{"name": "a", "us_per_call": 20.0},
+                    {"name": "c", "us_per_call": 2.0},
+                    {"name": "d", "us_per_call": 5.1}]}
+    deltas = {d["name"]: d for d in trend.compare(old, new)}
+    assert deltas["a"]["status"] == "regression"
+    assert deltas["a"]["delta_pct"] == pytest.approx(100.0)
+    assert deltas["b"]["status"] == "gone"
+    assert deltas["c"]["status"] == "new"
+    assert deltas["d"]["status"] == "steady"
+
+
+def test_trend_report_roundtrips_files(tmp_path, capsys):
+    old = {"meta": {}, "rows": [{"name": "x", "us_per_call": 1.0,
+                                "derived": "src=model"}]}
+    new = {"meta": {}, "rows": [{"name": "x", "us_per_call": 3.0,
+                                "derived": "src=model"}]}
+    p_old, p_new = tmp_path / "old.json", tmp_path / "new.json"
+    p_old.write_text(json.dumps(old))
+    p_new.write_text(json.dumps(new))
+    rc = trend.main([str(p_new), "--against", str(p_old)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "SLOWER" in out and "+200.0%" in out

@@ -213,3 +213,46 @@ def test_cli_emits_artifacts(tmp_path, capsys):
 
 def test_cli_rejects_unknown_net(tmp_path):
     assert plan_cli.main(["nope", "--out", str(tmp_path)]) == 2
+    assert plan_cli.main(["jet_tagger", "nope", "--out", str(tmp_path)]) == 2
+
+
+def test_cli_artifact_roundtrip(tmp_path):
+    """CLI plan -> JSON -> reload is lossless: the reloaded artifact
+    re-serializes byte-identically."""
+    assert plan_cli.main(["qubit", "--target", "tpu",
+                          "--out", str(tmp_path)]) == 0
+    art = tmp_path / "qubit_tpu.json"
+    plan = plan_lib.DeploymentPlan.load(art)
+    assert plan.to_json() + "\n" == art.read_text()
+    assert plan_lib.DeploymentPlan.from_json(plan.to_json()) == plan
+
+
+def test_cli_artifact_v1_backward_compat(tmp_path):
+    """A CLI artifact downgraded to the PR-1 v1 schema still loads under
+    schema v2 — both as a DeploymentPlan and wrapped by FleetPlan."""
+    assert plan_cli.main(["vae", "--target", "tpu",
+                          "--out", str(tmp_path)]) == 0
+    art = tmp_path / "vae_tpu.json"
+    d = json.loads(art.read_text())
+    d["schema"] = 1
+    d.pop("kind")
+    v1 = tmp_path / "vae_tpu_v1.json"
+    v1.write_text(json.dumps(d))
+    plan = plan_lib.DeploymentPlan.load(v1)
+    assert plan.schema == plan_lib.artifact.PLAN_SCHEMA_VERSION
+    assert plan == plan_lib.DeploymentPlan.load(art)
+    fleet = plan_lib.FleetPlan.load(v1)
+    assert fleet.net_ids == ["vae"]
+
+
+def test_cli_fleet_emits_artifact(tmp_path, capsys):
+    rc = plan_cli.main(["jet_tagger", "tau_select", "--target", "aie",
+                        "--pl-budget", "0", "--out", str(tmp_path)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "fleet jet_tagger+tau_select [aie]" in out
+    art = tmp_path / "fleet_jet_tagger+tau_select_aie.json"
+    fleet = plan_lib.FleetPlan.load(art)
+    assert fleet.net_ids == ["jet_tagger", "tau_select"]
+    assert fleet.band1_cols_used > 0
+    assert plan_lib.FleetPlan.from_json(fleet.to_json()) == fleet
