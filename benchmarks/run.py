@@ -20,8 +20,8 @@ import time
 
 from benchmarks import (common, fig2_scalability, fig3_lare, fig4_api_tiling,
                         fig5_spatial, fig6_column_exhaustion, fig7_boundary,
-                        fig8_planner, fig9_coresidency, table1_deployment,
-                        trend)
+                        fig8_planner, fig9_coresidency, fig10_characterize,
+                        table1_deployment, trend)
 
 ALL = {
     "fig2": fig2_scalability.run,
@@ -32,6 +32,7 @@ ALL = {
     "fig7": fig7_boundary.run,
     "fig8": fig8_planner.run,
     "fig9": fig9_coresidency.run,
+    "fig10": fig10_characterize.run,
     "table1": table1_deployment.run,
 }
 

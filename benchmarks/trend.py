@@ -8,15 +8,24 @@ shows up in the run log instead of silently replacing the old numbers.
   PYTHONPATH=src python -m benchmarks.trend bench/BENCH_fig8.json
       # vs the committed version (git show HEAD:<path>)
   PYTHONPATH=src python -m benchmarks.trend new.json --against old.json
+  PYTHONPATH=src python -m benchmarks.trend bench/BENCH_fig8.json --gate
+      # CI regression gate: exit 2 when a model-sourced metric regressed
 
 ``run.py`` calls :func:`report` automatically whenever a previous snapshot
-exists at the output path.
+exists at the output path.  ``--gate`` turns the diff into a CI check: any
+``src=model`` row (deterministic, host-independent) slower than the
+committed baseline by more than ``REGRESSION_PCT`` fails the build.
+Measured rows jitter with the host and are reported but never gate.  To
+land an intentional perf trade-off, set ``TREND_GATE_OVERRIDE=1`` — the CI
+workflow maps the ``perf-regression-ok`` PR label onto it — and update the
+committed baseline in the same PR.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import subprocess
 import sys
@@ -60,15 +69,44 @@ def compare(old_payload: dict, new_payload: dict) -> list[dict]:
             continue
         if n is None:
             out.append({"name": name, "status": "gone",
-                        "old_us": o["us_per_call"]})
+                        "old_us": o["us_per_call"],
+                        "derived": o.get("derived", "")})
             continue
         ou, nu = o["us_per_call"], n["us_per_call"]
         pct = 100.0 * (nu - ou) / ou if ou else (0.0 if nu == ou else 100.0)
         status = ("regression" if pct > REGRESSION_PCT
                   else "improvement" if pct < -REGRESSION_PCT else "steady")
         out.append({"name": name, "status": status, "old_us": ou,
-                    "new_us": nu, "delta_pct": round(pct, 1)})
+                    "new_us": nu, "delta_pct": round(pct, 1),
+                    "derived": n.get("derived", "")})
     return out
+
+
+def gate(deltas: list[dict], *, print_fn=print) -> int:
+    """CI regression gate over a diff: 0 = clean, 2 = gated regression.
+
+    Only ``src=model`` rows gate — they are deterministic functions of the
+    code, so any slowdown is a real cost-model/planner change, not host
+    jitter.  A DISAPPEARED model row gates too: deleting or renaming a
+    metric must not be a silent way around the check.
+    ``TREND_GATE_OVERRIDE=1`` downgrades failures to warnings (the CI
+    workflow sets it from the ``perf-regression-ok`` PR label)."""
+    gated = [d for d in deltas if d["status"] in ("regression", "gone")
+             and "src=model" in d.get("derived", "")]
+    if not gated:
+        return 0
+    for d in gated:
+        what = "vanished metric" if d["status"] == "gone" else "regression"
+        print_fn(f"[gate] model-sourced {what}: {format_delta(d).strip()}")
+    if os.environ.get("TREND_GATE_OVERRIDE"):
+        print_fn(f"[gate] {len(gated)} regression(s) overridden "
+                 f"(TREND_GATE_OVERRIDE set)")
+        return 0
+    print_fn(f"[gate] FAIL: {len(gated)} model-sourced metric(s) regressed "
+             f">{REGRESSION_PCT:.0f}% vs the committed baseline; apply the "
+             f"perf-regression-ok label (or set TREND_GATE_OVERRIDE=1) and "
+             f"refresh the baseline to land this intentionally")
+    return 2
 
 
 def format_delta(d: dict) -> str:
@@ -106,11 +144,20 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--against", default=None,
                     help="previous snapshot (default: committed version "
                          "via git show HEAD:<path>)")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 2 when a model-sourced metric regressed more "
+                         f"than {REGRESSION_PCT:.0f}%% vs the baseline "
+                         "(override: TREND_GATE_OVERRIDE=1 / the "
+                         "perf-regression-ok PR label)")
     args = ap.parse_args(argv)
     new_payload = load(args.snapshot)
     old_payload = (load(args.against) if args.against
                    else load_committed(args.snapshot))
     if old_payload is None:
+        if args.gate:       # a brand-new snapshot has nothing to regress
+            print(f"[gate] no committed baseline for {args.snapshot}; "
+                  f"nothing to gate")
+            return 0
         print(f"no committed baseline for {args.snapshot}; nothing to diff",
               file=sys.stderr)
         return 1
@@ -118,6 +165,8 @@ def main(argv: list[str] | None = None) -> int:
     for d in deltas:
         if d["status"] == "steady":
             print(format_delta(d))
+    if args.gate:
+        return gate(deltas)
     return 0
 
 

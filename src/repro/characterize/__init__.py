@@ -1,0 +1,32 @@
+"""Characterization harness: measured machine-model artifacts.
+
+The paper's method is *systematic architectural characterization and
+micro-benchmarking* feeding the LARE decision rule; this package is that
+layer.  ``harness`` times the primitives the planner charges (multi-launch
+int8 GEMM pipelines, float matmul chains, un-fused launch boundaries,
+band-2 contention), ``sweeps`` parameterizes them into quick/full grids,
+``fit`` least-squares-fits each cost term, and ``model`` packages the result
+as a sha256-versioned :class:`MachineModel` JSON artifact with provenance.
+
+The planner consumes the artifact directly::
+
+    mm = characterize(sweep="quick")          # or MachineModel.load(path)
+    plan = plan_deployment(cfg, machine_model=mm)
+
+and mixes ``mm.version`` into the plan cache key, so plans made under a
+stale model self-invalidate.  CLI::
+
+    PYTHONPATH=src python -m repro.characterize --sweep quick --out model.json
+    PYTHONPATH=src python -m repro.plan jet_tagger --machine-model model.json
+"""
+
+from repro.characterize.fit import TermFit, fit_all, fit_term
+from repro.characterize.harness import Sample
+from repro.characterize.model import (MODEL_SCHEMA_VERSION, MachineModel,
+                                      characterize)
+from repro.characterize.sweeps import SWEEPS, TERMS, run_sweep, run_term
+
+__all__ = [
+    "MODEL_SCHEMA_VERSION", "MachineModel", "SWEEPS", "Sample", "TERMS",
+    "TermFit", "characterize", "fit_all", "fit_term", "run_sweep", "run_term",
+]

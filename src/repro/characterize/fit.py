@@ -1,0 +1,120 @@
+"""Least-squares model fitting over characterization samples.
+
+Each cost term is a linear model in its sweep's regressors, so one
+``lstsq`` per term recovers the machine constants the planner charges —
+the generalization of ``calibrate.calibrated_cpu_model``'s 2-constant fit
+(launch overhead + inverse peak) to the full term set:
+
+* ``gemm_int8``:  t = overhead * launches + inv_peak * padded_ops
+* ``gemm_f32``:   t = overhead * launches + inv_peak * ops
+* ``boundary``:   t = const + dispatch * launches + per_byte * launch_bytes
+* ``contention``: t = base * (1 + slope * n_band2)
+
+Every :class:`TermFit` carries its relative-RMS residual so an artifact is
+auditable: a term whose residual blew up says "this host does not behave
+linearly in this regressor", not "trust these constants".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.characterize.harness import Sample
+
+# regressor design per term (column order matters: constants map 1:1).
+_DESIGNS = {
+    "gemm_int8": ("launches", "padded_ops"),
+    "gemm_f32": ("launches", "ops"),
+    "boundary": ("one", "launches", "launch_bytes"),
+    "contention": ("one", "n_band2"),
+}
+# Wall-clock terms vs analytical-curve terms (artifact provenance labels).
+_SOURCES = {"gemm_int8": "measured", "gemm_f32": "measured",
+            "boundary": "measured", "contention": "model"}
+
+
+@dataclasses.dataclass(frozen=True)
+class TermFit:
+    """One fitted cost term: named constants + fit-quality evidence."""
+    term: str
+    constants: dict                # name -> fitted value (clamped, derived)
+    coefficients: tuple            # raw lstsq solution, design order
+    residual_rel_rms: float        # rms(pred - t) / mean(t)
+    n_samples: int
+    source: str                    # "measured" (wall clock) | "model"
+
+    def to_dict(self) -> dict:
+        return {"term": self.term, "constants": dict(self.constants),
+                "coefficients": list(self.coefficients),
+                "residual_rel_rms": self.residual_rel_rms,
+                "n_samples": self.n_samples, "source": self.source}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TermFit":
+        return cls(term=d["term"], constants=dict(d["constants"]),
+                   coefficients=tuple(d["coefficients"]),
+                   residual_rel_rms=d["residual_rel_rms"],
+                   n_samples=d["n_samples"], source=d["source"])
+
+
+def _lstsq(samples: list[Sample], columns: tuple) -> tuple[tuple, float]:
+    import numpy as np
+    a = np.array([[s.regressors.get(c, 1.0 if c == "one" else 0.0)
+                   for c in columns] for s in samples])
+    t = np.array([s.seconds for s in samples])
+    coef, *_ = np.linalg.lstsq(a, t, rcond=None)
+    pred = a @ coef
+    mean = float(np.mean(t)) or 1.0
+    rel = float(np.sqrt(np.mean((pred - t) ** 2))) / mean
+    return tuple(float(c) for c in coef), rel
+
+
+def _constants_for(term: str, coef: tuple) -> dict:
+    """Map raw coefficients to the named machine constants, with the
+    physical clamps the planner needs (positive peaks, non-negative costs)."""
+    if term == "gemm_int8":
+        overhead, inv_peak = coef
+        peak = 1.0 / inv_peak if inv_peak > 1e-15 else 1e12
+        return {"kernel_overhead_s": max(overhead, 1e-6),
+                "peak_int8_ops": max(peak, 1e6)}
+    if term == "gemm_f32":
+        _, inv_peak = coef
+        peak = 1.0 / inv_peak if inv_peak > 1e-15 else 1e12
+        return {"peak_flops": max(peak, 5e5)}
+    if term == "boundary":
+        _, dispatch, per_byte = coef
+        # crossing_cost_tpu charges 2*bytes/hbm_bw per boundary; invert the
+        # fitted per-byte slope into that effective bandwidth.  A slope at or
+        # below noise means the round trip is unmeasurably cheap here ->
+        # effectively infinite bandwidth (overhead-bound host).
+        hbm_bw = 2.0 / per_byte if per_byte > 1e-18 else 1e15
+        return {"dispatch_s": max(dispatch, 0.0), "hbm_bw": hbm_bw}
+    if term == "contention":
+        base, slope_abs = coef
+        slope = slope_abs / base if base > 0 else 0.0
+        return {"band2_penalty_per_layer": max(slope, 0.0)}
+    raise ValueError(f"unknown term {term!r}")
+
+
+def fit_term(term: str, samples: list[Sample]) -> TermFit:
+    """Fit one cost term from its sweep samples."""
+    rows = [s for s in samples if s.term == term]
+    if len(rows) < len(_DESIGNS[term]):
+        raise ValueError(f"term {term!r} needs >= {len(_DESIGNS[term])} "
+                         f"samples, got {len(rows)}")
+    coef, rel = _lstsq(rows, _DESIGNS[term])
+    if not math.isfinite(rel):
+        raise ValueError(f"term {term!r} fit diverged (residual={rel})")
+    return TermFit(term=term, constants=_constants_for(term, coef),
+                   coefficients=coef, residual_rel_rms=rel,
+                   n_samples=len(rows), source=_SOURCES[term])
+
+
+def fit_all(samples: list[Sample]) -> dict[str, TermFit]:
+    """Fit every term present in the sample set."""
+    terms = []
+    for s in samples:                      # preserve first-seen term order
+        if s.term not in terms:
+            terms.append(s.term)
+    return {t: fit_term(t, samples) for t in terms}

@@ -1,0 +1,192 @@
+"""Microbenchmark primitives for architectural characterization.
+
+Each ``time_*`` helper runs ONE microbenchmark point — the same shape of
+computation the planner charges a cost term for — and returns a
+:class:`Sample`: the measured wall time plus the regressor values the fitter
+needs (launch count, padded op count, boundary bytes).  The helpers measure
+the exact code paths the plan executors run (``kernels.ops.gemm_int8`` in
+interpret mode on CPU, jitted XLA matmul chains, un-fused jit dispatch), so
+the fitted constants describe THIS host, not a datasheet.
+
+Every helper takes a ``timer`` hook so tests (and dry-run fits) can replace
+wall-clock timing with a synthetic analytical cost: the whole sweep->fit->
+artifact machinery then runs deterministically in milliseconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+_BM = 32                           # pipeline batch block (matches calibrate)
+
+
+@dataclasses.dataclass(frozen=True)
+class Sample:
+    """One microbenchmark observation: measured seconds + fit regressors."""
+    term: str                      # cost term this point characterizes
+    inputs: dict                   # sweep coordinates (depth, width, dtype...)
+    regressors: dict               # named regressor values for the LSQ fit
+    seconds: float                 # measured (or synthetic) wall time
+
+    def to_dict(self) -> dict:
+        return {"term": self.term, "inputs": dict(self.inputs),
+                "regressors": dict(self.regressors),
+                "seconds": self.seconds}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Sample":
+        return cls(term=d["term"], inputs=dict(d["inputs"]),
+                   regressors=dict(d["regressors"]), seconds=d["seconds"])
+
+
+# Timer type: (build() -> (fn, args)) -> median seconds per call.
+Timer = Callable[..., float]
+
+
+def wall_timer(fn, *args, iters: int = 5, warmup: int = 1) -> float:
+    """Median wall seconds per call (block_until_ready)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return ((x + q - 1) // q) * q
+
+
+def int8_pipeline_regressors(width: int, depth: int, batch: int) -> dict:
+    """Fit regressors for a depth-layer width x width int8 GEMM pipeline.
+
+    ``padded_ops`` (not logical FLOPs) is the throughput regressor because
+    ``plan_api``'s efficiency term is exactly the padding-waste product —
+    fitting logical ops would double-count the waste.  Inter-launch
+    activation traffic is NOT a regressor here: it is characterized by the
+    dedicated ``boundary`` sweep, whose per-byte slope the artifact folds
+    into ``hbm_bw``.
+    """
+    bk = bn = min(_ceil_to(width, 128), 512)
+    ops = depth * 2.0 * _ceil_to(batch, _BM) * _ceil_to(width, bk) \
+        * _ceil_to(width, bn)
+    return {"launches": float(depth), "padded_ops": ops}
+
+
+def time_int8_pipeline(width: int, depth: int, *, batch: int = 8,
+                       iters: int = 5, timer: Timer | None = None) -> Sample:
+    """One (depth, width) point of the int8 GEMM-pipeline sweep — the same
+    multi-launch shape :func:`repro.plan.calibrate.calibrated_cpu_model`
+    originally timed, now a reusable characterization primitive."""
+    regs = int8_pipeline_regressors(width, depth, batch)
+    if timer is not None:
+        return Sample("gemm_int8", {"depth": depth, "width": width,
+                                    "dtype": "int8", "batch": batch},
+                      regs, timer("gemm_int8", regs))
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops as kops
+
+    ws = jnp.ones((depth, width, width), jnp.int8)
+    sc = jnp.ones((width,), jnp.float32)
+    bk = bn = min(_ceil_to(width, 128), 512)
+
+    @jax.jit
+    def f(x):
+        h = x
+        for i in range(depth):
+            y = kops.gemm_int8(h, ws[i], sc, 1.0, block_m=_BM, block_k=bk,
+                               block_n=bn, out_dtype=jnp.float32)
+            h = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+        return h
+
+    x = jnp.ones((batch, width), jnp.int8)
+    t = wall_timer(f, x, iters=iters)
+    return Sample("gemm_int8", {"depth": depth, "width": width,
+                                "dtype": "int8", "batch": batch}, regs, t)
+
+
+def time_f32_chain(width: int, depth: int, *, batch: int = 8,
+                   iters: int = 5, timer: Timer | None = None) -> Sample:
+    """One point of the float matmul-chain sweep (the XLA path LM layers
+    take): a jitted chain of ``depth`` dense matmuls at ``width``."""
+    regs = {"launches": float(depth),
+            "ops": depth * 2.0 * batch * width * width}
+    if timer is not None:
+        return Sample("gemm_f32", {"depth": depth, "width": width,
+                                   "dtype": "float32", "batch": batch},
+                      regs, timer("gemm_f32", regs))
+    import jax
+    import jax.numpy as jnp
+
+    ws = jnp.ones((depth, width, width), jnp.float32) * 0.01
+
+    @jax.jit
+    def f(x):
+        h = x
+        for i in range(depth):
+            h = h @ ws[i]                  # pure dot: ops regressor is exact
+        return h
+
+    x = jnp.ones((batch, width), jnp.float32)
+    t = wall_timer(f, x, iters=iters)
+    return Sample("gemm_f32", {"depth": depth, "width": width,
+                               "dtype": "float32", "batch": batch}, regs, t)
+
+
+def time_unfused_chain(n_launches: int, act_bytes: int, *, iters: int = 5,
+                       timer: Timer | None = None) -> Sample:
+    """One point of the DR7' boundary sweep: ``n_launches`` SEPARATE jitted
+    element-wise launches over an ``act_bytes`` activation.  Each un-fused
+    boundary pays a dispatch plus the activation round trip — exactly what
+    :func:`repro.core.boundary.crossing_cost_tpu` charges."""
+    regs = {"launches": float(n_launches),
+            "launch_bytes": float(n_launches) * act_bytes}
+    if timer is not None:
+        return Sample("boundary", {"n_launches": n_launches,
+                                   "act_bytes": act_bytes},
+                      regs, timer("boundary", regs))
+    import jax
+    import jax.numpy as jnp
+
+    n = max(act_bytes // 4, 1)                      # float32 elements
+    step = jax.jit(lambda v: v * 1.0000001 + 0.5)
+
+    def chain(v):
+        for _ in range(n_launches):
+            v = step(v)
+        return v
+
+    x = jnp.ones((n,), jnp.float32)
+    t = wall_timer(chain, x, iters=iters)
+    return Sample("boundary", {"n_launches": n_launches,
+                               "act_bytes": act_bytes}, regs, t)
+
+
+def model_band2_point(n_band2: int, *, shape=(8, 128, 128), aie=None,
+                      timer: Timer | None = None) -> Sample:
+    """One point of the band-2 contention sweep.
+
+    The AIE array is not physically present on this host, so the sweep reads
+    the paper-calibrated analytical curves (:mod:`repro.core.tiling`) instead
+    of wall clock — labeled ``src=model`` in the artifact provenance.  On a
+    real VEK280 the same fit consumes measured intervals.
+    """
+    m, k, n = shape
+    regs = {"n_band2": float(n_band2), "one": 1.0}
+    if timer is not None:
+        return Sample("contention", {"n_band2": n_band2, "shape": list(shape)},
+                      regs, timer("contention", regs))
+    from repro import hw as hwlib
+    from repro.core import tiling
+    aie = aie or hwlib.AIE_ML
+    t = tiling.aie_spatial_interval(m, k, n, 2, 2, layers_in_band_2=n_band2,
+                                    aie=aie)
+    return Sample("contention", {"n_band2": n_band2, "shape": list(shape)},
+                  regs, t)

@@ -1,0 +1,175 @@
+"""MachineModel — the versioned, serializable characterization artifact.
+
+A ``MachineModel`` is what replaces hand-tuned ``hw.py`` constants: the
+fitted cost terms (:class:`repro.characterize.fit.TermFit`) plus provenance
+(host, jax version, sweep grids, residuals).  Its ``version`` is a sha256
+over the SEMANTIC content — schema + fitted constants — so two runs that fit
+the same constants agree on version, any constant change produces a new one,
+and the plan cache (which mixes the version into the plan key) invalidates
+stale plans automatically.
+
+Consumers never read the fits directly; they ask for re-parameterized
+hardware models::
+
+    mm = characterize(sweep="quick")
+    plan = plan_deployment(cfg, target="tpu", machine_model=mm)
+    # planner internally uses mm.tpu(base=hw.TPU_V5E) / mm.aie(base=hw.AIE_ML)
+
+JSON schema (``MODEL_SCHEMA_VERSION``)::
+
+    {"schema": 1, "version": "<sha256>",
+     "fits": {"gemm_int8": {"constants": {...}, "residual_rel_rms": ...},
+              ...},
+     "provenance": {"host": ..., "jax": ..., "sweep": ..., "grids": {...}}}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+
+from repro import hw as hwlib
+from repro.characterize import fit as fitlib
+from repro.characterize import sweeps as sweeplib
+from repro.characterize.fit import TermFit
+
+MODEL_SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineModel:
+    """Fitted machine-model artifact: cost-term fits + provenance."""
+    fits: dict                     # term -> TermFit
+    provenance: dict
+    schema: int = MODEL_SCHEMA_VERSION
+
+    # -- identity ---------------------------------------------------------
+    @property
+    def version(self) -> str:
+        """sha256 over schema + the fitted CONSTANTS — the only part of a
+        fit the planner reads.  Not provenance, not residuals, not raw
+        coefficients: two characterization runs that land on the same
+        clamped constants agree on version (so cached plans survive a
+        re-characterization that changed nothing), and any constant change
+        produces a new one."""
+        payload = {"schema": self.schema,
+                   "fits": {t: dict(f.constants) for t, f in
+                            sorted(self.fits.items())}}
+        blob = json.dumps(payload, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()
+
+    def constant(self, term: str, name: str, default=None):
+        f = self.fits.get(term)
+        if f is None:
+            return default
+        return f.constants.get(name, default)
+
+    def residuals(self) -> dict:
+        return {t: f.residual_rel_rms for t, f in self.fits.items()}
+
+    # -- hardware-model substitution --------------------------------------
+    def tpu(self, base: hwlib.TpuV5e = hwlib.TPU_V5E) -> hwlib.TpuV5e:
+        """``base`` with every TPU-side fitted constant substituted."""
+        kw = {}
+        overhead = self.constant("gemm_int8", "kernel_overhead_s")
+        if overhead is not None:
+            kw["kernel_overhead_s"] = overhead
+        peak_i8 = self.constant("gemm_int8", "peak_int8_ops")
+        if peak_i8 is not None:
+            kw["peak_int8_ops"] = peak_i8
+            # fall back to the int8-derived float peak unless gemm_f32 ran
+            kw["peak_bf16_flops"] = max(peak_i8 / 2, 5e5)
+        peak_f = self.constant("gemm_f32", "peak_flops")
+        if peak_f is not None:
+            kw["peak_bf16_flops"] = peak_f
+        bw = self.constant("boundary", "hbm_bw")
+        if bw is not None:
+            kw["hbm_bw"] = bw
+        return dataclasses.replace(base, **kw) if kw else base
+
+    def aie(self, base: hwlib.AieMl = hwlib.AIE_ML) -> hwlib.AieMl:
+        """``base`` with every AIE-side fitted constant substituted."""
+        slope = self.constant("contention", "band2_penalty_per_layer")
+        if slope is None:
+            return base
+        return dataclasses.replace(base, band2_penalty_per_layer=slope)
+
+    # -- serialization ----------------------------------------------------
+    def to_dict(self) -> dict:
+        return {"schema": self.schema, "version": self.version,
+                "fits": {t: f.to_dict() for t, f in self.fits.items()},
+                "provenance": dict(self.provenance)}
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MachineModel":
+        if d.get("schema") != MODEL_SCHEMA_VERSION:
+            raise ValueError(f"unsupported machine-model schema: "
+                             f"{d.get('schema')!r}")
+        mm = cls(fits={t: TermFit.from_dict(f) for t, f in d["fits"].items()},
+                 provenance=dict(d.get("provenance", {})))
+        want = d.get("version")
+        if want is not None and want != mm.version:
+            raise ValueError(
+                f"machine-model version mismatch: artifact says "
+                f"{want[:12]}…, content hashes to {mm.version[:12]}… "
+                f"(artifact edited by hand?)")
+        return mm
+
+    @classmethod
+    def from_json(cls, s: str) -> "MachineModel":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str | os.PathLike) -> pathlib.Path:
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(self.to_json() + "\n")
+        return p
+
+    @classmethod
+    def load(cls, path: str | os.PathLike) -> "MachineModel":
+        return cls.from_json(pathlib.Path(path).read_text())
+
+
+def _provenance(sweep: str, batch: int, iters: int, terms) -> dict:
+    import platform
+    try:
+        import jax
+        jax_version = jax.__version__
+        backend = jax.default_backend()
+    except Exception:                       # characterization without jax
+        jax_version, backend = "unavailable", "none"
+    return {
+        "host": platform.node(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "jax": jax_version,
+        "backend": backend,
+        "sweep": sweep,
+        "batch": batch,
+        "iters": iters,
+        "grids": {t: [list(g) if isinstance(g, tuple) else g
+                      for g in sweeplib.grid(t, sweep)] for t in terms},
+    }
+
+
+def characterize(*, sweep: str = "quick", batch: int = 8, iters: int = 5,
+                 terms=sweeplib.TERMS, timer=None, aie=None) -> MachineModel:
+    """Run the characterization sweeps and fit the machine model.
+
+    ``timer`` replaces wall-clock measurement with a synthetic cost function
+    (tests, dry runs); ``terms`` restricts the sweep (e.g. only
+    ``("gemm_int8",)`` for the legacy calibration path).
+    """
+    samples = sweeplib.run_sweep(sweep=sweep, batch=batch, iters=iters,
+                                 terms=terms, timer=timer, aie=aie)
+    fits = fitlib.fit_all(samples)
+    prov = _provenance(sweep, batch, iters, terms)
+    if timer is not None:
+        prov["timer"] = "synthetic"
+    return MachineModel(fits=fits, provenance=prov)

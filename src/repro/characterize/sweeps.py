@@ -1,0 +1,98 @@
+"""Parameterized sweep grids over the cost terms the planner charges.
+
+Four terms, matching the constants the deployment planner actually reads:
+
+* ``gemm_int8``   — multi-launch int8 Pallas GEMM pipelines over a
+  (depth, width) grid -> per-launch dispatch overhead
+  (``TpuV5e.kernel_overhead_s``) + int8 throughput (``peak_int8_ops``).
+* ``gemm_f32``    — jitted XLA matmul chains -> float throughput
+  (``peak_bf16_flops``).
+* ``boundary``    — un-fused element-wise launch chains over an
+  (n_launches, act_bytes) grid -> the DR7' crossing cost's fixed dispatch
+  and per-byte parts.
+* ``contention``  — band-2 spill population sweep -> the Fig.-6 contention
+  slope (``AieMl.band2_penalty_per_layer``).  Sourced from the analytical
+  AIE curves on hosts without the array (labeled ``model``).
+
+Three grids: ``quick`` (CI-sized, ~10 s wall on the CPU interpreter),
+``full`` (denser, for committed artifacts), and ``calibrate`` (the legacy
+3-point grid :func:`repro.plan.calibrate.calibrated_cpu_model` fits).
+"""
+
+from __future__ import annotations
+
+from repro.characterize import harness
+from repro.characterize.harness import Sample, Timer
+
+# (depth, width) grids for the GEMM pipeline sweeps.
+_GEMM_GRIDS = {
+    "calibrate": ((2, 128), (6, 128), (2, 512)),
+    "quick": ((2, 64), (6, 64), (2, 128), (6, 128), (2, 512)),
+    "full": ((2, 64), (4, 64), (6, 64), (2, 128), (4, 128), (6, 128),
+             (2, 256), (4, 256), (2, 512), (4, 512)),
+}
+_F32_GRIDS = {
+    # Wider layers than the int8 grid: the XLA f32 path's dispatch is cheap,
+    # so compute must dominate for the throughput coefficient to condition.
+    "calibrate": ((2, 256), (6, 256), (2, 768)),
+    "quick": ((2, 256), (6, 256), (2, 768), (4, 768)),
+    "full": ((2, 256), (4, 256), (6, 256), (2, 512), (6, 512), (2, 768),
+             (4, 768)),
+}
+# (n_launches, act_bytes) grids for the boundary sweep.
+_BOUNDARY_GRIDS = {
+    "calibrate": ((2, 1 << 12), (8, 1 << 12), (2, 1 << 20)),
+    "quick": ((2, 1 << 12), (8, 1 << 12), (2, 1 << 20), (8, 1 << 20)),
+    "full": ((2, 1 << 12), (4, 1 << 12), (8, 1 << 12), (2, 1 << 16),
+             (8, 1 << 16), (2, 1 << 20), (4, 1 << 20), (8, 1 << 20)),
+}
+_CONTENTION_GRIDS = {
+    "calibrate": (0, 1, 2),
+    "quick": (0, 1, 2, 3),
+    "full": (0, 1, 2, 3, 4, 6),
+}
+
+TERMS = ("gemm_int8", "gemm_f32", "boundary", "contention")
+SWEEPS = ("calibrate", "quick", "full")
+
+
+def grid(term: str, sweep: str):
+    """The (term, sweep) coordinate grid — recorded in artifact provenance."""
+    tables = {"gemm_int8": _GEMM_GRIDS, "gemm_f32": _F32_GRIDS,
+              "boundary": _BOUNDARY_GRIDS, "contention": _CONTENTION_GRIDS}
+    if term not in tables:
+        raise ValueError(f"unknown term {term!r}; choose from {TERMS}")
+    if sweep not in tables[term]:
+        raise ValueError(f"unknown sweep {sweep!r}; choose from {SWEEPS}")
+    return tables[term][sweep]
+
+
+def run_term(term: str, *, sweep: str = "quick", batch: int = 8,
+             iters: int = 5, timer: Timer | None = None,
+             aie=None) -> list[Sample]:
+    """Run one cost term's sweep; returns its samples."""
+    g = grid(term, sweep)
+    if term == "gemm_int8":
+        return [harness.time_int8_pipeline(w, d, batch=batch, iters=iters,
+                                           timer=timer) for d, w in g]
+    if term == "gemm_f32":
+        return [harness.time_f32_chain(w, d, batch=batch, iters=iters,
+                                       timer=timer) for d, w in g]
+    if term == "boundary":
+        return [harness.time_unfused_chain(l, b, iters=iters, timer=timer)
+                for l, b in g]
+    if term == "contention":
+        return [harness.model_band2_point(n, aie=aie, timer=timer)
+                for n in g]
+    raise ValueError(f"unknown term {term!r}; choose from {TERMS}")
+
+
+def run_sweep(*, sweep: str = "quick", batch: int = 8, iters: int = 5,
+              terms=TERMS, timer: Timer | None = None,
+              aie=None) -> list[Sample]:
+    """Run every requested term's sweep (the CLI entry's workhorse)."""
+    out: list[Sample] = []
+    for term in terms:
+        out.extend(run_term(term, sweep=sweep, batch=batch, iters=iters,
+                            timer=timer, aie=aie))
+    return out

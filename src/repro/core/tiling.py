@@ -98,7 +98,10 @@ class GemmPlan:
 _AIE_CALL_OVERHEAD_CYC = 6        # per aie::mmul macro-call loop overhead
 _AIE_DMA_SETUP_CYC = 220          # per-tile DMA/lock setup per inference
 _AIE_CASCADE_HOP_CYC = 14         # partial-sum hop west->east
-_AIE_BAND_PENALTY = 0.085         # latency per layer placed in a spilled band
+# Band-spill contention lives on the machine model now
+# (``AieMl.band2_penalty_per_layer``) so a fitted MachineModel can replace
+# it; this alias keeps the historical name importable.
+_AIE_BAND_PENALTY = hwlib.AIE_ML.band2_penalty_per_layer
 _AIE_UNROLL = 2                   # manual 2x2x2 unrolling (paper IV-C)
 
 
@@ -159,7 +162,7 @@ def aie_spatial_latency(m: int, k: int, n: int, p_k: int, p_n: int,
     stream_out_cyc = (m * q_n) / (aie.stream_bits / 8)
     t = t_tile + (stream_in_cyc + cascade_cyc + stream_out_cyc) / aie.clock_hz
     if layers_in_band_2 > 0:
-        t *= 1.0 + _AIE_BAND_PENALTY * layers_in_band_2
+        t *= 1.0 + aie.band2_penalty_per_layer * layers_in_band_2
     return t
 
 
@@ -194,7 +197,7 @@ def aie_spatial_interval(m: int, k: int, n: int, p_k: int, p_n: int,
     cyc += (p_k - 1) * _AIE_CASCADE_HOP_CYC
     t = cyc / aie.clock_hz
     if layers_in_band_2 > 0:
-        t *= 1.0 + _AIE_BAND_PENALTY * layers_in_band_2
+        t *= 1.0 + aie.band2_penalty_per_layer * layers_in_band_2
     return t
 
 

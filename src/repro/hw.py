@@ -87,6 +87,11 @@ class AieMl:
     stream_bits: int = 32                # per-tile in/out streaming ports
     plio_bw: float = 5e9                 # B/s (128-bit @ 312.5 MHz)
     dsp58_equiv_per_tile: float = 58.0   # paper: one tile ~ 58 DSP58s
+    # Fig.-6 band-spill contention: fractional latency added per layer placed
+    # in a spilled band.  A machine-model field (not a tiling-module constant)
+    # so the characterization harness (repro.characterize) can substitute the
+    # fitted slope and the plan key picks up the change.
+    band2_penalty_per_layer: float = 0.085
 
     # Legal aie::mmul API tile shapes for i8 x i8 (paper Fig. 4 y-axis).
     legal_api_tiles_i8: tuple = (

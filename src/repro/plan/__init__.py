@@ -7,15 +7,21 @@ LARE + two-level tiling + column/band + boundary-cost search over them, and
 that ``models/edge.py``, ``serve/engine.py`` and the benchmarks execute.
 ``multinet`` extends the allocator to N co-resident networks sharing one
 array (``plan_fleet`` -> ``FleetPlan``, consumed by ``repro.serve.Router``),
-and ``calibrate.feedback`` writes measured latencies back into the cache.
+``calibrate.feedback`` writes measured latencies back into the cache, and
+``calibrate.recalibrate_fleet`` replans a whole fleet from router
+measurements (the drift-triggered autotune loop).  Every entry point accepts
+``machine_model=`` — a fitted :class:`repro.characterize.MachineModel`
+replacing the hand-tuned ``hw.py`` constants.
 
 CLI: ``PYTHONPATH=src python -m repro.plan jet_tagger`` (see ``__main__``;
-naming several nets plans them as a fleet).
+naming several nets plans them as a fleet; ``--machine-model model.json``
+plans under a fitted characterization artifact).
 """
 
 from repro.plan.artifact import (BoundaryPlan, DeploymentPlan, LayerPlan,
                                  PlanCache, default_cache, plan_key)
-from repro.plan.calibrate import calibrated_cpu_model, feedback
+from repro.plan.calibrate import (calibrated_cpu_model, feedback,
+                                  recalibrate_fleet)
 from repro.plan.graph import DataflowGraph, LayerNode, edge_graph, model_graph
 from repro.plan.multinet import FleetPlan, TenantPlan, plan_fleet
 from repro.plan.planner import as_graph, get_or_plan, plan_deployment
@@ -25,4 +31,5 @@ __all__ = [
     "LayerNode", "LayerPlan", "PlanCache", "TenantPlan", "as_graph",
     "calibrated_cpu_model", "default_cache", "edge_graph", "feedback",
     "get_or_plan", "model_graph", "plan_deployment", "plan_fleet", "plan_key",
+    "recalibrate_fleet",
 ]

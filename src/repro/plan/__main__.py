@@ -72,9 +72,21 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--batch", type=int, default=None)
     ap.add_argument("--pl-budget", type=float, default=400.0,
                     help="PL DSP-equivalents per layer for the LARE decision")
+    ap.add_argument("--machine-model", default=None, metavar="MODEL_JSON",
+                    help="fitted MachineModel artifact (python -m "
+                         "repro.characterize) replacing the hand-tuned "
+                         "hw.py constants")
     ap.add_argument("--out", default="plans",
                     help="directory for the JSON artifacts")
     args = ap.parse_args(argv)
+
+    machine_model = None
+    if args.machine_model is not None:
+        from repro.characterize import MachineModel
+        machine_model = MachineModel.load(args.machine_model)
+        print(f"# machine model {machine_model.version[:12]}… "
+              f"(sweep={machine_model.provenance.get('sweep')}, "
+              f"host={machine_model.provenance.get('host')})")
 
     if args.kind == "lm":
         from repro import configs
@@ -99,7 +111,8 @@ def main(argv: list[str] | None = None) -> int:
         for target in targets:
             fleet = multinet.plan_fleet(cfgs, target=target,
                                         batch=args.batch,
-                                        pl_budget=args.pl_budget)
+                                        pl_budget=args.pl_budget,
+                                        machine_model=machine_model)
             _print_fleet(fleet)
             path = fleet.save(out_dir / f"fleet_{fleet.name}_{target}.json")
             print(f"wrote {path}")
@@ -109,7 +122,8 @@ def main(argv: list[str] | None = None) -> int:
         for target in targets:
             plan = planner.plan_deployment(cfg, target=target,
                                            batch=args.batch,
-                                           pl_budget=args.pl_budget)
+                                           pl_budget=args.pl_budget,
+                                           machine_model=machine_model)
             _print_plan(plan)
             name = getattr(cfg, "name", plan.network)
             path = plan.save(out_dir / f"{name}_{target}.json")

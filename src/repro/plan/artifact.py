@@ -28,7 +28,11 @@ search.  The JSON schema (version ``PLAN_SCHEMA_VERSION``):
 ``plan_key`` hashes the *inputs* of planning (layer shapes, batch, target,
 every hardware-model constant, planner version), so a cache hit is exactly
 "same question asked again" — re-parameterizing ``hw.py`` or bumping the
-planner invalidates stale artifacts automatically.
+planner invalidates stale artifacts automatically.  When planning runs under
+a fitted :class:`repro.characterize.MachineModel`, its sha256 ``version``
+rides in the key's ``extra`` payload (on top of the substituted constants
+themselves), so plans made under a stale characterization self-invalidate
+even if two models happen to collide on a fingerprinted subset.
 
 Schema v2 (PR 2) additions — v1 artifacts still load unchanged:
 
@@ -50,7 +54,7 @@ import os
 import pathlib
 
 PLAN_SCHEMA_VERSION = 2
-PLANNER_VERSION = "plan-2"      # bump on any search/cost-model change
+PLANNER_VERSION = "plan-3"      # bump on any search/cost-model change
 
 
 @dataclasses.dataclass(frozen=True)

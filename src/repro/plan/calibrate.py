@@ -15,16 +15,22 @@ is exactly the padding-waste product: fitting logical ops would double-count
 the waste.  Everything else (the planner search, the plan schema, the
 executors) is unchanged — which is the point: one decision procedure,
 re-parameterized per substrate.
+
+The sweep/fit machinery itself lives in :mod:`repro.characterize`, which
+generalizes this 2-constant fit to the planner's full cost-term set (GEMM
+throughput per dtype, dispatch overhead, DR7 boundary bytes, band-2
+contention) and packages the result as a versioned ``MachineModel``
+artifact; this module keeps the calibration-feedback half of the loop:
+:func:`feedback` writes one plan's measured latency back into the cache, and
+:func:`recalibrate_fleet` replans a whole ``FleetPlan`` in place from router
+measurements (the drift-triggered fleet autotune).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 
 from repro import hw as hwlib
-
-_BM, _BK, _BN = 32, 128, 128
 
 
 def feedback(plan, measured_latency_s: float, *, cache=None):
@@ -72,61 +78,60 @@ def feedback(plan, measured_latency_s: float, *, cache=None):
     return calibrated
 
 
-def _time_call(fn, *args, iters: int = 5) -> float:
-    import jax
-    jax.block_until_ready(fn(*args))      # warmup / compile
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+def recalibrate_fleet(fleet, measurements: dict, *, cache=None,
+                      budget_factor: float | None = None):
+    """Recalibrate a whole :class:`~repro.plan.multinet.FleetPlan` from
+    measured per-tenant latencies and replan it IN PLACE.
 
-
-def _ceil_to(x: int, q: int) -> int:
-    return ((x + q - 1) // q) * q
+    ``measurements`` maps ``net_id -> measured seconds`` (a robust statistic
+    such as the router's per-tenant p50).  Each measured tenant's plan goes
+    through :func:`feedback` (cost rescale under the parts+overhead
+    invariant, written back to the cache under its original key), its latency
+    budget is re-derived from the calibrated latency using the SAME headroom
+    factor the original fleet was planned with (unless ``budget_factor``
+    overrides it), and the fleet totals are recomputed.  Tiles, regimes and
+    column assignments are untouched — only costs and budgets move, which is
+    what lets the serving router swap the replanned fleet in without
+    rebuilding engines.  This closes fleet-wide the autotune loop
+    :func:`feedback` closes for single plans.
+    """
+    tenants = []
+    for tp in fleet.tenants:
+        m = measurements.get(tp.net_id)
+        if m is not None and m > 0 and tp.plan.est_latency_s > 0:
+            plan = feedback(tp.plan, m, cache=cache)
+        else:
+            plan = tp.plan
+        planned = tp.plan.est_latency_s + tp.crossing_s
+        factor = budget_factor if budget_factor is not None else (
+            tp.latency_budget_s / planned if planned > 0 else 2.0)
+        tenants.append(dataclasses.replace(
+            tp, plan=plan,
+            latency_budget_s=factor * (plan.est_latency_s + tp.crossing_s)))
+    return dataclasses.replace(
+        fleet, tenants=tuple(tenants),
+        est_latency_s=max(t.total_latency_s for t in tenants))
 
 
 def calibrated_cpu_model(*, batch: int = 8,
                          base: hwlib.TpuV5e = hwlib.TPU_V5E) -> hwlib.TpuV5e:
     """Fit (kernel_overhead_s, effective peak) to measured interpret-mode
-    int8 GEMM pipelines and return the re-parameterized machine model."""
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
-    from repro.kernels import ops as kops
+    int8 GEMM pipelines and return the re-parameterized machine model.
 
-    def pipeline(width: int, depth: int):
-        ws = jnp.ones((depth, width, width), jnp.int8)
-        sc = jnp.ones((width,), jnp.float32)
-        bk = bn = min(_ceil_to(width, 128), 512)
-
-        @jax.jit
-        def f(x):
-            h = x
-            for i in range(depth):
-                y = kops.gemm_int8(h, ws[i], sc, 1.0, block_m=_BM,
-                                   block_k=bk, block_n=bn,
-                                   out_dtype=jnp.float32)
-                h = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
-            return h
-
-        x = jnp.ones((batch, width), jnp.int8)
-        ops = depth * 2.0 * _ceil_to(batch, _BM) \
-            * _ceil_to(width, bk) * _ceil_to(width, bn)
-        return _time_call(f, x), depth, ops
-
-    points = [pipeline(128, 2), pipeline(128, 6), pipeline(512, 2)]
-    a = np.array([[float(d), ops] for _, d, ops in points])
-    t = np.array([ti for ti, _, _ in points])
-    (overhead, inv_peak), *_ = np.linalg.lstsq(a, t, rcond=None)
-    peak = 1.0 / inv_peak if inv_peak > 1e-15 else 1e12
-    overhead = max(float(overhead), 1e-6)
+    A thin wrapper over the characterization harness: the legacy 3-point
+    ``calibrate`` grid of the ``gemm_int8`` term, fitted by
+    :func:`repro.characterize.fit_term`.  ``hbm_bw`` stays effectively
+    infinite because the interpreter is compute/overhead-bound; run the full
+    ``python -m repro.characterize`` sweep for a model that also fits the
+    boundary and contention terms.
+    """
+    from repro.characterize import fit_term, run_term
+    samples = run_term("gemm_int8", sweep="calibrate", batch=batch)
+    tf = fit_term("gemm_int8", samples)
     return dataclasses.replace(
         base,
-        peak_int8_ops=max(peak, 1e6),
-        peak_bf16_flops=max(peak / 2, 5e5),
+        peak_int8_ops=tf.constants["peak_int8_ops"],
+        peak_bf16_flops=max(tf.constants["peak_int8_ops"] / 2, 5e5),
         hbm_bw=1e15,                      # interpreter is compute/overhead-bound
-        kernel_overhead_s=overhead,
+        kernel_overhead_s=tf.constants["kernel_overhead_s"],
     )

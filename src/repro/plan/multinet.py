@@ -234,7 +234,8 @@ def _plan_fleet_aie(graphs, ids, *, key: str, budget_factor: float,
     for ti, (g, prep, net_id) in enumerate(zip(graphs, preps, ids)):
         t_chosen = {li: chosen[(ti, li)] for li in prep.cands}
         t_bands = {li: bands[(ti, li)] for li in prep.cands}
-        layers = planner._aie_layers(g, prep, t_chosen, t_bands, n_band2)
+        layers = planner._aie_layers(g, prep, t_chosen, t_bands, n_band2,
+                                     aie=aie)
         bounds, est_latency, est_interval = planner._aie_totals(g, layers, aie)
         plan = DeploymentPlan(
             network=g.name, target="aie", batch=g.batch,
@@ -265,7 +266,7 @@ def _plan_fleet_aie(graphs, ids, *, key: str, budget_factor: float,
 
 def _plan_fleet_tpu(graphs, ids, *, key: str, budget_factor: float,
                     serve_slots_total: int, prefill_chunk: int | None,
-                    cache, opts: dict) -> FleetPlan:
+                    queue_depth_factor: int, cache, opts: dict) -> FleetPlan:
     tpu = opts["tpu"]
     n_lm = sum(1 for g in graphs if g.kind == "lm") or 1
     tenants: list[TenantPlan] = []
@@ -278,11 +279,17 @@ def _plan_fleet_tpu(graphs, ids, *, key: str, budget_factor: float,
             # The continuous batcher reads its policy from here (instead of
             # the old hard-coded constants): a fair slot share across LM
             # tenants, plan-chosen chunked-prefill size, one admission per
-            # tick so a burst on one tenant cannot monopolize a step.
+            # tick so a burst on one tenant cannot monopolize a step.  The
+            # queue-depth bound caps how far a tenant's backlog may grow
+            # before the router refuses admits (queue-depth-aware admission):
+            # waiting behind more than ``factor`` full slot generations
+            # cannot land within any budget derived from the planned latency.
+            slots = max(1, serve_slots_total // n_lm)
             serve.update({
-                "slots": max(1, serve_slots_total // n_lm),
+                "slots": slots,
                 "prefill_chunk": prefill_chunk,
                 "admit_per_tick": 1,
+                "max_queue_depth": max(1, queue_depth_factor * slots),
             })
         plan = _cached_or(dataclasses.replace(plan, serve=serve), cache)
         crossing = boundary.crossing_cost_tpu(g.nodes[-1].out_bytes(g.batch),
@@ -300,10 +307,12 @@ def _plan_fleet_tpu(graphs, ids, *, key: str, budget_factor: float,
 def plan_fleet(cfgs, *, target: str = "tpu", batch: int | None = None,
                budget_factor: float = DEFAULT_BUDGET_FACTOR,
                serve_slots_total: int = 8, prefill_chunk: int | None = 8,
-               cache=None, **kw) -> FleetPlan:
+               queue_depth_factor: int = 4, cache=None, **kw) -> FleetPlan:
     """Place N networks on one array/chip.  ``cfgs`` are EdgeConfigs,
     ModelConfigs or pre-built graphs; planner knobs (``pl_budget``,
-    ``pipeline_core_budget``, ``pl``/``aie``/``tpu``) pass through ``kw``.
+    ``pipeline_core_budget``, ``pl``/``aie``/``tpu``, and ``machine_model``
+    — a fitted :class:`repro.characterize.MachineModel` replacing the
+    hand-tuned constants) pass through ``kw``.
 
     Per-tenant plans are looked up in ``cache`` (the process-wide default
     cache unless given) under their fleet-scoped keys before the fresh plan
@@ -326,6 +335,7 @@ def plan_fleet(cfgs, *, target: str = "tpu", batch: int | None = None,
         return _plan_fleet_tpu(graphs, ids, key=key,
                                budget_factor=budget_factor,
                                serve_slots_total=serve_slots_total,
-                               prefill_chunk=prefill_chunk, cache=cache,
-                               opts=opts)
+                               prefill_chunk=prefill_chunk,
+                               queue_depth_factor=queue_depth_factor,
+                               cache=cache, opts=opts)
     raise ValueError(f"unknown target {target!r} (want 'aie' or 'tpu')")

@@ -154,7 +154,7 @@ def _spilled_worst_interval(chosen: dict, aie: hwlib.AieMl) -> float:
         else:
             spilled.append(li)
     worst = 0.0
-    penalty = 1.0 + tiling._AIE_BAND_PENALTY * len(spilled)
+    penalty = 1.0 + aie.band2_penalty_per_layer * len(spilled)
     for li in sorted(chosen):
         t = chosen[li].interval_s * (penalty if li in spilled else 1.0)
         worst = max(worst, t)
@@ -207,7 +207,8 @@ def _aie_prepare(graph: DataflowGraph, *, pl_budget: float,
 
 def _aie_layers(graph: DataflowGraph, prep: _AiePrep,
                 chosen: dict[int, _AieChoice], bands: dict[int, int],
-                n_band2: int) -> list[LayerPlan]:
+                n_band2: int, *,
+                aie: hwlib.AieMl = hwlib.AIE_ML) -> list[LayerPlan]:
     """Materialize LayerPlans from resolved choices.  ``n_band2`` is the
     band-2 population of the WHOLE array (fleet-wide under co-residency), so
     contention is priced against every spilled layer, not just this net's."""
@@ -227,7 +228,8 @@ def _aie_layers(graph: DataflowGraph, prep: _AiePrep,
                 rules=tuple(rules)))
             continue
         c, band = chosen[i], bands[i]
-        penalty = (1.0 + tiling._AIE_BAND_PENALTY * n_band2) if band > 1 else 1.0
+        penalty = (1.0 + aie.band2_penalty_per_layer * n_band2) \
+            if band > 1 else 1.0
         rules.append(f"LARE={prep.lares[i].lare:.1f}>budget -> AIE")
         if c.p_k > 1:
             rules.append(f"DR3(K-expansion P_K={c.p_k})")
@@ -272,7 +274,7 @@ def _plan_aie(graph: DataflowGraph, *, pl_budget: float,
     chosen = {i: c[0] for i, c in prep.cands.items()}
     bands = _resolve_columns(chosen, prep.cands, aie)
     n_band2 = sum(1 for b in bands.values() if b > 1)
-    layers = _aie_layers(graph, prep, chosen, bands, n_band2)
+    layers = _aie_layers(graph, prep, chosen, bands, n_band2, aie=aie)
     boundaries, est_latency, est_interval = _aie_totals(graph, layers, aie)
     return DeploymentPlan(
         network=graph.name, target="aie", batch=graph.batch, key=key,
@@ -358,6 +360,11 @@ _DEFAULTS = {
     "pl": hwlib.PL_FABRIC,
     "aie": hwlib.AIE_ML,
     "tpu": hwlib.TPU_V5E,
+    # A fitted repro.characterize.MachineModel.  When set it re-parameterizes
+    # the tpu/aie models with the fitted constants (overriding explicit tpu=/
+    # aie= knobs) and its version is mixed into the plan cache key, so plans
+    # made under a stale model self-invalidate.
+    "machine_model": None,
 }
 
 
@@ -367,16 +374,25 @@ def _resolve(kw: dict) -> dict:
     unknown = set(kw) - set(_DEFAULTS)
     if unknown:
         raise TypeError(f"unknown planner option(s): {sorted(unknown)}")
-    return {**_DEFAULTS, **kw}
+    opts = {**_DEFAULTS, **kw}
+    mm = opts["machine_model"]
+    if mm is not None:
+        opts["tpu"] = mm.tpu(base=opts["tpu"])
+        opts["aie"] = mm.aie(base=opts["aie"])
+    return opts
 
 
 def _key_for(graph: DataflowGraph, target: str, opts: dict) -> str:
+    mm = opts.get("machine_model")
+    mm_version = mm.version if mm is not None else None
     if target == "aie":
         return plan_key(graph, target, (opts["pl"], opts["aie"]),
-                        {"pl_budget": opts["pl_budget"]})
+                        {"pl_budget": opts["pl_budget"],
+                         "machine_model": mm_version})
     if target == "tpu":
         return plan_key(graph, target, (opts["tpu"],),
-                        {"pipeline_core_budget": opts["pipeline_core_budget"]})
+                        {"pipeline_core_budget": opts["pipeline_core_budget"],
+                         "machine_model": mm_version})
     raise ValueError(f"unknown target {target!r} (want 'aie' or 'tpu')")
 
 
@@ -385,7 +401,9 @@ def plan_deployment(cfg, *, target: str = "tpu", batch: int | None = None,
     """Plan one deployment.  ``cfg`` is an EdgeConfig, ModelConfig or graph.
 
     Keyword knobs (all optional): ``pl_budget``, ``pipeline_core_budget``,
-    and the hardware models ``pl``/``aie``/``tpu``.
+    the hardware models ``pl``/``aie``/``tpu``, and ``machine_model`` — a
+    fitted :class:`repro.characterize.MachineModel` whose constants replace
+    the hand-tuned ``tpu``/``aie`` ones (and whose version keys the cache).
     """
     graph = as_graph(cfg, batch=batch)
     opts = _resolve(kw)

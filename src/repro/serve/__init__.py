@@ -6,9 +6,10 @@ form the multi-tenant runtime over a :class:`repro.plan.FleetPlan` —
 co-resident networks dispatched by net id under per-tenant latency budgets.
 """
 
-from repro.serve.metrics import TenantMetrics
-from repro.serve.router import Router, TenantOverBudget
+from repro.serve.metrics import TenantMetrics, write_serve_snapshots
+from repro.serve.router import Router, TenantOverBudget, TenantQueueFull
 from repro.serve.tenant import Tenant, edge_tenant, lm_tenant
 
 __all__ = ["Router", "Tenant", "TenantMetrics", "TenantOverBudget",
-           "edge_tenant", "lm_tenant"]
+           "TenantQueueFull", "edge_tenant", "lm_tenant",
+           "write_serve_snapshots"]

@@ -4,12 +4,20 @@ Counters are plain host-side state (no jax) updated by the router on every
 dispatch; :meth:`TenantMetrics.snapshot` is what the router's ``report()``
 surfaces and what the benchmarks/tests assert on.  Latencies are kept in a
 bounded window so a long-lived router's percentiles track recent behavior.
+
+:func:`write_serve_snapshots` exports a router report as per-tenant
+``BENCH_serve_<net>.json`` files in the exact snapshot format
+``benchmarks/run.py`` writes, so ``benchmarks/trend.py`` diffs SERVING
+latency across runs the same way it diffs benchmark runs.
 """
 
 from __future__ import annotations
 
 import collections
+import json
 import math
+import pathlib
+import re
 
 
 class TenantMetrics:
@@ -87,3 +95,43 @@ class TenantMetrics:
             "budget_violations": self.budget_violations,
             "occupancy": self.occupancy,
         }
+
+
+def _safe_net_name(net_id: str) -> str:
+    """Filesystem-safe tenant name (duplicate nets carry a '#index')."""
+    return re.sub(r"[^A-Za-z0-9._-]", "_", net_id)
+
+
+def write_serve_snapshots(report: dict, json_dir, *,
+                          meta: dict | None = None) -> list:
+    """Export a router ``report()`` as per-tenant ``BENCH_serve_<net>.json``.
+
+    One file per tenant, ``{"meta": ..., "rows": [...]}`` with the same row
+    shape ``benchmarks/common.emit`` records (``name``/``us_per_call``/
+    ``derived``), so :mod:`benchmarks.trend` diffs serving latency across
+    runs exactly like benchmark runs.  Returns the written paths.
+    """
+    out_dir = pathlib.Path(json_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    paths = []
+    for nid, snap in report.items():
+        derived = (f"src=measured;count={snap['count']};"
+                   f"violations={snap['budget_violations']};"
+                   f"kind={snap.get('kind', '?')}")
+        rows = [
+            {"name": f"serve/{nid}/p50", "us_per_call":
+             round(snap["p50_s"] * 1e6, 3), "derived": derived},
+            {"name": f"serve/{nid}/p95", "us_per_call":
+             round(snap["p95_s"] * 1e6, 3), "derived": derived},
+            {"name": f"serve/{nid}/mean", "us_per_call":
+             round(snap["mean_s"] * 1e6, 3), "derived": derived},
+        ]
+        if snap.get("planned_latency_s"):
+            rows.append({"name": f"serve/{nid}/planned", "us_per_call":
+                         round(snap["planned_latency_s"] * 1e6, 3),
+                         "derived": "src=model"})
+        payload = {"meta": {"net_id": nid, **(meta or {})}, "rows": rows}
+        p = out_dir / f"BENCH_serve_{_safe_net_name(nid)}.json"
+        p.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+        paths.append(p)
+    return paths

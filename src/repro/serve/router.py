@@ -24,6 +24,29 @@ circuit: after ``k`` consecutive refusals one probe request is admitted; a
 within-budget probe resets the violation streak and re-opens the tenant, an
 over-budget probe keeps it shed.  :meth:`reset_metrics` re-opens
 unconditionally.
+
+Two further plan-driven controls:
+
+* **Queue-depth admission** — an LM tenant whose pending queue has reached
+  its plan's ``serve["max_queue_depth"]`` bound is refused
+  (:class:`TenantQueueFull`) at submit time, BEFORE the backlog grows past
+  the point where the tail request could still meet any latency budget —
+  back-pressure at admission instead of shedding after the damage.
+
+* **Drift watcher** — with ``drift_threshold=r`` the router compares a
+  tenant's measured p50 against its planned latency after every completed
+  request; when the ratio leaves ``[1/r, r]`` (and ``drift_min_samples``
+  observations exist) it triggers a FLEET-WIDE recalibration:
+  :func:`repro.plan.calibrate.recalibrate_fleet` feeds the measured
+  latencies back into the plan cache and replans the ``FleetPlan`` in place
+  (costs + budgets move; tiles and column assignments stay), and the router
+  swaps the replanned fleet into its live tenants.  This closes the
+  characterize -> plan -> serve -> drift -> replan loop fleet-wide.  Only
+  SYNCHRONOUS (edge) tenants drive and feed the watcher: their request
+  latency is the same quantity the plan estimates, while an LM request's
+  latency includes queue wait, so recalibrating from it under a burst would
+  bake transient load into the cost model (LM drift needs a decomposed
+  service-time measurement — a ROADMAP follow-up).
 """
 
 from __future__ import annotations
@@ -38,15 +61,29 @@ class TenantOverBudget(RuntimeError):
     """Raised when a shedding router refuses a persistently late tenant."""
 
 
+class TenantQueueFull(TenantOverBudget):
+    """Raised when a tenant's backlog hits its plan's queue-depth bound."""
+
+
 class Router:
     def __init__(self, tenants: Iterable[Tenant], *,
-                 shed_after: int | None = None):
+                 shed_after: int | None = None, fleet=None,
+                 drift_threshold: float | None = None,
+                 drift_min_samples: int = 5, cache=None):
         self._tenants: dict[str, Tenant] = {}
         for t in tenants:
             if t.net_id in self._tenants:
                 raise ValueError(f"duplicate tenant id {t.net_id!r}")
             self._tenants[t.net_id] = t
         self.shed_after = shed_after
+        self.fleet = fleet
+        if drift_threshold is not None and drift_threshold <= 1.0:
+            raise ValueError(f"drift_threshold must be > 1 (a measured/"
+                             f"planned ratio band), got {drift_threshold}")
+        self.drift_threshold = drift_threshold
+        self.drift_min_samples = drift_min_samples
+        self._cache = cache
+        self.replans = 0
         self._inflight: dict[str, list[tuple]] = {
             nid: [] for nid in self._tenants}
         self._refused: dict[str, int] = {nid: 0 for nid in self._tenants}
@@ -55,13 +92,18 @@ class Router:
     @classmethod
     def from_fleet(cls, fleet, *, engines: dict | None = None,
                    lm: dict | None = None, shed_after: int | None = None,
+                   drift_threshold: float | None = None,
+                   drift_min_samples: int = 5, cache=None,
                    x_scale: float = 0.05, seed: int = 0) -> "Router":
         """Build a router from a :class:`FleetPlan`.
 
         Edge tenants get an :class:`EdgeEngine` automatically (fresh params
         unless ``engines[net_id]`` supplies a pre-built engine).  LM tenants
         need weights, so pass ``lm={net_id: (cfg, params)}`` (batcher built
-        plan-driven) or a ready engine via ``engines``.
+        plan-driven) or a ready engine via ``engines``.  With
+        ``drift_threshold`` set the router watches measured/planned drift and
+        recalibrates + replans the fleet when it trips (see module doc);
+        ``cache`` is the plan cache the recalibration writes through.
         """
         tenants = []
         for tp in fleet.tenants:
@@ -79,7 +121,9 @@ class Router:
                 tenants.append(lm_tenant(tp, cfg, params))
             else:
                 tenants.append(edge_tenant(tp, x_scale=x_scale, seed=seed))
-        return cls(tenants, shed_after=shed_after)
+        return cls(tenants, shed_after=shed_after, fleet=fleet,
+                   drift_threshold=drift_threshold,
+                   drift_min_samples=drift_min_samples, cache=cache)
 
     # -- lookup -----------------------------------------------------------
     def tenant(self, net_id: str) -> Tenant:
@@ -100,7 +144,24 @@ class Router:
         return (self.shed_after is not None
                 and t.metrics.consecutive_violations >= self.shed_after)
 
+    def queue_depth_bound(self, net_id: str) -> int | None:
+        """The tenant plan's pending-queue bound (None = unbounded).  The
+        fleet planner derives it from the serve policy (``queue_depth_factor
+        x slots``): a backlog deeper than a few full slot generations cannot
+        land within any budget derived from the planned latency."""
+        t = self.tenant(net_id)
+        serve = getattr(t.plan, "serve", None) or {}
+        return serve.get("max_queue_depth")
+
     def _admission_check(self, t: Tenant):
+        # Queue-depth-aware admission (LM path): refuse BEFORE the backlog
+        # outgrows the plan's depth bound, not only after budget violations.
+        bound = self.queue_depth_bound(t.net_id)
+        if bound is not None and t.kind == "lm" \
+                and t.engine.queue.qsize() >= bound:
+            raise TenantQueueFull(
+                f"tenant {t.net_id!r} queue at plan depth bound "
+                f"({t.engine.queue.qsize()}/{bound}); retry after a tick")
         if self.shed_after is None \
                 or t.metrics.consecutive_violations < self.shed_after:
             return
@@ -124,6 +185,7 @@ class Router:
         t0 = time.perf_counter()
         y = t.engine.infer(x)
         t.metrics.observe_latency(time.perf_counter() - t0)
+        self._maybe_replan(t)
         return y
 
     # -- lm path (continuous batching) ------------------------------------
@@ -173,6 +235,70 @@ class Router:
                 return
             self.step(wait_s=wait_s)
 
+    # -- drift watcher (characterize -> plan -> serve -> replan loop) -----
+    def drift(self, net_id: str) -> float:
+        """Measured/planned latency ratio for one tenant (p50 over the
+        metrics window vs the tenant plan's estimate); 1.0 when either side
+        has no signal yet."""
+        t = self.tenant(net_id)
+        planned = getattr(t.plan, "est_latency_s", 0.0)
+        measured = t.metrics.p50_s
+        if planned <= 0 or measured <= 0:
+            return 1.0
+        return measured / planned
+
+    def _tenant_drifted(self, t: Tenant) -> bool:
+        if t.kind != "edge" or t.metrics.count < self.drift_min_samples:
+            return False                            # see module doc: LM p50
+        r = self.drift(t.net_id)                    # includes queue wait
+        return r > self.drift_threshold or r < 1.0 / self.drift_threshold
+
+    def drifted(self) -> list[str]:
+        """Edge tenants whose drift ratio left ``[1/threshold, threshold]``
+        with at least ``drift_min_samples`` observations."""
+        if self.drift_threshold is None:
+            return []
+        return [nid for nid, t in self._tenants.items()
+                if self._tenant_drifted(t)]
+
+    def _maybe_replan(self, t: Tenant):
+        """Fire the fleet replan when the tenant that just reported a
+        latency has drifted past the threshold.  Checking only that tenant
+        keeps the per-request cost at one percentile computation."""
+        if self.drift_threshold is None or self.fleet is None \
+                or not self._tenant_drifted(t):
+            return None
+        return self.replan_fleet()
+
+    def replan_fleet(self):
+        """Fleet-wide recalibration: feed every measured edge tenant's p50
+        back into the plan cache
+        (:func:`repro.plan.calibrate.recalibrate_fleet`) and swap the
+        replanned :class:`FleetPlan` into the live tenants — cost
+        annotations and budgets move; engines keep their compiled tiles.
+        Returns the replanned fleet."""
+        from repro.plan import calibrate
+        measurements = {nid: t.metrics.p50_s
+                        for nid, t in self._tenants.items()
+                        if t.kind == "edge" and t.metrics.count
+                        and t.metrics.p50_s > 0}
+        new_fleet = calibrate.recalibrate_fleet(self.fleet, measurements,
+                                                cache=self._cache)
+        for tp in new_fleet.tenants:
+            t = self._tenants[tp.net_id]
+            t.plan = tp.plan
+            t.latency_budget_s = tp.latency_budget_s
+            t.metrics.latency_budget_s = tp.latency_budget_s
+            # The recalibrated budget reflects measured reality; stale
+            # violation streaks (from the mis-planned budget) must not keep
+            # the tenant shed under the corrected one.
+            t.metrics.consecutive_violations = 0
+            if hasattr(t.engine, "plan"):
+                t.engine.plan = tp.plan
+        self.fleet = new_fleet
+        self.replans += 1
+        return new_fleet
+
     # -- reporting --------------------------------------------------------
     def report(self) -> dict:
         """Per-tenant metrics + planned-vs-budget context."""
@@ -182,6 +308,7 @@ class Router:
             snap["planned_latency_s"] = t.plan.est_latency_s
             snap["kind"] = t.kind
             snap["shed"] = self.over_budget(nid)
+            snap["drift"] = self.drift(nid)
             out[nid] = snap
         return out
 

@@ -1,0 +1,366 @@
+"""Characterization harness tests: sweeps, fits, the MachineModel artifact,
+planner consumption + plan-cache invalidation, and the drift-triggered
+fleet replan loop (characterize -> plan -> serve -> replan).
+
+Sweeps run under a SYNTHETIC timer (a known linear cost function) so the
+full machinery is exercised deterministically; one smoke test times the real
+legacy calibration grid.
+"""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import characterize as ch
+from repro import hw as hwlib
+from repro import plan as plan_lib
+from repro.models import edge
+from repro.serve import Router
+
+# Ground-truth constants the synthetic timer encodes; fits must recover them.
+_TRUE = {
+    "overhead_s": 2e-3,
+    "inv_peak_int8": 1e-10,
+    "inv_peak_f32": 5e-11,
+    "boundary_const": 1e-5,
+    "boundary_dispatch": 5e-5,
+    "boundary_per_byte": 1e-9,
+    "band2_slope": 0.12,
+}
+
+
+def _synthetic_timer(term, regs):
+    if term == "gemm_int8":
+        return (_TRUE["overhead_s"] * regs["launches"]
+                + _TRUE["inv_peak_int8"] * regs["padded_ops"])
+    if term == "gemm_f32":
+        return 1e-4 * regs["launches"] + _TRUE["inv_peak_f32"] * regs["ops"]
+    if term == "boundary":
+        return (_TRUE["boundary_const"]
+                + _TRUE["boundary_dispatch"] * regs["launches"]
+                + _TRUE["boundary_per_byte"] * regs["launch_bytes"])
+    if term == "contention":
+        return 1e-6 * (1.0 + _TRUE["band2_slope"] * regs["n_band2"])
+    raise AssertionError(term)
+
+
+def _model(**kw):
+    return ch.characterize(sweep="quick", timer=_synthetic_timer, **kw)
+
+
+def _with_constant(mm, term, name, value):
+    """Copy of ``mm`` with one fitted constant replaced."""
+    tf = mm.fits[term]
+    fits = dict(mm.fits)
+    fits[term] = dataclasses.replace(
+        tf, constants={**tf.constants, name: value})
+    return ch.MachineModel(fits=fits, provenance=mm.provenance)
+
+
+# ---------------------------------------------------------------------------
+# Sweeps + fits
+# ---------------------------------------------------------------------------
+
+def test_fit_recovers_synthetic_constants():
+    mm = _model()
+    g = mm.fits["gemm_int8"]
+    assert g.constants["kernel_overhead_s"] == pytest.approx(
+        _TRUE["overhead_s"], rel=1e-6)
+    assert g.constants["peak_int8_ops"] == pytest.approx(
+        1.0 / _TRUE["inv_peak_int8"], rel=1e-6)
+    assert g.residual_rel_rms < 1e-9
+    assert mm.fits["gemm_f32"].constants["peak_flops"] == pytest.approx(
+        1.0 / _TRUE["inv_peak_f32"], rel=1e-6)
+    b = mm.fits["boundary"]
+    assert b.constants["dispatch_s"] == pytest.approx(
+        _TRUE["boundary_dispatch"], rel=1e-6)
+    assert b.constants["hbm_bw"] == pytest.approx(
+        2.0 / _TRUE["boundary_per_byte"], rel=1e-6)
+    c = mm.fits["contention"]
+    assert c.constants["band2_penalty_per_layer"] == pytest.approx(
+        _TRUE["band2_slope"], rel=1e-6)
+    assert c.source == "model"
+    assert g.source == "measured"
+
+
+def test_fit_requires_enough_samples():
+    samples = ch.run_term("gemm_int8", sweep="quick",
+                          timer=_synthetic_timer)[:1]
+    with pytest.raises(ValueError):
+        ch.fit_term("gemm_int8", samples)
+    with pytest.raises(ValueError):
+        ch.run_term("no_such_term")
+    with pytest.raises(ValueError):
+        ch.run_term("gemm_int8", sweep="no_such_sweep")
+
+
+def test_real_calibrate_grid_smoke():
+    """The legacy 3-point grid, actually timed on this host: sane constants
+    (positive overhead/peak) without asserting host-dependent values."""
+    samples = ch.run_term("gemm_int8", sweep="calibrate", iters=2)
+    tf = ch.fit_term("gemm_int8", samples)
+    assert tf.n_samples == 3
+    assert tf.constants["kernel_overhead_s"] >= 1e-6
+    assert tf.constants["peak_int8_ops"] >= 1e6
+
+
+# ---------------------------------------------------------------------------
+# MachineModel artifact
+# ---------------------------------------------------------------------------
+
+def test_artifact_roundtrip_and_provenance(tmp_path):
+    mm = _model()
+    s = mm.to_json()
+    json.loads(s)                                  # strict JSON
+    again = ch.MachineModel.from_json(s)
+    assert again.version == mm.version
+    assert again.fits == mm.fits
+    p = mm.save(tmp_path / "model.json")
+    loaded = ch.MachineModel.load(p)
+    assert loaded.version == mm.version
+    prov = loaded.provenance
+    for key in ("host", "jax", "sweep", "grids", "python"):
+        assert key in prov
+    assert prov["timer"] == "synthetic"
+    assert set(prov["grids"]) == set(ch.TERMS)
+    assert len(mm.version) == 64                   # sha256 hex
+
+
+def test_artifact_rejects_tampered_version(tmp_path):
+    mm = _model()
+    d = mm.to_dict()
+    d["fits"]["gemm_int8"]["constants"]["kernel_overhead_s"] *= 2
+    with pytest.raises(ValueError):                # content/version mismatch
+        ch.MachineModel.from_dict(d)
+    with pytest.raises(ValueError):
+        ch.MachineModel.from_dict({"schema": 99, "fits": {}})
+
+
+def test_version_tracks_constants_not_provenance():
+    mm = _model()
+    # Same constants, different provenance -> same version.
+    other = ch.MachineModel(fits=mm.fits,
+                            provenance={**mm.provenance, "host": "elsewhere"})
+    assert other.version == mm.version
+    # Same constants, different residuals/coefficients (two wall-clock runs
+    # landing on identical clamped constants) -> same version, so a no-op
+    # re-characterization does not invalidate every cached plan.
+    tf = mm.fits["gemm_int8"]
+    noisy = dict(mm.fits)
+    noisy["gemm_int8"] = dataclasses.replace(
+        tf, residual_rel_rms=tf.residual_rel_rms + 0.1,
+        coefficients=tuple(c * 1.001 for c in tf.coefficients))
+    assert ch.MachineModel(fits=noisy,
+                           provenance=mm.provenance).version == mm.version
+    # Any constant change -> new version.
+    bumped = _with_constant(mm, "gemm_int8", "kernel_overhead_s", 1.0)
+    assert bumped.version != mm.version
+
+
+def test_hardware_model_substitution():
+    mm = _model()
+    tpu = mm.tpu()
+    assert tpu.kernel_overhead_s == pytest.approx(_TRUE["overhead_s"])
+    assert tpu.peak_int8_ops == pytest.approx(1.0 / _TRUE["inv_peak_int8"])
+    assert tpu.peak_bf16_flops == pytest.approx(1.0 / _TRUE["inv_peak_f32"])
+    assert tpu.hbm_bw == pytest.approx(2.0 / _TRUE["boundary_per_byte"])
+    # Un-fitted constants stay at the base model's values.
+    assert tpu.vmem_bytes == hwlib.TPU_V5E.vmem_bytes
+    aie = mm.aie()
+    assert aie.band2_penalty_per_layer == pytest.approx(_TRUE["band2_slope"])
+    assert aie.cols == hwlib.AIE_ML.cols
+
+
+def test_characterize_cli_roundtrip(tmp_path, capsys):
+    from repro.characterize.__main__ import main
+    out = tmp_path / "m.json"
+    rc = main(["--sweep", "calibrate", "--terms", "contention",
+               "--out", str(out)])
+    assert rc == 0
+    mm = ch.MachineModel.load(out)
+    assert mm.fits["contention"].constants[
+        "band2_penalty_per_layer"] == pytest.approx(
+        hwlib.AIE_ML.band2_penalty_per_layer)
+    assert "contention" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Planner consumption + plan-cache invalidation
+# ---------------------------------------------------------------------------
+
+def test_planner_consumes_machine_model():
+    mm = _model()
+    cfg = edge.edge_config("jet_tagger")
+    stock = plan_lib.plan_deployment(cfg, target="tpu")
+    fitted = plan_lib.plan_deployment(cfg, target="tpu", machine_model=mm)
+    assert fitted.key != stock.key
+    # The fitted overhead (2ms/launch) dwarfs the stock 2.2us: the planned
+    # latency must reflect the substituted constants, not the datasheet.
+    assert fitted.est_latency_s > stock.est_latency_s * 10
+    # machine_model overrides an explicitly-passed tpu model too.
+    explicit = plan_lib.plan_deployment(cfg, target="tpu", machine_model=mm,
+                                        tpu=hwlib.TPU_V5E)
+    assert explicit.key == fitted.key
+
+
+def test_planner_aie_path_consumes_machine_model():
+    mm = _with_constant(_model(), "contention",
+                        "band2_penalty_per_layer", 5.0)
+    cfg = edge.edge_config("autoencoder")
+    stock = plan_lib.plan_deployment(cfg, target="aie", pl_budget=0.0)
+    fitted = plan_lib.plan_deployment(cfg, target="aie", pl_budget=0.0,
+                                      machine_model=mm)
+    assert fitted.key != stock.key
+
+
+def test_plan_cache_invalidation_on_any_constant_change():
+    """Changing ANY fitted constant changes the cache key -> forced re-plan."""
+    mm = _model()
+    cfg = edge.edge_config("jet_tagger")
+    cache = plan_lib.PlanCache()
+    plan_lib.get_or_plan(cfg, target="tpu", cache=cache, machine_model=mm)
+    assert len(cache) == 1
+    # Same model again: cache hit, no new entry.
+    plan_lib.get_or_plan(cfg, target="tpu", cache=cache, machine_model=mm)
+    assert len(cache) == 1
+    mutations = [("gemm_int8", "kernel_overhead_s", 1e-3),
+                 ("gemm_int8", "peak_int8_ops", 123e9),
+                 ("gemm_f32", "peak_flops", 77e9),
+                 ("boundary", "hbm_bw", 5e8)]
+    for n, (term, name, value) in enumerate(mutations, start=2):
+        plan_lib.get_or_plan(cfg, target="tpu", cache=cache,
+                             machine_model=_with_constant(mm, term, name,
+                                                          value))
+        assert len(cache) == n, f"mutating {term}.{name} must force a re-plan"
+
+
+def test_fleet_planner_consumes_machine_model():
+    mm = _model()
+    cfgs = [edge.edge_config("jet_tagger"), edge.edge_config("tau_select")]
+    cache = plan_lib.PlanCache()
+    stock = plan_lib.plan_fleet(cfgs, target="tpu", cache=cache)
+    fitted = plan_lib.plan_fleet(cfgs, target="tpu", cache=cache,
+                                 machine_model=mm)
+    assert fitted.key != stock.key
+    for t in fitted.tenants:
+        assert t.plan.est_latency_s > 0
+
+
+# ---------------------------------------------------------------------------
+# Drift-triggered fleet replanning (the closed loop)
+# ---------------------------------------------------------------------------
+
+def _drift_ratio(router, nid):
+    r = router.drift(nid)
+    return max(r, 1.0 / r)                         # symmetric badness
+
+
+def test_drift_triggers_recalibration_and_replan():
+    """A fleet planned under stock datasheet constants drifts wildly on the
+    interpret-mode host; the router's watcher must recalibrate + replan and
+    the planned-vs-measured ratio must improve."""
+    cfg = edge.edge_config("jet_tagger")
+    cache = plan_lib.PlanCache()
+    fleet = plan_lib.plan_fleet([cfg], target="tpu", cache=cache)
+    router = Router.from_fleet(fleet, drift_threshold=2.0,
+                               drift_min_samples=3, cache=cache)
+    x = jnp.ones((cfg.batch, cfg.dims[0]), jnp.float32)
+    router.infer("jet_tagger", x)                  # jit warmup
+    router.reset_metrics()
+    before = None
+    for _ in range(3):
+        router.infer("jet_tagger", x)
+        if before is None:
+            before = _drift_ratio(router, "jet_tagger")
+    assert before > 2.0                            # datasheet plan is way off
+    assert router.replans >= 1
+    after = _drift_ratio(router, "jet_tagger")
+    assert after < before                          # ratio improved...
+    assert after == pytest.approx(1.0, abs=0.5)    # ...to ~1 post-replan
+    # The replanned fleet is live everywhere: tenant, engine, budget, cache.
+    t = router.tenant("jet_tagger")
+    assert t.plan.est_latency_s == router.fleet.tenant(
+        "jet_tagger").plan.est_latency_s
+    assert t.engine.plan is t.plan
+    assert t.metrics.latency_budget_s == pytest.approx(
+        router.fleet.tenant("jet_tagger").latency_budget_s)
+    assert "calibration" in t.plan.serve
+    assert cache.get(t.plan.key).est_latency_s == t.plan.est_latency_s
+
+
+def test_no_replan_within_threshold():
+    """A fleet whose plan already matches measurement must not churn."""
+    cfg = edge.edge_config("jet_tagger")
+    cache = plan_lib.PlanCache()
+    fleet = plan_lib.plan_fleet([cfg], target="tpu", cache=cache,
+                                tpu=plan_lib.calibrated_cpu_model())
+    router = Router.from_fleet(fleet, drift_threshold=50.0,
+                               drift_min_samples=3, cache=cache)
+    x = jnp.ones((cfg.batch, cfg.dims[0]), jnp.float32)
+    router.infer("jet_tagger", x)
+    router.reset_metrics()
+    for _ in range(4):
+        router.infer("jet_tagger", x)
+    assert router.replans == 0
+
+
+def test_lm_tenant_latency_never_feeds_recalibration():
+    """LM request latency includes queue wait, which is not the quantity the
+    plan estimates: the drift watcher must neither trip on it nor feed it
+    into recalibrate_fleet (otherwise a burst bakes transient load into the
+    cached cost model)."""
+    import numpy as np
+    from repro import configs
+    from repro.models import api
+    from repro.serve import engine
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    cache = plan_lib.PlanCache()
+    fleet = plan_lib.plan_fleet([cfg], target="tpu", cache=cache,
+                                serve_slots_total=2)
+    nid = fleet.net_ids[0]
+    router = Router.from_fleet(fleet, lm={nid: (cfg, params)},
+                               drift_threshold=1.5, drift_min_samples=1,
+                               cache=cache)
+    for i in range(3):
+        router.submit(nid, engine.Request(
+            rid=i, prompt=np.array([3 + i], np.int32), max_new=2))
+    router.run_until_drained(max_ticks=200)
+    t = router.tenant(nid)
+    assert t.metrics.count == 3
+    # Wall clock on the smoke model is wildly off the datasheet plan, yet:
+    assert router.drifted() == []
+    assert router.replans == 0
+    # And a manual fleet replan ignores the LM tenant's inflated p50.
+    before = t.plan.est_latency_s
+    router.replan_fleet()
+    assert router.tenant(nid).plan.est_latency_s == before
+
+
+def test_router_rejects_bad_drift_threshold():
+    fleet = plan_lib.plan_fleet([edge.edge_config("jet_tagger")],
+                                target="tpu", cache=plan_lib.PlanCache())
+    with pytest.raises(ValueError):
+        Router.from_fleet(fleet, drift_threshold=0.5)
+
+
+def test_recalibrate_fleet_preserves_unmeasured_tenants():
+    cfgs = [edge.edge_config("jet_tagger"), edge.edge_config("tau_select")]
+    cache = plan_lib.PlanCache()
+    fleet = plan_lib.plan_fleet(cfgs, target="tpu", cache=cache)
+    t0 = fleet.tenants[0]
+    measured = t0.plan.est_latency_s * 4.0
+    again = plan_lib.recalibrate_fleet(fleet, {"jet_tagger": measured},
+                                       cache=cache)
+    assert again.tenants[0].plan.est_latency_s == pytest.approx(measured)
+    # Budget re-derived with the fleet's original headroom factor (2x).
+    assert again.tenants[0].latency_budget_s == pytest.approx(
+        2.0 * (measured + again.tenants[0].crossing_s))
+    # Unmeasured tenant untouched.
+    assert again.tenants[1] == fleet.tenants[1]
+    assert again.est_latency_s >= again.tenants[0].total_latency_s - 1e-18
+    # The calibrated plan landed in the cache under its original key.
+    assert cache.get(t0.plan.key).est_latency_s == pytest.approx(measured)

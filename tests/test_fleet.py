@@ -14,7 +14,8 @@ from repro import configs
 from repro import hw as hwlib
 from repro import plan as plan_lib
 from repro.models import api, edge
-from repro.serve import Router, TenantMetrics, TenantOverBudget, engine
+from repro.serve import (Router, TenantMetrics, TenantOverBudget,
+                         TenantQueueFull, engine, write_serve_snapshots)
 
 
 # ---------------------------------------------------------------------------
@@ -216,6 +217,29 @@ def test_calibration_feedback_rejects_bad_measurement():
                                     target="tpu")
     with pytest.raises(ValueError):
         plan_lib.feedback(plan, 0.0, cache=plan_lib.PlanCache())
+
+
+def test_fleet_tenant_feedback_preserves_latency_decomposition():
+    """Regression: ``calibrate.feedback`` on a FLEET tenant's plan (fleet-
+    scoped key, serve policy attached) must keep the invariant
+    ``est_latency == sum(parts) + overhead`` — the entry-dispatch overhead is
+    not folded into the per-layer/boundary parts."""
+    cfgs = [edge.edge_config("jet_tagger"), edge.edge_config("tau_select")]
+    cache = plan_lib.PlanCache()
+    fleet = plan_lib.plan_fleet(cfgs, target="tpu", cache=cache)
+    for tp in fleet.tenants:
+        plan = tp.plan
+        overhead = plan.est_latency_s \
+            - sum(l.est_latency_s * l.repeat for l in plan.layers) \
+            - sum(b.crossing_s for b in plan.boundaries)
+        assert overhead > 0                        # TPU path charges entry
+        measured = plan.est_latency_s * 3.0
+        cal = plan_lib.feedback(plan, measured, cache=cache)
+        parts = sum(l.est_latency_s * l.repeat for l in cal.layers) \
+            + sum(b.crossing_s for b in cal.boundaries)
+        assert parts + overhead == pytest.approx(cal.est_latency_s)
+        assert cal.est_latency_s == pytest.approx(measured)
+        assert cal.key == plan.key
 
 
 def test_edge_engine_record_calibration():
@@ -502,6 +526,67 @@ def test_batcher_idle_blocks_instead_of_spinning():
     assert b._steps >= 1                           # it actually decoded
 
 
+def test_router_queue_depth_aware_admission():
+    """The plan-derived depth bound refuses admits BEFORE budget violations:
+    a backlog at ``serve["max_queue_depth"]`` raises TenantQueueFull, and
+    draining the queue re-opens admission."""
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    fleet = plan_lib.plan_fleet([cfg], target="tpu", serve_slots_total=1,
+                                queue_depth_factor=2)
+    nid = fleet.net_ids[0]
+    assert fleet.tenants[0].plan.serve["max_queue_depth"] == 2
+    router = Router.from_fleet(fleet, lm={nid: (cfg, params)})
+    assert router.queue_depth_bound(nid) == 2
+    reqs = [engine.Request(rid=i, prompt=np.array([3 + i], np.int32),
+                           max_new=2) for i in range(3)]
+    router.submit(nid, reqs[0])
+    router.submit(nid, reqs[1])
+    with pytest.raises(TenantQueueFull):           # backlog at the bound
+        router.submit(nid, reqs[2])
+    assert isinstance(TenantQueueFull("x"), TenantOverBudget)  # same family
+    router.step()                                  # admits one -> queue drains
+    router.submit(nid, reqs[2])                    # re-opened
+    router.run_until_drained(max_ticks=200)
+    for r in reqs:
+        assert r.done
+
+
+def test_edge_tenant_has_no_queue_bound():
+    fleet = _edge_fleet(("jet_tagger",))
+    router = Router.from_fleet(fleet)
+    assert router.queue_depth_bound("jet_tagger") is None
+    cfg = edge.edge_config("jet_tagger")
+    x = jax.random.normal(jax.random.PRNGKey(0), (cfg.batch, cfg.dims[0]))
+    router.infer("jet_tagger", x)                  # sync path unaffected
+
+
+def test_write_serve_snapshots_roundtrip_with_trend(tmp_path):
+    fleet = _edge_fleet(("jet_tagger",))
+    router = Router.from_fleet(fleet)
+    cfg = edge.edge_config("jet_tagger")
+    x = jax.random.normal(jax.random.PRNGKey(1), (cfg.batch, cfg.dims[0]))
+    for _ in range(3):
+        router.infer("jet_tagger", x)
+    paths = write_serve_snapshots(router.report(), tmp_path,
+                                  meta={"run": "test"})
+    assert [p.name for p in paths] == ["BENCH_serve_jet_tagger.json"]
+    payload = trend.load(paths[0])
+    names = {r["name"] for r in payload["rows"]}
+    assert {"serve/jet_tagger/p50", "serve/jet_tagger/p95",
+            "serve/jet_tagger/mean", "serve/jet_tagger/planned"} <= names
+    assert payload["meta"]["run"] == "test"
+    # trend diffs serving snapshots exactly like benchmark snapshots.
+    slower = {"rows": [{**r, "us_per_call": r["us_per_call"] * 10}
+                       for r in payload["rows"]]}
+    deltas = {d["name"]: d for d in trend.compare(payload, slower)}
+    assert deltas["serve/jet_tagger/p50"]["status"] == "regression"
+    # Tenant ids with '#' (duplicate nets) sanitize into safe filenames.
+    paths2 = write_serve_snapshots(
+        {"jet_tagger#1": router.report()["jet_tagger"]}, tmp_path)
+    assert paths2[0].name == "BENCH_serve_jet_tagger_1.json"
+
+
 # ---------------------------------------------------------------------------
 # BENCH trend tracking
 # ---------------------------------------------------------------------------
@@ -519,6 +604,38 @@ def test_trend_compare_classifies_deltas():
     assert deltas["b"]["status"] == "gone"
     assert deltas["c"]["status"] == "new"
     assert deltas["d"]["status"] == "steady"
+
+
+def test_trend_gate_blocks_model_regressions(tmp_path, monkeypatch):
+    """The CI gate fails (rc 2) only on model-sourced regressions; measured
+    rows jitter with the host and never gate; the override env downgrades
+    failures to warnings."""
+    old = {"rows": [{"name": "m", "us_per_call": 1.0, "derived": "src=model"},
+                    {"name": "w", "us_per_call": 1.0,
+                     "derived": "src=measured"}]}
+    p_old = tmp_path / "old.json"
+    p_old.write_text(json.dumps(old))
+    monkeypatch.delenv("TREND_GATE_OVERRIDE", raising=False)
+
+    def run(rows):
+        p_new = tmp_path / "new.json"
+        p_new.write_text(json.dumps({"rows": rows}))
+        return trend.main([str(p_new), "--against", str(p_old), "--gate"])
+
+    # Measured-row regression alone: reported, not gated.
+    assert run([{"name": "m", "us_per_call": 1.0, "derived": "src=model"},
+                {"name": "w", "us_per_call": 9.0,
+                 "derived": "src=measured"}]) == 0
+    # Model-row regression: gated.
+    bad = [{"name": "m", "us_per_call": 2.0, "derived": "src=model"},
+           {"name": "w", "us_per_call": 1.0, "derived": "src=measured"}]
+    assert run(bad) == 2
+    # Deleting/renaming a model row is not a silent bypass: gated too.
+    assert run([{"name": "w", "us_per_call": 1.0,
+                 "derived": "src=measured"}]) == 2
+    # Override label/env downgrades to a warning.
+    monkeypatch.setenv("TREND_GATE_OVERRIDE", "1")
+    assert run(bad) == 0
 
 
 def test_trend_report_roundtrips_files(tmp_path, capsys):
