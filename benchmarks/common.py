@@ -12,6 +12,7 @@ Numbers are labeled by source:
 from __future__ import annotations
 
 import json
+import os
 import time
 
 import jax
@@ -48,6 +49,16 @@ def time_call(fn, *args, iters: int = 20, warmup: int = 3) -> float:
         times.append(time.perf_counter() - t0)
     times.sort()
     return times[len(times) // 2]
+
+
+def strict() -> bool:
+    """Whether measured acceptance asserts should fire.
+
+    ``REPRO_BENCH_STRICT=0`` downgrades them to reported rows — used by the
+    CI trend-gate job, which only judges DETERMINISTIC model-sourced rows
+    and must not fail on host jitter in the measured ones (the bench-smoke
+    job runs the same benchmarks strict)."""
+    return os.environ.get("REPRO_BENCH_STRICT", "1") != "0"
 
 
 def emit(name: str, us_per_call: float, derived: str):

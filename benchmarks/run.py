@@ -21,7 +21,7 @@ import time
 from benchmarks import (common, fig2_scalability, fig3_lare, fig4_api_tiling,
                         fig5_spatial, fig6_column_exhaustion, fig7_boundary,
                         fig8_planner, fig9_coresidency, fig10_characterize,
-                        table1_deployment, trend)
+                        fig11_fusion, table1_deployment, trend)
 
 ALL = {
     "fig2": fig2_scalability.run,
@@ -33,6 +33,7 @@ ALL = {
     "fig8": fig8_planner.run,
     "fig9": fig9_coresidency.run,
     "fig10": fig10_characterize.run,
+    "fig11": fig11_fusion.run,
     "table1": table1_deployment.run,
 }
 

@@ -7,6 +7,7 @@ the generalization of ``calibrate.calibrated_cpu_model``'s 2-constant fit
 
 * ``gemm_int8``:  t = overhead * launches + inv_peak * padded_ops
 * ``gemm_f32``:   t = overhead * launches + inv_peak * ops
+* ``fused_chain``: t = const + inv_peak * padded_ops + epilogue * inner_layers
 * ``boundary``:   t = const + dispatch * launches + per_byte * launch_bytes
 * ``contention``: t = base * (1 + slope * n_band2)
 
@@ -26,12 +27,14 @@ from repro.characterize.harness import Sample
 _DESIGNS = {
     "gemm_int8": ("launches", "padded_ops"),
     "gemm_f32": ("launches", "ops"),
+    "fused_chain": ("one", "padded_ops", "inner_layers"),
     "boundary": ("one", "launches", "launch_bytes"),
     "contention": ("one", "n_band2"),
 }
 # Wall-clock terms vs analytical-curve terms (artifact provenance labels).
 _SOURCES = {"gemm_int8": "measured", "gemm_f32": "measured",
-            "boundary": "measured", "contention": "model"}
+            "fused_chain": "measured", "boundary": "measured",
+            "contention": "model"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +85,12 @@ def _constants_for(term: str, coef: tuple) -> dict:
         _, inv_peak = coef
         peak = 1.0 / inv_peak if inv_peak > 1e-15 else 1e12
         return {"peak_flops": max(peak, 5e5)}
+    if term == "fused_chain":
+        _, _, epilogue = coef
+        # The fused launch's own dispatch and throughput are characterized
+        # by the gemm_int8 term; this sweep isolates what keeping a layer
+        # boundary INSIDE the kernel costs (the epilogue requantize).
+        return {"fused_epilogue_s": max(epilogue, 0.0)}
     if term == "boundary":
         _, dispatch, per_byte = coef
         # crossing_cost_tpu charges 2*bytes/hbm_bw per boundary; invert the

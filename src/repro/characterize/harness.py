@@ -112,6 +112,50 @@ def time_int8_pipeline(width: int, depth: int, *, batch: int = 8,
                                 "dtype": "int8", "batch": batch}, regs, t)
 
 
+def fused_chain_regressors(width: int, depth: int, batch: int) -> dict:
+    """Fit regressors for a depth-layer fused megakernel chain.
+
+    One launch regardless of depth; ``padded_ops`` uses the megakernel's OWN
+    compute extent (live rows x lane-padded widths — it is not grid-blocked,
+    so no 32-row int8 block padding), and ``inner_layers`` counts the fused
+    epilogue requantizes, the per-boundary cost the planner charges as
+    ``TpuV5e.fused_epilogue_s``."""
+    rows = _ceil_to(batch, 8)
+    pw = _ceil_to(width, 128)
+    return {"one": 1.0,
+            "padded_ops": depth * 2.0 * rows * pw * pw,
+            "inner_layers": float(depth - 1)}
+
+
+def time_fused_chain(width: int, depth: int, *, batch: int = 8,
+                     iters: int = 5, timer: Timer | None = None) -> Sample:
+    """One (depth, width) point of the fused-chain sweep: the SAME layer
+    stack as :func:`time_int8_pipeline`, executed as ONE ``fused_mlp_q8``
+    megakernel launch.  Fitting this against the multi-launch pipeline is
+    what turns the fuse-vs-split decision into a measured trade-off instead
+    of a hand-tuned constant."""
+    regs = fused_chain_regressors(width, depth, batch)
+    inputs = {"depth": depth, "width": width, "dtype": "int8", "batch": batch}
+    if timer is not None:
+        return Sample("fused_chain", inputs, regs, timer("fused_chain", regs))
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops as kops
+
+    ws = tuple(jnp.ones((width, width), jnp.int8) for _ in range(depth))
+    scs = tuple(jnp.ones((width,), jnp.float32) for _ in range(depth))
+    bs = tuple(jnp.zeros((width,), jnp.float32) for _ in range(depth))
+    xs = jnp.ones((depth,), jnp.float32)
+
+    @jax.jit
+    def f(x):
+        return kops.fused_mlp_q8(x, ws, scs, bs, xs, act="relu")
+
+    x = jnp.ones((batch, width), jnp.float32)
+    t = wall_timer(f, x, iters=iters)
+    return Sample("fused_chain", inputs, regs, t)
+
+
 def time_f32_chain(width: int, depth: int, *, batch: int = 8,
                    iters: int = 5, timer: Timer | None = None) -> Sample:
     """One point of the float matmul-chain sweep (the XLA path LM layers

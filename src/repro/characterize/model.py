@@ -88,6 +88,9 @@ class MachineModel:
         bw = self.constant("boundary", "hbm_bw")
         if bw is not None:
             kw["hbm_bw"] = bw
+        epilogue = self.constant("fused_chain", "fused_epilogue_s")
+        if epilogue is not None:
+            kw["fused_epilogue_s"] = epilogue
         return dataclasses.replace(base, **kw) if kw else base
 
     def aie(self, base: hwlib.AieMl = hwlib.AIE_ML) -> hwlib.AieMl:

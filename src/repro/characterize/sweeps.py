@@ -1,12 +1,16 @@
 """Parameterized sweep grids over the cost terms the planner charges.
 
-Four terms, matching the constants the deployment planner actually reads:
+Five terms, matching the constants the deployment planner actually reads:
 
 * ``gemm_int8``   — multi-launch int8 Pallas GEMM pipelines over a
   (depth, width) grid -> per-launch dispatch overhead
   (``TpuV5e.kernel_overhead_s``) + int8 throughput (``peak_int8_ops``).
 * ``gemm_f32``    — jitted XLA matmul chains -> float throughput
   (``peak_bf16_flops``).
+* ``fused_chain`` — the SAME int8 layer stacks executed as ONE
+  ``fused_mlp_q8`` megakernel launch -> the per-fused-boundary epilogue cost
+  (``TpuV5e.fused_epilogue_s``), so the planner's fuse-vs-split decision
+  (DR7') is fitted against this host instead of hand-tuned.
 * ``boundary``    — un-fused element-wise launch chains over an
   (n_launches, act_bytes) grid -> the DR7' crossing cost's fixed dispatch
   and per-byte parts.
@@ -39,6 +43,15 @@ _F32_GRIDS = {
     "full": ((2, 256), (4, 256), (6, 256), (2, 512), (6, 512), (2, 768),
              (4, 768)),
 }
+# (depth, width) grids for the fused megakernel chain sweep.  Two widths
+# minimum: with a single width, `inner_layers` (= depth-1) is collinear with
+# the {one, padded_ops} columns and the epilogue coefficient is unfittable.
+_FUSED_GRIDS = {
+    "calibrate": ((2, 64), (6, 64), (2, 256)),
+    "quick": ((2, 64), (6, 64), (2, 256), (4, 256)),
+    "full": ((2, 64), (4, 64), (6, 64), (8, 64), (2, 256), (4, 256),
+             (6, 256)),
+}
 # (n_launches, act_bytes) grids for the boundary sweep.
 _BOUNDARY_GRIDS = {
     "calibrate": ((2, 1 << 12), (8, 1 << 12), (2, 1 << 20)),
@@ -52,14 +65,15 @@ _CONTENTION_GRIDS = {
     "full": (0, 1, 2, 3, 4, 6),
 }
 
-TERMS = ("gemm_int8", "gemm_f32", "boundary", "contention")
+TERMS = ("gemm_int8", "gemm_f32", "fused_chain", "boundary", "contention")
 SWEEPS = ("calibrate", "quick", "full")
 
 
 def grid(term: str, sweep: str):
     """The (term, sweep) coordinate grid — recorded in artifact provenance."""
     tables = {"gemm_int8": _GEMM_GRIDS, "gemm_f32": _F32_GRIDS,
-              "boundary": _BOUNDARY_GRIDS, "contention": _CONTENTION_GRIDS}
+              "fused_chain": _FUSED_GRIDS, "boundary": _BOUNDARY_GRIDS,
+              "contention": _CONTENTION_GRIDS}
     if term not in tables:
         raise ValueError(f"unknown term {term!r}; choose from {TERMS}")
     if sweep not in tables[term]:
@@ -78,6 +92,9 @@ def run_term(term: str, *, sweep: str = "quick", batch: int = 8,
     if term == "gemm_f32":
         return [harness.time_f32_chain(w, d, batch=batch, iters=iters,
                                        timer=timer) for d, w in g]
+    if term == "fused_chain":
+        return [harness.time_fused_chain(w, d, batch=batch, iters=iters,
+                                         timer=timer) for d, w in g]
     if term == "boundary":
         return [harness.time_unfused_chain(l, b, iters=iters, timer=timer)
                 for l, b in g]

@@ -32,16 +32,44 @@ from repro import hw as hwlib
 @dataclasses.dataclass(frozen=True)
 class Stage:
     name: str
-    compute_s: float            # stage time in its default domain
+    compute_s: float            # stage time in its default domain; for the
+    # TPU fusion DP this is PURE compute (launch dispatch excluded — each
+    # fusion group charges one dispatch of its own in fused_group_cost).
     out_bytes: int              # activation bytes handed to the next stage
     vmem_bytes: int = 0         # working set if fused (for plan_fusion)
+    # Compute time when executed INSIDE a fused megakernel.  A megakernel is
+    # not grid-blocked, so it escapes the per-layer kernel's block-shape
+    # padding (e.g. the 32-row int8 tile at batch 8) — when that matters the
+    # planner sets this lower than compute_s; None means "same".
+    fused_compute_s: float | None = None
     # For plan_hybrid_split: time in each domain (e.g. {'aie':..., 'pl':...}).
     domain_s: dict | None = None
+
+    @property
+    def in_group_compute_s(self) -> float:
+        """Compute charged when this stage runs inside a multi-stage group."""
+        return (self.fused_compute_s if self.fused_compute_s is not None
+                else self.compute_s)
 
 
 def crossing_cost_tpu(act_bytes: int, tpu: hwlib.TpuV5e = hwlib.TPU_V5E) -> float:
     """DR7' per-boundary cost: HBM round trip + kernel dispatch."""
     return 2.0 * act_bytes / tpu.hbm_bw + tpu.kernel_overhead_s
+
+
+def fused_group_cost(stages: Sequence[Stage],
+                     tpu: hwlib.TpuV5e = hwlib.TPU_V5E) -> float:
+    """Execution cost of one fusion group as the runtime runs it: ONE launch
+    dispatch, the members' compute, and a fused-epilogue requantize at every
+    boundary kept inside the kernel (``stages[i].compute_s`` must be the
+    pure compute time, dispatch excluded — the group charges its own).  A
+    singleton group is a plain per-layer launch; multi-stage groups run as a
+    megakernel and use each stage's (possibly cheaper) fused compute."""
+    if len(stages) == 1:
+        return tpu.kernel_overhead_s + stages[0].compute_s
+    return (tpu.kernel_overhead_s
+            + sum(s.in_group_compute_s for s in stages)
+            + tpu.fused_epilogue_s * max(len(stages) - 1, 0))
 
 
 def crossing_cost_aie(act_bytes: int, base_latency_s: float,
@@ -57,16 +85,23 @@ def chain_latency(stages: Sequence[Stage], groups: Sequence[int],
                   tpu: hwlib.TpuV5e = hwlib.TPU_V5E) -> float:
     """Total time of a stage chain under a fusion grouping.
 
-    ``groups[i]`` is the fusion-group id of stage i (non-decreasing).  A
-    boundary exists wherever consecutive stages differ in group, plus the
-    chain entry and exit (the paper's 2-crossing baseline).
-    """
-    total = sum(s.compute_s for s in stages)
-    # entry + exit crossings always exist
-    total += crossing_cost_tpu(0, tpu) * 2
-    for i in range(len(stages) - 1):
-        if groups[i] != groups[i + 1]:
-            total += crossing_cost_tpu(stages[i].out_bytes, tpu)
+    ``groups[i]`` is the fusion-group id of stage i (non-decreasing).  Each
+    group pays :func:`fused_group_cost` (one dispatch + compute + fused
+    epilogues); each boundary BETWEEN groups pays the activation's HBM round
+    trip — the following group's dispatch is already in its group cost, so
+    an all-singleton grouping reduces exactly to the classic per-layer
+    launch chain (N dispatches + N-1 crossings)."""
+    total = 0.0
+    i = 0
+    n = len(stages)
+    while i < n:
+        j = i
+        while j + 1 < n and groups[j + 1] == groups[i]:
+            j += 1
+        total += fused_group_cost(stages[i:j + 1], tpu)
+        if j + 1 < n:
+            total += 2.0 * stages[j].out_bytes / tpu.hbm_bw
+        i = j + 1
     return total
 
 
@@ -76,8 +111,11 @@ def plan_fusion(stages: Sequence[Stage], *,
     """Greedy-optimal fusion grouping (chain DP) under a VMEM budget.
 
     Returns a group id per stage.  DP over split points: cost(i..j fused) =
-    sum(compute) and feasible iff the union working set fits VMEM; boundaries
-    between groups pay :func:`crossing_cost_tpu`.
+    :func:`fused_group_cost` (one dispatch + compute + a fused-epilogue
+    requantize per inner boundary), feasible iff the union working set fits
+    VMEM; the activation handed between groups pays its HBM round trip.  A
+    boundary fuses exactly when ``fused_epilogue_s`` undercuts the crossing —
+    the DR7' decision, now priced on both sides.
     """
     n = len(stages)
     vmem = vmem_budget or int(tpu.vmem_bytes * 0.75)
@@ -93,9 +131,9 @@ def plan_fusion(stages: Sequence[Stage], *,
         for i in range(j):
             if not group_ok(i, j - 1):
                 continue
-            c = best[i] + sum(s.compute_s for s in stages[i:j])
+            c = best[i] + fused_group_cost(stages[i:j], tpu)
             if i > 0:
-                c += crossing_cost_tpu(stages[i - 1].out_bytes, tpu)
+                c += 2.0 * stages[i - 1].out_bytes / tpu.hbm_bw
             if c < best[j]:
                 best[j], choice[j] = c, i
     # Reconstruct groups.

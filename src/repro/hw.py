@@ -49,6 +49,12 @@ class TpuV5e:
     # Dispatch overhead charged per un-fused kernel boundary (seconds). This is
     # the fixed part of the paper's DR7 boundary-crossing cost on TPU.
     kernel_overhead_s: float = 2.2e-6
+    # Cost of keeping a layer boundary INSIDE a fused megakernel: the epilogue
+    # requantize (round/clip/cast through VMEM scratch) paid per fused inner
+    # boundary instead of the full crossing.  The fuse-vs-split decision is
+    # epilogue-vs-crossing; the characterization harness fits this from the
+    # fused-chain sweep (``repro.characterize`` term ``fused_chain``).
+    fused_epilogue_s: float = 3e-7
 
     def sublanes_for(self, itemsize: int) -> int:
         """Second-to-last-dim tiling multiple for a dtype of `itemsize` bytes."""

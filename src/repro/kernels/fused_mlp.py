@@ -1,0 +1,155 @@
+"""Fused-group MLP megakernel: a whole DR7' fusion group in ONE launch.
+
+``gemm_int8`` executes one layer per ``pallas_call``; the planner's fusion DP
+(:func:`repro.core.boundary.plan_fusion`) has always *charged* for those
+un-fused boundaries, but until now nothing *executed* its decision — the
+executor paid N dispatches plus N-1 HBM round trips per N-layer group it was
+never billed for.  This kernel closes that gap: an entire fusion group — N
+consecutive int8 dense layers with dequantize + bias + activation +
+requantize fused into each layer's epilogue — runs in a single launch.
+Intermediate activations never leave the chip: the requantized int8
+activations live in a VMEM scratch buffer between layers, so the only HBM
+traffic is the group's input, its weights, and its output.
+
+Numerics match the per-layer path bit-for-bit on the int8 side: each
+epilogue applies the same ``clip(round(h / x_scale))`` requantization the
+host-side per-layer loop applies between ``gemm_int8`` launches, with the
+per-layer calibrated ``x_scale`` read from an SMEM vector.
+
+Shapes are padded to TPU tile legality ((32, 128) for int8 operands); edge
+nets are tiny (<=512-wide layers), so a whole group's weights fit VMEM with
+orders of magnitude to spare — ``plan_fusion``'s VMEM budget guards the
+general case.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_INT8_SUBLANE = 32                 # min second-to-last tile dim for int8
+_LANE = 128                        # last-dim tile multiple
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return ((x + q - 1) // q) * q
+
+
+def _act(name: str, y):
+    if name == "relu":
+        return jnp.maximum(y, 0.0)
+    if name == "none":
+        return y
+    raise ValueError(f"unsupported fused activation {name!r}")
+
+
+def _mega_kernel(xs_ref, x_ref, *refs, n_layers: int, act: str,
+                 act_last: bool, widths: tuple, rows: int):
+    """One fusion group.  ``refs`` is ``n_layers`` triples of
+    (w_q, scale_row, bias_row) followed by the output ref and the int8
+    activation scratch.  ``widths`` are the PADDED per-layer activation
+    widths (input first), so every scratch slice is lane-aligned and static.
+
+    ``rows`` is the LIVE batch extent: buffers are padded to the int8 tile
+    (32 sublanes), but a single-invocation megakernel is not grid-blocked,
+    so — unlike the per-layer kernel, whose BlockSpec tiles pin every GEMM
+    to the full (32, lane) block — compute runs on just the rows that carry
+    data.  At the paper's batch 8 that is 4x less GEMM work per layer, on
+    top of the eliminated launches: the structural win of megakernelization.
+    """
+    o_ref, h_ref = refs[-2], refs[-1]
+    # Entry quantization (the per-layer path's host-side clip/round/cast).
+    h_ref[:rows, :widths[0]] = jnp.clip(
+        jnp.round(x_ref[:rows, :] / xs_ref[0]), -127, 127).astype(jnp.int8)
+    y = None
+    for i in range(n_layers):
+        w_ref, s_ref, b_ref = refs[3 * i], refs[3 * i + 1], refs[3 * i + 2]
+        acc = jax.lax.dot_general(
+            h_ref[:rows, :widths[i]], w_ref[...],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        # Epilogue: dequantize (x_scale_i * w_scale folded into s_ref), bias,
+        # activation, and — for every non-final layer — requantize back into
+        # the VMEM activation scratch at the NEXT layer's input scale.
+        y = acc.astype(jnp.float32) * s_ref[...] + b_ref[...]
+        last = i == n_layers - 1
+        if not last or act_last:
+            y = _act(act, y)
+        if not last:
+            h_ref[:rows, :widths[i + 1]] = jnp.clip(
+                jnp.round(y / xs_ref[i + 1]), -127, 127).astype(jnp.int8)
+    o_ref[:rows, :] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("act", "act_last", "out_dtype", "interpret"),
+)
+def fused_mlp_q8(
+    x: jax.Array,                   # (M, K0) float input
+    weights: tuple,                 # per layer: (K_i, N_i) int8
+    w_scales: tuple,                # per layer: (N_i,) f32 per-out-channel
+    biases: tuple,                  # per layer: (N_i,) f32
+    x_scales: jax.Array,            # (L,) f32 per-layer input act scale
+    *,
+    act: str = "relu",
+    act_last: bool = False,         # apply `act` to the group's last layer
+    out_dtype: jnp.dtype = jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Run ``L`` int8 dense layers in a single Pallas launch.
+
+    Per layer ``i``:  ``h = act(clip(round(h/xs_i)) @ w_i * (xs_i*ws_i) + b_i)``
+    with the activation applied to every layer except the last (unless
+    ``act_last``, for groups that end mid-network).  Returns the final f32
+    activations, un-padded to ``(M, N_last)``.
+    """
+    n_layers = len(weights)
+    assert n_layers >= 1
+    assert len(w_scales) == len(biases) == n_layers
+    m, k0 = x.shape
+    dims = [k0] + [w.shape[1] for w in weights]
+    for i, w in enumerate(weights):
+        assert w.dtype == jnp.int8 and w.shape[0] == dims[i], (i, w.shape)
+
+    pm = _ceil_to(m, _INT8_SUBLANE)        # buffer padding: int8 tile rows
+    rows = _ceil_to(m, 8)                  # live compute rows (f32 sublane)
+    pads = [_ceil_to(d, _LANE) for d in dims]
+    xs = jnp.asarray(x_scales, jnp.float32).reshape(n_layers)
+
+    xp = jnp.pad(x.astype(jnp.float32),
+                 ((0, pm - m), (0, pads[0] - k0)))
+    operands = [xp]
+    for i, (w, ws, b) in enumerate(zip(weights, w_scales, biases)):
+        pk, pn = pads[i] - dims[i], pads[i + 1] - dims[i + 1]
+        operands.append(jnp.pad(w, ((0, pk), (0, pn))))
+        # Dequant scale row: per-tensor activation scale x per-channel weight
+        # scale, folded host-side so the epilogue is one multiply.
+        s = jnp.asarray(ws, jnp.float32) * xs[i]
+        operands.append(jnp.pad(s, (0, pn)).reshape(1, -1))
+        operands.append(jnp.pad(jnp.asarray(b, jnp.float32),
+                                (0, pn)).reshape(1, -1))
+
+    in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM)]           # x_scales
+    in_specs += [pl.BlockSpec(memory_space=pltpu.VMEM)
+                 for _ in operands]
+    out = pl.pallas_call(
+        functools.partial(_mega_kernel, n_layers=n_layers, act=act,
+                          act_last=act_last, widths=tuple(pads), rows=rows),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((pm, pads[-1]), out_dtype),
+        # Inter-layer activations stay on-chip: one int8 scratch wide enough
+        # for the widest layer in the group.
+        scratch_shapes=[pltpu.VMEM((pm, max(pads[:-1])), jnp.int8)],
+        interpret=interpret,
+        name=f"repro_fused_mlp_x{n_layers}",
+    )(xs, *operands)
+    if pm != m or pads[-1] != dims[-1]:
+        out = out[:m, :dims[-1]]
+    return out

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import fused_dense as _fd
+from repro.kernels import fused_mlp as _fm
 from repro.kernels import gemm_int8 as _g8
 from repro.kernels import rglru as _rg
 from repro.kernels import rwkv6 as _rw
@@ -36,6 +37,13 @@ def fused_dense(x, w, b, residual=None, **kw):
 def gemm_int8(x, w, w_scale, x_scale=1.0, **kw):
     kw.setdefault("interpret", use_interpret())
     return _g8.gemm_int8(x, w, w_scale, x_scale, **kw)
+
+
+def fused_mlp_q8(x, weights, w_scales, biases, x_scales, **kw):
+    """A whole DR7' fusion group (N int8 dense layers) in one launch."""
+    kw.setdefault("interpret", use_interpret())
+    return _fm.fused_mlp_q8(x, tuple(weights), tuple(w_scales),
+                            tuple(biases), x_scales, **kw)
 
 
 def flash_attention(q, k, v, **kw):

@@ -13,8 +13,10 @@ Layer widths are reconstructed so the MAC counts match Table I exactly:
 
 All are batch-8, int8-quantized dense pipelines in deployment (the paper's
 extreme-edge convention).  ``edge_forward`` is the float reference path;
-``edge_forward_q8`` is the int8 path used by the serving engine with the
-Pallas ``gemm_int8``/``fused_dense`` kernels and the two-level tiling plan.
+``edge_forward_q8`` is the int8 path used by the serving engine: one Pallas
+launch per DR7' fusion group (``kernels/fused_mlp`` megakernel for
+multi-layer groups, ``gemm_int8`` for singletons), with block shapes and
+groups both read from the :class:`DeploymentPlan`.
 """
 
 from __future__ import annotations
@@ -84,14 +86,29 @@ def edge_forward(params: list[dict], cfg: EdgeConfig,
     return h
 
 
-def quantize_edge(params: list[dict]) -> list[dict]:
-    """Per-output-channel symmetric int8 weight quantization."""
+def quantize_edge(params: list[dict], *, calib_x: jax.Array | None = None,
+                  act: str = "relu") -> list[dict]:
+    """Per-output-channel symmetric int8 weight quantization.
+
+    With ``calib_x`` (a representative float input batch), each layer also
+    gets a calibrated per-layer ACTIVATION scale: the float reference is run
+    once at quantize time and ``x_scale_i = max|h_i| / 127`` is stored on the
+    layer, replacing the historical hard-coded per-tensor 0.05 guess.  The
+    executors read it via ``p["x_scale"]`` and fall back to their ``x_scale``
+    argument for uncalibrated params."""
     qparams = []
-    for p in params:
+    h = None if calib_x is None else calib_x.astype(F32)
+    last = len(params) - 1
+    for i, p in enumerate(params):
         scale = jnp.max(jnp.abs(p["w"]), axis=0) / 127.0 + 1e-12
         qw = jnp.clip(jnp.round(p["w"] / scale[None, :]), -127, 127)
-        qparams.append({"w_q": qw.astype(jnp.int8), "w_scale": scale,
-                        "b": p["b"]})
+        q = {"w_q": qw.astype(jnp.int8), "w_scale": scale, "b": p["b"]}
+        if h is not None:
+            q["x_scale"] = max(float(jnp.max(jnp.abs(h))) / 127.0, 1e-8)
+            h = h @ p["w"] + p["b"]
+            if i != last and act == "relu":
+                h = jnp.maximum(h, 0.0)
+        qparams.append(q)
     return qparams
 
 
@@ -114,29 +131,70 @@ def fleet_deployment(names, *, target: str = "tpu", **kw):
 def edge_forward_q8(qparams: list[dict], cfg: EdgeConfig, x: jax.Array, *,
                     x_scale: float = 0.05, plan=None,
                     block_m: int | None = None, block_k: int | None = None,
-                    block_n: int | None = None) -> jax.Array:
+                    block_n: int | None = None,
+                    fused: bool | None = None) -> jax.Array:
     """int8 deployment path, compiled from a :class:`DeploymentPlan`.
 
-    Per layer: quantize activations per-tensor and run the fused int8 GEMM
-    kernel with the *plan's* Pallas block shapes (one launch per layer — the
-    DR7'-minimal pipeline).  Explicit ``block_*`` arguments override the plan
-    (the micro-benchmarks sweep them); by default the plan is looked up in
-    the cache, so repeated calls pay the planner search once.
+    The plan's DR7' fusion decision is EXECUTED, not just priced: each
+    multi-layer fusion group runs as one ``fused_mlp_q8`` megakernel launch
+    (requantize + bias + activation in the epilogue, activations in VMEM
+    scratch); singleton groups run the per-layer ``gemm_int8`` kernel with
+    the plan's Pallas block shapes.  Per-layer activation scales come from
+    the calibrated ``x_scale`` stored on each quantized layer (``x_scale``
+    argument = fallback for uncalibrated params).
+
+    Explicit ``block_*`` arguments are a per-layer-kernel knob (the
+    micro-benchmarks sweep them) and force the per-layer path, as does
+    ``fused=False``; by default the plan is looked up in the cache, so
+    repeated calls pay the planner search once.
     """
-    if plan is None and None in (block_m, block_k, block_n):
+    n = len(qparams)
+    last = n - 1
+    explicit_blocks = not (block_m is None and block_k is None
+                           and block_n is None)
+    if plan is None and (block_m is None or block_k is None or block_n is None):
         plan = deployment_plan(cfg)
+    scales = [p.get("x_scale", x_scale) for p in qparams]
+    act = cfg.act if cfg.act in ("relu",) else "none"
+
+    # Launch groups: the plan's fusion decision, unless the caller forces
+    # the per-layer kernel (fused=False or explicit Pallas blocks).
+    if plan is not None and fused is not False and not explicit_blocks:
+        groups = plan.groups()
+    else:
+        groups = [[i] for i in range(n)]
+    # Hoist the per-layer tile lookups out of the traced loop: one host-side
+    # pass, no plan access in the hot path.
+    if plan is not None:
+        tiles = [plan.layer(i).api_tile for i in range(n)]
+    else:
+        tiles = [(block_m, block_k, block_n)] * n
+
     h = x.astype(F32)
-    last = len(qparams) - 1
-    for i, p in enumerate(qparams):
-        if plan is not None:
-            bm, bk, bn = plan.layer(i).api_tile
-        else:
-            bm, bk, bn = block_m, block_k, block_n
-        hq = jnp.clip(jnp.round(h / x_scale), -127, 127).astype(jnp.int8)
-        y = kops.gemm_int8(hq, p["w_q"], p["w_scale"], x_scale,
-                           block_m=block_m or bm, block_k=block_k or bk,
-                           block_n=block_n or bn, out_dtype=F32)
-        h = y + p["b"][None, :]
-        if i != last and cfg.act == "relu":
-            h = jnp.maximum(h, 0.0)
+    for grp in groups:
+        if len(grp) > 1:
+            h = kops.fused_mlp_q8(
+                h,
+                [qparams[i]["w_q"] for i in grp],
+                [qparams[i]["w_scale"] for i in grp],
+                [qparams[i]["b"] for i in grp],
+                jnp.asarray([scales[i] for i in grp], jnp.float32),
+                act=act, act_last=(grp[-1] != last), out_dtype=F32)
+            continue
+        for i in grp:
+            tm, tk, tn = tiles[i]
+            # `is not None`, not truthiness: an explicit block must override
+            # the plan even in degenerate sweeps, and a plan tile must never
+            # be shadowed by a falsy 0.
+            bm = block_m if block_m is not None else tm
+            bk = block_k if block_k is not None else tk
+            bn = block_n if block_n is not None else tn
+            p = qparams[i]
+            hq = jnp.clip(jnp.round(h / scales[i]), -127, 127).astype(jnp.int8)
+            y = kops.gemm_int8(hq, p["w_q"], p["w_scale"], scales[i],
+                               block_m=bm, block_k=bk, block_n=bn,
+                               out_dtype=F32)
+            h = y + p["b"][None, :]
+            if i != last and act == "relu":
+                h = jnp.maximum(h, 0.0)
     return h

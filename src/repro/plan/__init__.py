@@ -18,8 +18,9 @@ naming several nets plans them as a fleet; ``--machine-model model.json``
 plans under a fitted characterization artifact).
 """
 
-from repro.plan.artifact import (BoundaryPlan, DeploymentPlan, LayerPlan,
-                                 PlanCache, default_cache, plan_key)
+from repro.plan.artifact import (BoundaryPlan, DeploymentPlan, FusionGroup,
+                                 LayerPlan, PlanCache, default_cache,
+                                 plan_key)
 from repro.plan.calibrate import (calibrated_cpu_model, feedback,
                                   recalibrate_fleet)
 from repro.plan.graph import DataflowGraph, LayerNode, edge_graph, model_graph
@@ -28,7 +29,8 @@ from repro.plan.planner import as_graph, get_or_plan, plan_deployment
 
 __all__ = [
     "BoundaryPlan", "DataflowGraph", "DeploymentPlan", "FleetPlan",
-    "LayerNode", "LayerPlan", "PlanCache", "TenantPlan", "as_graph",
+    "FusionGroup", "LayerNode", "LayerPlan", "PlanCache", "TenantPlan",
+    "as_graph",
     "calibrated_cpu_model", "default_cache", "edge_graph", "feedback",
     "get_or_plan", "model_graph", "plan_deployment", "plan_fleet", "plan_key",
     "recalibrate_fleet",

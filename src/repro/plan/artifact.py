@@ -43,6 +43,17 @@ Schema v2 (PR 2) additions — v1 artifacts still load unchanged:
   ``calibration`` record written back by ``plan.calibrate.feedback``;
 * the multi-network ``FleetPlan`` artifact (``repro.plan.multinet``) embeds
   per-tenant ``DeploymentPlan`` dicts in this same schema.
+
+Schema v3 (PR 4) — v1/v2 artifacts still load unchanged:
+
+* a top-level ``"fusion_groups"`` section: the DR7' fusion DP's decision as
+  an executable list of launch groups, each ``{"id", "layers",
+  "est_latency_s", "vmem_bytes"}``.  ``models/edge.py`` executes one fused
+  megakernel launch per multi-layer group (``kernels/fused_mlp``) instead of
+  one launch per layer; whole-net groups appear when the boundary costs
+  allow, per-layer groups are the fallback.  v1/v2 artifacts (which already
+  carried per-layer ``fuse_group`` ids) derive the section on load, so old
+  plans execute through the same group-driven path.
 """
 
 from __future__ import annotations
@@ -53,8 +64,8 @@ import json
 import os
 import pathlib
 
-PLAN_SCHEMA_VERSION = 2
-PLANNER_VERSION = "plan-3"      # bump on any search/cost-model change
+PLAN_SCHEMA_VERSION = 3
+PLANNER_VERSION = "plan-4"      # bump on any search/cost-model change
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +102,47 @@ class LayerPlan:
 
 
 @dataclasses.dataclass(frozen=True)
+class FusionGroup:
+    """One DR7' launch group: the layers a single fused kernel executes."""
+    id: int
+    layers: tuple[int, ...]          # member layer indices, consecutive
+    est_latency_s: float             # one dispatch + compute + fused epilogues
+    vmem_bytes: int = 0              # union working set (0 = unknown/legacy)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["layers"] = list(self.layers)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FusionGroup":
+        d = dict(d)
+        d["layers"] = tuple(d["layers"])
+        return cls(**d)
+
+
+def _derive_fusion_groups(layers) -> tuple[FusionGroup, ...]:
+    """Fusion groups from per-layer ``fuse_group`` ids (v1/v2 artifacts and
+    planners that only annotate layers): consecutive layers sharing an id
+    form one group; the group estimate is the members' summed estimate (the
+    legacy per-launch accounting — no fused-epilogue discount is invented
+    for plans whose planner never priced one)."""
+    groups: list[FusionGroup] = []
+    for l in layers:
+        if groups and l.fuse_group == groups[-1].id:
+            g = groups[-1]
+            groups[-1] = FusionGroup(
+                id=g.id, layers=g.layers + (l.index,),
+                est_latency_s=g.est_latency_s + l.est_latency_s * l.repeat,
+                vmem_bytes=g.vmem_bytes)
+        else:
+            groups.append(FusionGroup(
+                id=l.fuse_group, layers=(l.index,),
+                est_latency_s=l.est_latency_s * l.repeat))
+    return tuple(groups)
+
+
+@dataclasses.dataclass(frozen=True)
 class BoundaryPlan:
     after_layer: int
     from_regime: str
@@ -117,6 +169,7 @@ class DeploymentPlan:
     est_interval_s: float
     serve: dict = dataclasses.field(default_factory=dict)
     kind: str = "edge"           # "edge" | "lm" (graph kind; v2 addition)
+    fusion_groups: tuple[FusionGroup, ...] = ()    # v3 addition
     schema: int = PLAN_SCHEMA_VERSION
 
     @property
@@ -129,6 +182,14 @@ class DeploymentPlan:
     def regimes(self) -> list[str]:
         return [l.regime for l in self.layers]
 
+    def groups(self) -> list[list[int]]:
+        """Executable launch groups as layer-index lists — the consumers'
+        view of the DR7' decision.  Plans without an explicit section (the
+        AIE target, hand-built plans) fall back to the per-layer
+        ``fuse_group`` annotations."""
+        gs = self.fusion_groups or _derive_fusion_groups(self.layers)
+        return [list(g.layers) for g in gs]
+
     # -- serialization ----------------------------------------------------
     def to_dict(self) -> dict:
         return {
@@ -140,6 +201,7 @@ class DeploymentPlan:
             "key": self.key,
             "layers": [l.to_dict() for l in self.layers],
             "boundaries": [b.to_dict() for b in self.boundaries],
+            "fusion_groups": [g.to_dict() for g in self.fusion_groups],
             "totals": {
                 "est_latency_s": self.est_latency_s,
                 "est_interval_s": self.est_interval_s,
@@ -153,21 +215,29 @@ class DeploymentPlan:
 
     @classmethod
     def from_dict(cls, d: dict) -> "DeploymentPlan":
-        # v1 artifacts (PR 1) load unchanged; they are normalized to the
-        # current schema on the way in ("kind" defaults to "edge", the only
-        # kind v1 consumers executed).
-        if d.get("schema") not in (1, PLAN_SCHEMA_VERSION):
+        # v1/v2 artifacts (PR 1/2) load unchanged; they are normalized to
+        # the current schema on the way in ("kind" defaults to "edge",
+        # "fusion_groups" is derived from the per-layer fuse_group ids those
+        # schemas already carried).
+        if d.get("schema") not in (1, 2, PLAN_SCHEMA_VERSION):
             raise ValueError(f"unsupported plan schema: {d.get('schema')!r}")
+        layers = tuple(LayerPlan.from_dict(l) for l in d["layers"])
+        if "fusion_groups" in d:
+            fusion_groups = tuple(FusionGroup.from_dict(g)
+                                  for g in d["fusion_groups"])
+        else:
+            fusion_groups = _derive_fusion_groups(layers)
         return cls(
             network=d["network"], target=d["target"], batch=d["batch"],
             key=d["key"],
-            layers=tuple(LayerPlan.from_dict(l) for l in d["layers"]),
+            layers=layers,
             boundaries=tuple(BoundaryPlan.from_dict(b)
                              for b in d["boundaries"]),
             est_latency_s=d["totals"]["est_latency_s"],
             est_interval_s=d["totals"]["est_interval_s"],
             serve=dict(d.get("serve", {})),
             kind=d.get("kind", "edge"),
+            fusion_groups=fusion_groups,
         )
 
     @classmethod

@@ -30,8 +30,8 @@ import math
 
 from repro import hw as hwlib
 from repro.core import boundary, lare, tiling
-from repro.plan.artifact import (BoundaryPlan, DeploymentPlan, LayerPlan,
-                                 default_cache, plan_key)
+from repro.plan.artifact import (BoundaryPlan, DeploymentPlan, FusionGroup,
+                                 LayerPlan, default_cache, plan_key)
 from repro.plan.graph import DataflowGraph, edge_graph, model_graph
 
 # Per-layer spatial split candidates on the AIE array (paper Fig. 5 sweep).
@@ -294,6 +294,12 @@ def _plan_tpu(graph: DataflowGraph, *, pipeline_core_budget: int,
     layers: list[LayerPlan] = []
     stages: list[boundary.Stage] = []
     quantize = False
+    # The megakernel is not grid-blocked: it computes on ceil8(batch) live
+    # rows while the per-layer int8 kernel is pinned to its 32-row block
+    # tile.  At the paper's batch 8 that is 4x less GEMM work per fused
+    # layer — priced here so the fuse-vs-split DP sees the real trade-off.
+    row_trim = min(1.0, math.ceil(batch / 8) * 8
+                   / (math.ceil(batch / 32) * 32))
     for node in graph:
         itemsize = node.itemsize
         rt = lare.lare_tpu(node.n_in, node.n_out, batch=batch,
@@ -317,28 +323,76 @@ def _plan_tpu(graph: DataflowGraph, *, pipeline_core_budget: int,
             band=1, api_tile=api.blocks, fuse_group=0,
             est_latency_s=api.est_s, est_interval_s=api.est_s,
             act=node.act, repeat=node.repeat, rules=tuple(rules)))
+        # Fusion-DP stages carry PURE compute (each group charges its own
+        # single launch dispatch in fused_group_cost).
+        compute_s = max(api.est_s - tpu.kernel_overhead_s, 0.0)
         stages.append(boundary.Stage(
-            name=node.name, compute_s=api.est_s,
+            name=node.name, compute_s=compute_s,
+            fused_compute_s=compute_s * (row_trim if itemsize == 1 else 1.0),
             out_bytes=node.out_bytes(batch), vmem_bytes=api.vmem_bytes))
 
-    # DR7' launch fusion: group layers whose working sets co-reside in VMEM.
+    # DR7' launch fusion: group layers whose working sets co-reside in VMEM
+    # and whose fused epilogue undercuts the un-fused crossing.  The result
+    # is EXECUTABLE: each multi-layer group becomes one fused_mlp megakernel
+    # launch (kernels/fused_mlp), so the plan charges what the runtime pays.
     groups = boundary.plan_fusion(stages, tpu=tpu)
+    # A fused launch executes all members together, so a group must be
+    # repeat-uniform (LM graphs mix repeated blocks with one-shot heads) and
+    # regime-uniform (a regime transition is itself a charged boundary and
+    # must never land INSIDE a group): renumber with a forced break at every
+    # repeat or regime change, so every emitted BoundaryPlan sits between
+    # groups and no boundary is both fused and crossed.
+    renum, g = [0] if layers else [], 0
+    for i in range(1, len(layers)):
+        if groups[i] != groups[i - 1] \
+                or layers[i].repeat != layers[i - 1].repeat \
+                or layers[i].regime != layers[i - 1].regime:
+            g += 1
+        renum.append(g)
+    groups = renum
     layers = [dataclasses.replace(l, fuse_group=g,
                                   rules=l.rules + ((f"DR7'(fuse_group={g})",)))
               for l, g in zip(layers, groups)]
 
+    fusion_groups: list[FusionGroup] = []
+    for gid in dict.fromkeys(groups):            # stable unique order
+        members = [i for i, g in enumerate(groups) if g == gid]
+        rep = layers[members[0]].repeat
+        group_stages = [stages[i] for i in members]
+        group_cost = boundary.fused_group_cost(group_stages, tpu)
+        fusion_groups.append(FusionGroup(
+            id=gid, layers=tuple(layers[i].index for i in members),
+            est_latency_s=group_cost * rep,
+            vmem_bytes=sum(stages[i].vmem_bytes for i in members)))
+        # Per-layer estimates amortize the group's launch + epilogue costs
+        # over its members, so the plan decomposes EXACTLY as
+        # sum(layer ests x repeat) + sum(crossings) + entry == est_latency —
+        # the invariant calibrate.feedback rescales under.  The base is the
+        # compute the group ACTUALLY charges per member (fused compute for
+        # multi-layer groups), keeping every share non-negative.
+        base = ([s.compute_s for s in group_stages] if len(members) == 1
+                else [s.in_group_compute_s for s in group_stages])
+        share = (group_cost - sum(base)) / len(members)
+        for i, b in zip(members, base):
+            est = b + share
+            layers[i] = dataclasses.replace(layers[i], est_latency_s=est,
+                                            est_interval_s=est)
+
     boundaries: list[BoundaryPlan] = []
     for prev, nxt in zip(layers, layers[1:]):
         if prev.fuse_group != nxt.fuse_group or prev.regime != nxt.regime:
+            # The next group's dispatch is in its own group cost; the
+            # boundary itself costs the activation's HBM round trip.
             boundaries.append(BoundaryPlan(
                 after_layer=prev.index, from_regime=prev.regime,
                 to_regime=nxt.regime,
-                crossing_s=boundary.crossing_cost_tpu(
-                    graph.nodes[prev.index].out_bytes(batch), tpu)))
+                crossing_s=2.0 * graph.nodes[prev.index].out_bytes(batch)
+                / tpu.hbm_bw))
 
+    est_latency = sum(g.est_latency_s for g in fusion_groups) \
+        + sum(b.crossing_s for b in boundaries) \
+        + tpu.kernel_overhead_s        # chain-entry host dispatch
     per_layer = [l.est_latency_s * l.repeat for l in layers]
-    est_latency = sum(per_layer) + sum(b.crossing_s for b in boundaries) \
-        + tpu.kernel_overhead_s        # chain entry dispatch
     all_pipeline = all(l.regime == "pipeline" for l in layers)
     est_interval = max(per_layer) if all_pipeline else est_latency
     return DeploymentPlan(
@@ -347,7 +401,7 @@ def _plan_tpu(graph: DataflowGraph, *, pipeline_core_budget: int,
         est_latency_s=est_latency, est_interval_s=est_interval,
         serve={"quantize_weights": quantize, "prefill_chunk": None,
                "decode_regime": ("pipeline" if all_pipeline else "tiled")},
-        kind=graph.kind)
+        kind=graph.kind, fusion_groups=tuple(fusion_groups))
 
 
 # ---------------------------------------------------------------------------

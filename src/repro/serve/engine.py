@@ -366,20 +366,33 @@ class ContinuousBatcher:
 class EdgeEngine:
     """Executes a :class:`DeploymentPlan` for an extreme-edge net.
 
-    The engine owns the quantized weights and the jitted planned forward
-    (per-layer Pallas block shapes from the plan — nothing here hard-codes a
-    tile), and tracks measured wall time against the plan's estimate so
-    deployments can report planned-vs-measured drift.
+    The engine owns the quantized weights and the jitted planned forward —
+    one Pallas launch per DR7' fusion group, per-layer Pallas block shapes
+    for singleton groups, nothing here hard-codes a tile or a group — and
+    tracks measured wall time against the plan's estimate so deployments can
+    report planned-vs-measured drift.  The forward (groups, tiles, scales
+    included) is baked into ONE cached jit at construction: the hot path
+    never touches the plan.
+
+    Activation scales are calibrated at construction by running the float
+    reference on a representative batch (``calibrate=False`` restores the
+    legacy fixed ``x_scale``).
     """
 
     def __init__(self, cfg, params=None, *, plan=None, x_scale: float = 0.05,
-                 seed: int = 0):
+                 seed: int = 0, calibrate: bool = True):
         from repro.models import edge as edge_lib
         self.cfg = cfg
         self.plan = plan if plan is not None else edge_lib.deployment_plan(cfg)
         if params is None:
             params = edge_lib.init_edge(jax.random.PRNGKey(seed), cfg)
-        self.qparams = edge_lib.quantize_edge(params)
+        calib_x = None
+        if calibrate:
+            calib_x = jax.random.normal(
+                jax.random.fold_in(jax.random.PRNGKey(seed), 7),
+                (cfg.batch, cfg.dims[0]), F32)
+        self.qparams = edge_lib.quantize_edge(params, calib_x=calib_x,
+                                              act=cfg.act)
         self.x_scale = x_scale
         self._fwd = jax.jit(lambda x: edge_lib.edge_forward_q8(
             self.qparams, cfg, x, x_scale=x_scale, plan=self.plan))

@@ -25,6 +25,7 @@ _TRUE = {
     "overhead_s": 2e-3,
     "inv_peak_int8": 1e-10,
     "inv_peak_f32": 5e-11,
+    "fused_epilogue_s": 3e-4,
     "boundary_const": 1e-5,
     "boundary_dispatch": 5e-5,
     "boundary_per_byte": 1e-9,
@@ -38,6 +39,10 @@ def _synthetic_timer(term, regs):
                 + _TRUE["inv_peak_int8"] * regs["padded_ops"])
     if term == "gemm_f32":
         return 1e-4 * regs["launches"] + _TRUE["inv_peak_f32"] * regs["ops"]
+    if term == "fused_chain":
+        return (_TRUE["overhead_s"]
+                + _TRUE["inv_peak_int8"] * regs["padded_ops"]
+                + _TRUE["fused_epilogue_s"] * regs["inner_layers"])
     if term == "boundary":
         return (_TRUE["boundary_const"]
                 + _TRUE["boundary_dispatch"] * regs["launches"]
@@ -84,6 +89,10 @@ def test_fit_recovers_synthetic_constants():
         _TRUE["band2_slope"], rel=1e-6)
     assert c.source == "model"
     assert g.source == "measured"
+    fc = mm.fits["fused_chain"]
+    assert fc.constants["fused_epilogue_s"] == pytest.approx(
+        _TRUE["fused_epilogue_s"], rel=1e-6)
+    assert fc.source == "measured"
 
 
 def test_fit_requires_enough_samples():
@@ -167,6 +176,7 @@ def test_hardware_model_substitution():
     assert tpu.peak_int8_ops == pytest.approx(1.0 / _TRUE["inv_peak_int8"])
     assert tpu.peak_bf16_flops == pytest.approx(1.0 / _TRUE["inv_peak_f32"])
     assert tpu.hbm_bw == pytest.approx(2.0 / _TRUE["boundary_per_byte"])
+    assert tpu.fused_epilogue_s == pytest.approx(_TRUE["fused_epilogue_s"])
     # Un-fitted constants stay at the base model's values.
     assert tpu.vmem_bytes == hwlib.TPU_V5E.vmem_bytes
     aie = mm.aie()
@@ -229,6 +239,7 @@ def test_plan_cache_invalidation_on_any_constant_change():
     mutations = [("gemm_int8", "kernel_overhead_s", 1e-3),
                  ("gemm_int8", "peak_int8_ops", 123e9),
                  ("gemm_f32", "peak_flops", 77e9),
+                 ("fused_chain", "fused_epilogue_s", 9e-4),
                  ("boundary", "hbm_bw", 5e8)]
     for n, (term, name, value) in enumerate(mutations, start=2):
         plan_lib.get_or_plan(cfg, target="tpu", cache=cache,

@@ -1,0 +1,281 @@
+"""Fused-group execution tests: the fused_mlp megakernel vs the per-layer
+int8 path, plan schema v3 (fusion_groups), calibrated activation scales, and
+the stale-plan self-invalidation story."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import hw as hwlib
+from repro import plan as plan_lib
+from repro.kernels import ops as kops
+from repro.models import edge
+
+
+def _qparams(cfg, *, calibrated=True, seed=0):
+    params = edge.init_edge(jax.random.PRNGKey(seed), cfg)
+    calib = None
+    if calibrated:
+        calib = jax.random.normal(jax.random.PRNGKey(seed + 100),
+                                  (cfg.batch, cfg.dims[0]), jnp.float32)
+    return params, edge.quantize_edge(params, calib_x=calib, act=cfg.act)
+
+
+# ---------------------------------------------------------------------------
+# Numerical equivalence: the megakernel IS the per-layer path, fused
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(edge.EDGE_NETS))
+def test_fused_matches_per_layer_all_nets(name):
+    """CI acceptance: fused output allclose to the per-layer int8 path for
+    every edge net (same plan, same quantized params, same scales)."""
+    cfg = edge.edge_config(name)
+    _, qp = _qparams(cfg)
+    plan = plan_lib.plan_deployment(cfg, target="tpu")
+    assert any(len(g) > 1 for g in plan.groups()), "plan must fuse something"
+    x = jax.random.normal(jax.random.PRNGKey(1), (cfg.batch, cfg.dims[0]))
+    y_fused = edge.edge_forward_q8(qp, cfg, x, plan=plan)
+    y_layer = edge.edge_forward_q8(qp, cfg, x, plan=plan, fused=False)
+    np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_layer),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_mlp_kernel_vs_dequant_reference():
+    """The raw kernel against explicit dequantized-math reference, on odd
+    (non-tile-multiple) shapes so the padding paths are exercised."""
+    key = jax.random.PRNGKey(3)
+    dims = [19, 45, 7]
+    m = 5
+    ws, scs, bs = [], [], []
+    rng = np.random.default_rng(0)
+    for a, b in zip(dims[:-1], dims[1:]):
+        ws.append(jnp.asarray(rng.integers(-127, 128, (a, b)), jnp.int8))
+        scs.append(jnp.asarray(rng.uniform(0.01, 0.1, (b,)), jnp.float32))
+        bs.append(jnp.asarray(rng.normal(size=(b,)), jnp.float32))
+    xs = jnp.asarray([0.03, 0.07], jnp.float32)
+    x = jax.random.normal(key, (m, dims[0]), jnp.float32)
+
+    out = kops.fused_mlp_q8(x, ws, scs, bs, xs, act="relu")
+    assert out.shape == (m, dims[-1])
+
+    h = np.asarray(x, np.float64)
+    for i, (w, sc, b) in enumerate(zip(ws, scs, bs)):
+        hq = np.clip(np.round(h / float(xs[i])), -127, 127)
+        y = (hq @ np.asarray(w, np.float64)) * float(xs[i]) \
+            * np.asarray(sc, np.float64) + np.asarray(b, np.float64)
+        h = np.maximum(y, 0.0) if i == 0 else y
+    np.testing.assert_allclose(np.asarray(out, np.float64), h,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_act_last_for_mid_net_groups():
+    """A group that ends mid-network must apply the activation to its last
+    layer (the next group quantizes the ACTIVATED output)."""
+    cfg = edge.edge_config("vae")
+    _, qp = _qparams(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (cfg.batch, cfg.dims[0]))
+    # Split the net by hand: fused [0..2] then per-layer [3..] must equal
+    # the all-per-layer result.
+    scales = jnp.asarray([qp[i]["x_scale"] for i in range(3)], jnp.float32)
+    h = kops.fused_mlp_q8(x, [qp[i]["w_q"] for i in range(3)],
+                          [qp[i]["w_scale"] for i in range(3)],
+                          [qp[i]["b"] for i in range(3)], scales,
+                          act="relu", act_last=True, out_dtype=jnp.float32)
+    last = len(qp) - 1
+    for i in range(3, len(qp)):
+        s = qp[i]["x_scale"]
+        hq = jnp.clip(jnp.round(h / s), -127, 127).astype(jnp.int8)
+        y = kops.gemm_int8(hq, qp[i]["w_q"], qp[i]["w_scale"], s,
+                           out_dtype=jnp.float32)
+        h = y + qp[i]["b"][None, :]
+        if i != last:
+            h = jnp.maximum(h, 0.0)
+    full = edge.edge_forward_q8(qp, cfg, x, fused=False,
+                                plan=plan_lib.plan_deployment(cfg,
+                                                              target="tpu"))
+    np.testing.assert_allclose(np.asarray(h), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: explicit block overrides (the falsy-zero fix)
+# ---------------------------------------------------------------------------
+
+def test_partial_block_override_beats_plan_tiles():
+    """A PARTIAL explicit block override must apply (the old ``block_m or
+    bm`` pattern silently kept the plan tile) and force the per-layer path;
+    int32 accumulation keeps the result exact under any legal blocking."""
+    cfg = edge.edge_config("jet_tagger")
+    _, qp = _qparams(cfg)
+    plan = plan_lib.plan_deployment(cfg, target="tpu")
+    x = jax.random.normal(jax.random.PRNGKey(4), (cfg.batch, cfg.dims[0]))
+    y_plan = edge.edge_forward_q8(qp, cfg, x, plan=plan, fused=False)
+    y_part = edge.edge_forward_q8(qp, cfg, x, plan=plan, block_m=8)
+    y_full = edge.edge_forward_q8(qp, cfg, x, block_m=8, block_k=128,
+                                  block_n=128)
+    np.testing.assert_allclose(np.asarray(y_part), np.asarray(y_plan),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_plan),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: calibrated activation scales
+# ---------------------------------------------------------------------------
+
+def test_calibrated_scales_beat_fixed_guess():
+    """Inputs far outside the 0.05-scale representable range (|x| <= 6.35)
+    saturate the hard-coded guess; calibrated per-layer scales track the
+    actual activation magnitudes and stay accurate."""
+    cfg = edge.edge_config("vae")
+    params = edge.init_edge(jax.random.PRNGKey(0), cfg)
+    x = 10.0 * jax.random.normal(jax.random.PRNGKey(5),
+                                 (cfg.batch, cfg.dims[0]))
+    qp_cal = edge.quantize_edge(params, calib_x=x, act=cfg.act)
+    qp_fix = edge.quantize_edge(params)
+    assert all("x_scale" in p for p in qp_cal)
+    assert all("x_scale" not in p for p in qp_fix)
+    y_ref = np.asarray(edge.edge_forward(params, cfg, x))
+    plan = plan_lib.plan_deployment(cfg, target="tpu")
+    err_cal = np.abs(np.asarray(
+        edge.edge_forward_q8(qp_cal, cfg, x, plan=plan)) - y_ref).max()
+    err_fix = np.abs(np.asarray(
+        edge.edge_forward_q8(qp_fix, cfg, x, plan=plan)) - y_ref).max()
+    assert err_cal < err_fix
+
+
+def test_edge_engine_calibrates_and_fuses():
+    from repro.serve.engine import EdgeEngine
+    cfg = edge.edge_config("tau_select")
+    eng = EdgeEngine(cfg)
+    assert all("x_scale" in p for p in eng.qparams)
+    assert any(len(g) > 1 for g in eng.plan.groups())
+    x = jax.random.normal(jax.random.PRNGKey(6), (cfg.batch, cfg.dims[0]))
+    y = eng.infer(x)
+    assert y.shape == (cfg.batch, cfg.dims[-1])
+    legacy = EdgeEngine(cfg, calibrate=False)
+    assert all("x_scale" not in p for p in legacy.qparams)
+
+
+# ---------------------------------------------------------------------------
+# Plan schema v3: fusion_groups
+# ---------------------------------------------------------------------------
+
+def test_v3_fusion_groups_roundtrip():
+    cfg = edge.edge_config("qubit")
+    plan = plan_lib.plan_deployment(cfg, target="tpu")
+    assert plan.schema == 3 and plan.fusion_groups
+    # Groups partition the layers in order.
+    flat = [i for g in plan.groups() for i in g]
+    assert flat == list(range(len(plan.layers)))
+    for g in plan.fusion_groups:
+        assert g.est_latency_s > 0
+        assert g.vmem_bytes > 0
+    s = plan.to_json()
+    json.loads(s)                                   # strict JSON
+    again = plan_lib.DeploymentPlan.from_json(s)
+    assert again == plan
+    assert again.fusion_groups == plan.fusion_groups
+    # The plan decomposes: groups + crossings + entry dispatch == total.
+    parts = sum(g.est_latency_s for g in plan.fusion_groups) \
+        + sum(b.crossing_s for b in plan.boundaries)
+    assert plan.est_latency_s == pytest.approx(
+        parts + hwlib.TPU_V5E.kernel_overhead_s)
+
+
+def test_v1_v2_artifacts_load_unchanged(tmp_path):
+    """Downgraded v1/v2 artifacts load, normalize to v3, and derive their
+    fusion groups from the per-layer fuse_group ids they already carried."""
+    cfg = edge.edge_config("vae")
+    plan = plan_lib.plan_deployment(cfg, target="tpu")
+    d = plan.to_dict()
+
+    v2 = dict(d)
+    v2.pop("fusion_groups")
+    v2["schema"] = 2
+    (tmp_path / "v2.json").write_text(json.dumps(v2))
+    p2 = plan_lib.DeploymentPlan.load(tmp_path / "v2.json")
+    assert p2.schema == 3
+    assert p2.layers == plan.layers
+    assert p2.groups() == plan.groups()             # derived == planned
+    # Derived estimates use the legacy per-launch accounting (no invented
+    # fused-epilogue discount), so they sum the member layer estimates.
+    for g in p2.fusion_groups:
+        assert g.est_latency_s == pytest.approx(
+            sum(p2.layer(i).est_latency_s * p2.layer(i).repeat
+                for i in g.layers))
+
+    v1 = dict(v2)
+    v1["schema"] = 1
+    v1.pop("kind")
+    (tmp_path / "v1.json").write_text(json.dumps(v1))
+    p1 = plan_lib.DeploymentPlan.load(tmp_path / "v1.json")
+    assert p1.schema == 3 and p1.kind == "edge"
+    assert p1.groups() == plan.groups()
+    # A v1 artifact still executes through the group-driven path.
+    _, qp = _qparams(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(7), (cfg.batch, cfg.dims[0]))
+    np.testing.assert_allclose(
+        np.asarray(edge.edge_forward_q8(qp, cfg, x, plan=p1)),
+        np.asarray(edge.edge_forward_q8(qp, cfg, x, plan=plan)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_aie_plans_fall_back_to_per_layer_groups():
+    plan = plan_lib.plan_deployment(edge.edge_config("jet_tagger"),
+                                    target="aie", pl_budget=0.0)
+    assert plan.fusion_groups == ()                # aie target: no section
+    assert plan.groups() == [[i] for i in range(len(plan.layers))]
+
+
+def test_fusion_respects_vmem_budget():
+    """A VMEM too small for the whole net forces multiple groups, each
+    within the budget (the per-layer fallback in the limit)."""
+    cfg = edge.edge_config("autoencoder")
+    tiny = dataclasses.replace(hwlib.TPU_V5E, vmem_bytes=800_000)
+    plan = plan_lib.plan_deployment(cfg, target="tpu", tpu=tiny)
+    assert len(plan.fusion_groups) > 1
+    for g in plan.fusion_groups:
+        assert g.vmem_bytes <= int(tiny.vmem_bytes * 0.75)
+    # And an expensive fused epilogue splits everything (fuse only when the
+    # epilogue undercuts the crossing — DR7').
+    slow = dataclasses.replace(hwlib.TPU_V5E, fused_epilogue_s=1.0)
+    split = plan_lib.plan_deployment(cfg, target="tpu", tpu=slow)
+    assert split.groups() == [[i] for i in range(len(split.layers))]
+
+
+def test_fused_plan_estimates_beat_per_layer_sum():
+    """The planner must predict a win from fusing: the fused-group estimate
+    undercuts the same stages priced as per-layer launches."""
+    plan = plan_lib.plan_deployment(edge.edge_config("autoencoder"),
+                                    target="tpu")
+    split = plan_lib.plan_deployment(
+        edge.edge_config("autoencoder"), target="tpu",
+        tpu=dataclasses.replace(hwlib.TPU_V5E, fused_epilogue_s=1e-3))
+    assert len(plan.fusion_groups) < len(split.fusion_groups)
+    assert plan.est_latency_s < split.est_latency_s
+
+
+# ---------------------------------------------------------------------------
+# Stale-plan self-invalidation
+# ---------------------------------------------------------------------------
+
+def test_stale_planner_version_self_invalidates(tmp_path, monkeypatch):
+    """A cached plan keyed under an older PLANNER_VERSION must MISS when the
+    planner (search or cost model) changes: the key is derived from the
+    version, so stale artifacts self-invalidate instead of silently serving
+    pre-fusion decisions."""
+    from repro.plan import artifact
+    cfg = edge.edge_config("jet_tagger")
+    cache = plan_lib.PlanCache(tmp_path)
+    p1 = plan_lib.get_or_plan(cfg, target="tpu", cache=cache)
+    assert plan_lib.get_or_plan(cfg, target="tpu", cache=cache) is p1
+    n_before = len(list(tmp_path.glob("*.json")))
+    monkeypatch.setattr(artifact, "PLANNER_VERSION", "plan-999")
+    p2 = plan_lib.get_or_plan(cfg, target="tpu", cache=cache)
+    assert p2.key != p1.key                        # version keyed
+    assert len(list(tmp_path.glob("*.json"))) == n_before + 1
