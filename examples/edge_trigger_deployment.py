@@ -1,5 +1,5 @@
 """The paper's scenario end-to-end: deploy extreme-edge trigger networks
-THROUGH THE DEPLOYMENT PLANNER (``repro.plan``).
+through the staged facade (``repro.deploy`` over ``repro.plan``).
 
   PYTHONPATH=src python examples/edge_trigger_deployment.py
 
@@ -7,9 +7,10 @@ For each Table-I workload (VAE, qubit readout, deep autoencoder):
   1. the planner runs LARE (Alg. 1) per layer, searches spatial splits and
      API tiles (Alg. 2) under column/band constraints, and charges boundary
      crossings (DR7) — emitting a serializable DeploymentPlan;
-  2. weights are int8-quantized (the paper's datatype convention);
-  3. inference executes the TPU-path plan via the fused Pallas int8 kernels
-     (interpret mode on CPU — identical code compiles to Mosaic on TPU);
+  2-3. ``Deployment.build`` quantizes the weights to int8 (the paper's
+     datatype convention) and executes the TPU-path plan via the fused
+     Pallas int8 kernels (interpret mode on CPU — identical code compiles
+     to Mosaic on TPU);
   4. the paper-faithful AIE plan reports whether the deployment meets the
      40 MHz LHC level-1 trigger rate.
 """
@@ -17,9 +18,8 @@ For each Table-I workload (VAE, qubit readout, deep autoencoder):
 import jax
 import jax.numpy as jnp
 
+from repro.deploy import Deployment
 from repro.models import edge
-from repro.plan import plan_deployment
-from repro.serve.engine import EdgeEngine
 
 
 def main():
@@ -28,9 +28,10 @@ def main():
         cfg = edge.edge_config(name)
         print(f"\n=== {name}: dims={list(cfg.dims)}  macs={cfg.macs} ===")
 
-        # 1. Plan the deployment (paper-faithful AIE path).
-        plan = plan_deployment(cfg, target="aie",
-                               pl_budget=pl_budget_per_layer)
+        # 1. Plan the deployment (paper-faithful AIE path, plan-only).
+        plan = Deployment.build(name, target="aie", machine_model=None,
+                                stop_after="plan",
+                                pl_budget=pl_budget_per_layer).plan
         for l in plan.layers:
             print(f"  layer {l.n_in:4d}->{l.n_out:4d}: LARE={l.lare:8.1f} "
                   f"P_KxP_N={l.p_k}x{l.p_n} band={l.band}"
@@ -40,12 +41,14 @@ def main():
                   f"{b.from_regime}->{b.to_regime} "
                   f"(+{b.crossing_s * 1e6:.2f}us, DR7)")
 
-        # 2-3. int8 deployment executed through the TPU-path plan.
-        params = edge.init_edge(jax.random.PRNGKey(0), cfg)
-        eng = EdgeEngine(cfg, params, x_scale=0.02)
+        # 2-3. int8 deployment executed through the TPU-path plan: the
+        # facade builds the quantized, plan-driven engine in one call.
+        dep = Deployment.build(name, machine_model=None, x_scale=0.02)
+        eng = dep.engines[name]
         x = jax.random.normal(jax.random.PRNGKey(1),
                               (cfg.batch, cfg.dims[0])) * 0.5
-        y_f = edge.edge_forward(params, cfg, x)
+        y_f = edge.edge_forward(
+            edge.init_edge(jax.random.PRNGKey(0), cfg), cfg, x)
         y_q = eng.infer(x)
         agree = float(jnp.mean((jnp.argmax(y_f, -1) == jnp.argmax(y_q, -1))
                                .astype(jnp.float32)))
@@ -54,7 +57,8 @@ def main():
               f"(plan key {eng.plan.key[:12]}…)")
 
         # 4. All-AIE plan (pl_budget=0) vs the 40 MHz target.
-        opt = plan_deployment(cfg, target="aie", pl_budget=0.0)
+        opt = Deployment.build(name, target="aie", machine_model=None,
+                               stop_after="plan", pl_budget=0.0).plan
         mhz = opt.inferences_per_s / 1e6
         print(f"  planned AIE deployment: {mhz:5.1f} MHz  "
               f"({'MEETS' if mhz >= 40 else 'MISSES'} 40 MHz trigger)")

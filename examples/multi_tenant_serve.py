@@ -2,64 +2,52 @@
 
   PYTHONPATH=src python examples/multi_tenant_serve.py
 
-Plans two extreme-edge nets AND a small LM as one fleet (joint placement,
-per-tenant latency budgets derived from the plan), builds a router over
-them, and drives mixed traffic: synchronous edge inferences interleaved
-with continuous-batched LM requests.  Ends with the per-tenant metrics
-report and writes the measured edge latencies back into the plan cache
-(the autotune feedback loop).
+ONE facade call plans two extreme-edge nets AND a small LM as a fleet
+(joint placement, per-tenant latency budgets, host-calibrated machine
+model) and builds the engines; ``.serve()`` wires the multi-tenant router.
+The example then drives mixed traffic — synchronous edge inferences
+interleaved with continuous-batched LM requests — prints the per-tenant
+report, and closes the loop with ``.recalibrate()`` (measured latencies
+back into the plan cache, budgets re-derived).
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.models import api, edge
-from repro.plan import calibrated_cpu_model, plan_fleet
-from repro.serve import Router, engine
+from repro.deploy import Deployment
+from repro.models import api
+from repro.serve.engine import Request
 
 
 def main():
-    edge_cfgs = [edge.edge_config("jet_tagger"), edge.edge_config("tau_select")]
     lm_cfg = configs.get("qwen2_5_3b").smoke
     lm_params = api.init(lm_cfg, jax.random.PRNGKey(0))
 
-    # One fleet: two edge tenants + one LM tenant, planned with the machine
-    # model calibrated to THIS host so budgets are meaningful.
-    fleet = plan_fleet(edge_cfgs + [lm_cfg], target="tpu",
-                       tpu=calibrated_cpu_model(),
-                       serve_slots_total=3, prefill_chunk=4)
-    lm_id = fleet.net_ids[-1]
-    print(f"fleet {fleet.name}:")
-    for t in fleet.tenants:
-        print(f"  {t.net_id:<14} kind={t.plan.kind:<5} "
-              f"planned={t.plan.est_latency_s * 1e6:8.1f}us "
-              f"budget={t.latency_budget_s * 1e6:8.1f}us")
+    # One fleet: two edge tenants + one LM tenant.  machine_model="auto"
+    # (the default) calibrates the planner to THIS host so budgets are
+    # meaningful; engines are quantized + calibrated + jitted behind build.
+    dep = Deployment.build(
+        ["jet_tagger", "tau_select", lm_cfg],
+        lm_params={lm_cfg.name: (lm_cfg, lm_params)},
+        serve_slots_total=3, prefill_chunk=4)
+    print(dep.summary())
 
-    router = Router.from_fleet(fleet, lm={lm_id: (lm_cfg, lm_params)})
-
-    # Warm up the edge engines (jit compile) so the report shows
-    # steady-state latencies, then zero the counters.
-    xs = {c.name: jnp.ones((c.batch, c.dims[0]), jnp.float32)
-          for c in edge_cfgs}
-    for name, x in xs.items():
-        router.infer(name, x)
-        router.tenant(name).engine.reset_measurements()
-    router.reset_metrics()
+    router = dep.serve()
+    inputs = router.warmup()      # jit compile, then zero the counters
 
     # Mixed traffic: submit LM requests, then interleave edge inferences
     # with batcher ticks (the LM tenant decodes while edge nets serve).
     rng = np.random.default_rng(0)
-    reqs = [engine.Request(rid=i,
-                           prompt=rng.integers(1, lm_cfg.vocab_size,
-                                               3).astype(np.int32),
-                           max_new=4)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, lm_cfg.vocab_size,
+                                        3).astype(np.int32),
+                    max_new=4)
             for i in range(4)]
     for r in reqs:
-        router.submit(lm_id, r)
+        router.submit(lm_cfg.name, r)
     for tick in range(40):
-        for name, x in xs.items():
+        for name, x in inputs.items():
             router.infer(name, x)
         if router.step() == 0 and all(r.done for r in reqs):
             break
@@ -74,12 +62,14 @@ def main():
     for r in reqs:
         print(f"  lm req {r.rid}: {len(r.out)} tokens")
 
-    # Autotune feedback: measured edge latencies land in the plan cache.
-    for c in edge_cfgs:
-        cal = router.tenant(c.name).engine.record_calibration()
-        print(f"calibrated {c.name}: planned -> "
-              f"{cal.est_latency_s * 1e6:.1f}us "
-              f"(scale {cal.serve['calibration']['scale']:.2f})")
+    # Autotune feedback, one call: measured edge latencies land in the plan
+    # cache and the fleet's costs + budgets are re-derived in place.
+    fleet = dep.recalibrate()
+    for t in fleet.tenants:
+        if t.plan.kind == "edge":
+            print(f"calibrated {t.net_id}: planned -> "
+                  f"{t.plan.est_latency_s * 1e6:.1f}us "
+                  f"(scale {t.plan.serve['calibration']['scale']:.2f})")
 
 
 if __name__ == "__main__":

@@ -2,28 +2,42 @@
 
   PYTHONPATH=src python examples/quickstart.py
 
-Builds a tiny gemma2-family model, trains a few steps on synthetic data,
-then serves a short greedy decode — the same code paths the 512-chip
-dry-run compiles, at laptop scale.
+Two deployments through the ``repro.deploy`` facade:
+
+  * the paper's extreme-edge regime in THREE lines — plan + quantize +
+    calibrate + engines behind ``Deployment.build``, serving behind
+    ``.serve()``;
+  * a tiny gemma2-family LM trained for a few steps on synthetic data, then
+    served through the same facade (plan-driven continuous batching).
 """
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
 from repro.data.pipeline import synth_batch
-from repro.models import api
-from repro.serve import engine
+from repro.deploy import Deployment
+from repro.serve.engine import Request
 from repro.train import optimizer, schedule, step as step_lib
 
 
 def main():
+    # -- extreme-edge deployment (the paper's regime), in three lines --------
+    dep = Deployment.build(["jet_tagger", "tau_select"])
+    router = dep.serve()
+    router.drive(router.warmup(), iters=5)
+    print(dep.summary())
+    for row in dep.bench():
+        print(f"  {row.net_id}: planned {row.planned_s * 1e6:.0f}us, "
+              f"measured {row.measured_s * 1e6:.0f}us "
+              f"(within 2x: {row.within_2x})")
+
+    # -- train a small LM ----------------------------------------------------
     arch = configs.get("gemma2-2b")          # --arch style lookup
     cfg = arch.smoke                          # reduced same-family config
-    print(f"arch={arch.name}  family={cfg.family}  "
+    print(f"\narch={arch.name}  family={cfg.family}  "
           f"params~{cfg.param_count()/1e6:.1f}M (smoke)")
-
-    # -- train ---------------------------------------------------------------
     opt = optimizer.make("adamw", lr=schedule.warmup_cosine(
         3e-3, warmup_steps=5, total_steps=50))
     init_fn, step_fn = step_lib.build_train_step(
@@ -38,14 +52,13 @@ def main():
             print(f"step {i:3d}  loss={float(metrics['loss']):.3f}  "
                   f"gnorm={float(metrics['grad_norm']):.2f}")
 
-    # -- serve ---------------------------------------------------------------
-    params = state["params"]
-    batcher = engine.ContinuousBatcher(cfg, params, slots=2, max_len=64)
-    import numpy as np
-    req = engine.Request(rid=0, prompt=np.array([5, 17, 42], np.int32),
-                         max_new=8)
-    batcher.submit(req)
-    batcher.run_until_drained()
+    # -- serve the trained weights through the same facade -------------------
+    lm = Deployment.build([cfg], machine_model=None,
+                          lm_params={cfg.name: (cfg, state["params"])})
+    lm_router = lm.serve()
+    req = Request(rid=0, prompt=np.array([5, 17, 42], np.int32), max_new=8)
+    lm_router.submit(cfg.name, req)
+    lm_router.run_until_drained()
     print("decoded token ids:", req.out)
 
 

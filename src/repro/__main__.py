@@ -1,0 +1,18 @@
+"""``python -m repro`` — the unified CLI over the staged deployment facade.
+
+  python -m repro deploy jet_tagger tau_select       # end-to-end
+  python -m repro plan all --target both --out plans/
+  python -m repro characterize --sweep quick --out model.json
+  python -m repro serve jet_tagger --lm qwen2_5_3b
+  python -m repro bench jet_tagger tau_select
+
+See :mod:`repro.cli` for the subcommand implementations (each routes
+through :mod:`repro.deploy`'s pipeline stages).
+"""
+
+import sys
+
+from repro.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

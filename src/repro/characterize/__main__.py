@@ -1,62 +1,23 @@
-"""Characterization CLI.
+"""Characterization CLI — DEPRECATED shim over
+``python -m repro characterize``.
 
   PYTHONPATH=src python -m repro.characterize                      # quick sweep
   PYTHONPATH=src python -m repro.characterize --sweep full --out model.json
   PYTHONPATH=src python -m repro.characterize --terms gemm_int8 boundary
 
-Runs the microbenchmark sweeps on THIS host, fits every cost term, prints a
-per-term table (fitted constants + relative-RMS residual + source), and
-writes the sha256-versioned ``MachineModel`` JSON artifact.  Feed it back to
-the planner with ``python -m repro.plan <net> --machine-model model.json``.
+Same flags, same artifact — the implementation moved to the unified CLI
+(:mod:`repro.cli`), which routes through the staged deployment facade's
+characterize stage.  Prefer ``python -m repro characterize ...``.
 """
 
 from __future__ import annotations
 
-import argparse
 import sys
-
-from repro.characterize import model as modellib
-from repro.characterize import sweeps as sweeplib
-
-
-def _fmt_constant(name: str, value: float) -> str:
-    if name.endswith("_s"):
-        return f"{name}={value * 1e6:.3g}us"
-    if "penalty" in name:
-        return f"{name}={value:.4f}"
-    return f"{name}={value:.3g}"
 
 
 def main(argv: list[str] | None = None) -> int:
-    ap = argparse.ArgumentParser(prog="python -m repro.characterize",
-                                 description=__doc__)
-    ap.add_argument("--sweep", choices=sweeplib.SWEEPS, default="quick",
-                    help="grid density (quick ~10s wall, full is denser)")
-    ap.add_argument("--out", default="model.json",
-                    help="path for the MachineModel JSON artifact")
-    ap.add_argument("--terms", nargs="+", choices=sweeplib.TERMS,
-                    default=list(sweeplib.TERMS),
-                    help="cost terms to characterize (default: all)")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--iters", type=int, default=5,
-                    help="timed iterations per sweep point (median taken)")
-    args = ap.parse_args(argv)
-
-    print(f"# characterizing {len(args.terms)} cost term(s), "
-          f"sweep={args.sweep}")
-    mm = modellib.characterize(sweep=args.sweep, batch=args.batch,
-                               iters=args.iters, terms=tuple(args.terms))
-
-    print(f"\n{'term':<12}{'source':<10}{'residual':>10}  constants")
-    for term, f in mm.fits.items():
-        consts = "  ".join(_fmt_constant(k, v)
-                           for k, v in f.constants.items())
-        print(f"{term:<12}{f.source:<10}{f.residual_rel_rms:>9.1%}  {consts}")
-
-    path = mm.save(args.out)
-    print(f"\nversion {mm.version[:16]}…  wrote {path}")
-    print(f"use it:  python -m repro.plan <net> --machine-model {path}")
-    return 0
+    from repro.cli import deprecated_main
+    return deprecated_main("repro.characterize", "characterize", argv)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,386 @@
+"""The unified CLI: ``python -m repro <subcommand>``.
+
+One entry point over the staged facade (:mod:`repro.deploy`) — every
+subcommand routes through the same pipeline stages instead of re-wiring the
+subsystems by hand:
+
+  python -m repro characterize --sweep quick --out model.json
+  python -m repro plan jet_tagger tau_select --target aie
+  python -m repro deploy jet_tagger tau_select          # end-to-end
+  python -m repro deploy vae --dry-run                  # stop after planning
+  python -m repro serve jet_tagger --lm qwen2_5_3b
+  python -m repro bench jet_tagger tau_select --iters 10
+
+``python -m repro.plan`` and ``python -m repro.characterize`` remain as
+deprecation shims over the matching subcommands.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+# ---------------------------------------------------------------------------
+# plan printing (shared by `plan` and `deploy --dry-run`)
+# ---------------------------------------------------------------------------
+
+def _print_plan(plan) -> None:
+    print(f"\n# {plan.network} [{plan.target}]  batch={plan.batch}  "
+          f"key={plan.key[:12]}…")
+    hdr = (f"{'layer':<10}{'shape':>12}  {'regime':<9}{'LARE':>8}"
+           f"{'P_KxP_N':>9}{'band':>5}  {'tile':<16}{'interval':>11}")
+    print(hdr)
+    for l in plan.layers:
+        rep = f" x{l.repeat}" if l.repeat > 1 else ""
+        print(f"{l.name:<10}{f'{l.n_in}->{l.n_out}{rep}':>12}  "
+              f"{l.regime:<9}{l.lare:>8.1f}{f'{l.p_k}x{l.p_n}':>9}"
+              f"{l.band:>5}  {str(l.api_tile):<16}"
+              f"{l.est_interval_s * 1e6:>9.2f}us")
+    for b in plan.boundaries:
+        print(f"  boundary after layer {b.after_layer}: "
+              f"{b.from_regime}->{b.to_regime} "
+              f"(+{b.crossing_s * 1e6:.2f}us)")
+    print(f"totals: latency={plan.est_latency_s * 1e6:.2f}us  "
+          f"interval={plan.est_interval_s * 1e6:.2f}us  "
+          f"rate={plan.inferences_per_s / 1e6:.2f} MHz")
+
+
+def _print_fleet(fleet) -> None:
+    print(f"\n# fleet {fleet.name} [{fleet.target}]  "
+          f"key={fleet.key[:12]}…  band1_cols={fleet.band1_cols_used}")
+    print(f"{'tenant':<14}{'cols':>10}  {'planned':>11}{'+cross':>10}"
+          f"{'budget':>11}")
+    for t in fleet.tenants:
+        cols = (f"{t.col_offset}..{t.col_offset + t.cols - 1}"
+                if t.cols else "-")
+        print(f"{t.net_id:<14}{cols:>10}  "
+              f"{t.plan.est_latency_s * 1e6:>9.2f}us"
+              f"{t.crossing_s * 1e6:>8.2f}us"
+              f"{t.latency_budget_s * 1e6:>9.2f}us")
+    for t in fleet.tenants:
+        _print_plan(t.plan)
+
+
+def _machine_model_spec(flag: str | None, default=None):
+    """Map the --machine-model flag onto a CharacterizeStage spec."""
+    if flag is None:
+        return default
+    if flag in ("stock", "none"):
+        return None
+    return flag          # "auto" | "quick" | "full" | an artifact path
+
+
+# ---------------------------------------------------------------------------
+# characterize
+# ---------------------------------------------------------------------------
+
+def cmd_characterize(argv: list[str] | None = None) -> int:
+    from repro.characterize import sweeps as sweeplib
+    ap = argparse.ArgumentParser(
+        prog="python -m repro characterize",
+        description="Run the microbenchmark sweeps on THIS host, fit every "
+                    "cost term, and write the versioned MachineModel "
+                    "artifact the planner consumes.")
+    ap.add_argument("--sweep", choices=sweeplib.SWEEPS, default="quick",
+                    help="grid density (quick ~10s wall, full is denser)")
+    ap.add_argument("--out", default="model.json",
+                    help="path for the MachineModel JSON artifact")
+    ap.add_argument("--terms", nargs="+", choices=sweeplib.TERMS,
+                    default=list(sweeplib.TERMS),
+                    help="cost terms to characterize (default: all)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=5,
+                    help="timed iterations per sweep point (median taken)")
+    args = ap.parse_args(argv)
+
+    from repro.deploy import CharacterizeStage, StageContext
+    print(f"# characterizing {len(args.terms)} cost term(s), "
+          f"sweep={args.sweep}")
+    ctx = StageContext(machine_model={
+        "sweep": args.sweep, "batch": args.batch, "iters": args.iters,
+        "terms": tuple(args.terms)})
+    CharacterizeStage().run(ctx)
+    mm = ctx.model
+
+    print(f"\n{'term':<12}{'source':<10}{'residual':>10}  constants")
+    for term, f in mm.fits.items():
+        consts = "  ".join(_fmt_constant(k, v)
+                           for k, v in f.constants.items())
+        print(f"{term:<12}{f.source:<10}{f.residual_rel_rms:>9.1%}  {consts}")
+
+    path = mm.save(args.out)
+    print(f"\nversion {mm.version[:16]}…  wrote {path}")
+    print(f"use it:  python -m repro plan <net> --machine-model {path}")
+    return 0
+
+
+def _fmt_constant(name: str, value: float) -> str:
+    if name.endswith("_s"):
+        return f"{name}={value * 1e6:.3g}us"
+    if "penalty" in name:
+        return f"{name}={value:.4f}"
+    return f"{name}={value:.3g}"
+
+
+# ---------------------------------------------------------------------------
+# plan
+# ---------------------------------------------------------------------------
+
+def cmd_plan(argv: list[str] | None = None) -> int:
+    from repro.models import edge
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro plan",
+        description="Plan deployments (LARE + tiling + column/band + DR7) "
+                    "and write the DeploymentPlan/FleetPlan JSON artifacts. "
+                    "Naming several nets plans them as a co-resident fleet.")
+    ap.add_argument("net", nargs="+",
+                    help="edge net name (see EDGE_NETS), an LM arch id with "
+                         "--kind lm, or 'all'; several names plan a "
+                         "co-resident fleet")
+    ap.add_argument("--target", choices=("aie", "tpu", "both"),
+                    default="both")
+    ap.add_argument("--kind", choices=("edge", "lm"), default="edge")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--pl-budget", type=float, default=400.0,
+                    help="PL DSP-equivalents per layer for the LARE decision")
+    ap.add_argument("--machine-model", default=None, metavar="MODEL_JSON",
+                    help="fitted MachineModel artifact (python -m repro "
+                         "characterize), 'auto' for the host calibration, "
+                         "or 'quick'/'full' to characterize inline")
+    ap.add_argument("--out", default="plans",
+                    help="directory for the JSON artifacts")
+    args = ap.parse_args(argv)
+
+    from repro.deploy import Deployment
+    mm_spec = _machine_model_spec(args.machine_model)
+    if mm_spec is not None and pathlib.Path(str(mm_spec)).exists():
+        from repro.characterize import MachineModel
+        mm_spec = MachineModel.load(mm_spec)
+        print(f"# machine model {mm_spec.version[:12]}… "
+              f"(sweep={mm_spec.provenance.get('sweep')}, "
+              f"host={mm_spec.provenance.get('host')})")
+
+    if args.kind == "lm":
+        from repro import configs
+        cfgs = [configs.get(n).config for n in args.net]
+    elif args.net == ["all"]:
+        cfgs = [edge.edge_config(n) for n in edge.EDGE_NETS]
+    else:
+        for n in args.net:
+            if n not in edge.EDGE_NETS:
+                print(f"unknown net {n!r}; choose from "
+                      f"{sorted(edge.EDGE_NETS)} or 'all'", file=sys.stderr)
+                return 2
+        cfgs = [edge.edge_config(n) for n in args.net]
+
+    targets = ("aie", "tpu") if args.target == "both" else (args.target,)
+    if args.kind == "lm":
+        targets = tuple(t for t in targets if t == "tpu") or ("tpu",)
+
+    def build(cfg_or_cfgs, target):
+        return Deployment.build(
+            cfg_or_cfgs, target=target, machine_model=mm_spec,
+            artifact_dir=args.out, stop_after="plan", batch=args.batch,
+            pl_budget=args.pl_budget)
+
+    # Several nets named explicitly: plan them as one co-resident fleet.
+    if len(args.net) > 1 and args.net != ["all"]:
+        for target in targets:
+            dep = build(cfgs, target)
+            _print_fleet(dep.fleet)
+            print(f"wrote {dep.stage_results['plan'].artifact}")
+        return 0
+
+    for cfg in cfgs:
+        for target in targets:
+            dep = build(cfg, target)
+            _print_plan(dep.plan)
+            print(f"wrote {dep.stage_results['plan'].artifact}")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# deploy / serve / bench
+# ---------------------------------------------------------------------------
+
+_DEFAULT_NETS = ("jet_tagger", "tau_select")
+
+
+def _deploy_parser(prog: str, description: str) -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog=prog, description=description)
+    ap.add_argument("net", nargs="*", default=list(_DEFAULT_NETS),
+                    help="edge net names (default: jet_tagger tau_select)")
+    ap.add_argument("--lm", default=None, metavar="ARCH",
+                    help="add an LM tenant (smoke config, seed weights), "
+                         "e.g. qwen2_5_3b")
+    ap.add_argument("--machine-model", default="auto",
+                    help="'auto' (host calibration, default), 'stock', "
+                         "'quick'/'full' (characterize inline), or a "
+                         "MachineModel artifact path")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--iters", type=int, default=10,
+                    help="measured inferences per edge tenant")
+    ap.add_argument("--out", default="deployments",
+                    help="directory for plan/model artifacts")
+    return ap
+
+
+def _build_deployment(args, *, stop_after=None):
+    from repro.deploy import Deployment
+    specs = list(args.net)
+    if args.lm:
+        specs.append(f"lm:{args.lm}")
+    return Deployment.build(
+        specs, target="tpu",
+        machine_model=_machine_model_spec(args.machine_model),
+        artifact_dir=args.out, stop_after=stop_after, batch=args.batch)
+
+
+def _serve_smoke(dep, *, iters: int, requests: int = 3) -> dict:
+    """Drive the deployment end-to-end: interleaved edge traffic plus a
+    small LM request set; returns the router report."""
+    import numpy as np
+
+    from repro.serve.engine import ContinuousBatcher, Request
+    router = dep.serve()
+    inputs = router.warmup()
+    rng = np.random.default_rng(0)
+    reqs = []
+    for nid, eng in dep.engines.items():
+        if isinstance(eng, ContinuousBatcher):
+            for i in range(requests):
+                r = Request(rid=len(reqs),
+                            prompt=rng.integers(
+                                1, eng.cfg.vocab_size, 3).astype(np.int32),
+                            max_new=4)
+                router.submit(nid, r)
+                reqs.append(r)
+    router.drive(inputs, iters=iters)
+    router.run_until_drained(max_ticks=200)
+    assert all(r.done for r in reqs), "LM smoke requests did not drain"
+    return router.report()
+
+
+def _print_report(report: dict) -> None:
+    print("\nper-tenant report:")
+    for nid, m in report.items():
+        print(f"  {nid:<14} kind={m['kind']:<5} n={m['count']:<4} "
+              f"p50={m['p50_s'] * 1e6:9.1f}us p95={m['p95_s'] * 1e6:9.1f}us "
+              f"violations={m['budget_violations']} "
+              f"drift={m['drift']:.2f}")
+
+
+def cmd_deploy(argv: list[str] | None = None) -> int:
+    ap = _deploy_parser(
+        "python -m repro deploy",
+        "End-to-end: characterize -> plan -> engines -> serve -> "
+        "planned-vs-measured, through the staged facade.")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="stop after the plan stage (no jit, no serving)")
+    args = ap.parse_args(argv)
+    dep = _build_deployment(
+        args, stop_after="plan" if args.dry_run else None)
+    print(dep.summary())
+    if args.dry_run:
+        print("\n(dry run: stopped after the plan stage)")
+        return 0
+    report = _serve_smoke(dep, iters=args.iters)
+    _print_report(report)
+    print("\nplanned-vs-measured (name,us_per_call,derived):")
+    ok = True
+    for row in dep.bench():
+        rec = row.as_record()
+        print(f"{rec['name']},{rec['us_per_call']:.3f},{rec['derived']}")
+        ok &= row.within_2x
+    verdict = ("all tenants within 2x of plan" if ok else
+               "WARNING: a tenant missed the 2x planned-vs-measured band")
+    print(f"\n{verdict}")
+    return 0
+
+
+def cmd_serve(argv: list[str] | None = None) -> int:
+    ap = _deploy_parser(
+        "python -m repro serve",
+        "Plan (or reuse cached plans) and serve a fleet behind the "
+        "multi-tenant router; drives smoke traffic and prints the report.")
+    ap.add_argument("--requests", type=int, default=3,
+                    help="LM smoke requests per LM tenant")
+    args = ap.parse_args(argv)
+    dep = _build_deployment(args)
+    report = _serve_smoke(dep, iters=args.iters, requests=args.requests)
+    _print_report(report)
+    return 0
+
+
+def cmd_bench(argv: list[str] | None = None) -> int:
+    ap = _deploy_parser(
+        "python -m repro bench",
+        "Planned-vs-measured rows (trend.py's snapshot shape) for a "
+        "deployment on this host.")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as a BENCH-style snapshot")
+    args = ap.parse_args(argv)
+    dep = _build_deployment(args)
+    rows = [r.as_record() for r in dep.bench(iters=args.iters)]
+    print("name,us_per_call,derived")
+    for rec in rows:
+        print(f"{rec['name']},{rec['us_per_call']:.3f},{rec['derived']}")
+    if args.json:
+        p = pathlib.Path(args.json)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps({"meta": {"source": "python -m repro bench"},
+                                 "rows": rows}, indent=2, sort_keys=True)
+                     + "\n")
+        print(f"[wrote {p}]")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+_SUBCOMMANDS = {
+    "characterize": cmd_characterize,
+    "plan": cmd_plan,
+    "deploy": cmd_deploy,
+    "serve": cmd_serve,
+    "bench": cmd_bench,
+}
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    # Dispatch by hand (no parse_known_args): the root parser must not
+    # swallow `--help` meant for a subcommand — `python -m repro plan
+    # --help` has to reach cmd_plan's parser.
+    ap = argparse.ArgumentParser(
+        prog="python -m repro", description=__doc__, add_help=False,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("subcommand", choices=sorted(_SUBCOMMANDS),
+                    help="what to run (each routes through repro.deploy's "
+                         "pipeline stages)")
+    if not argv or argv[0] in ("-h", "--help"):
+        ap.print_help()
+        return 0 if argv else 2
+    if argv[0] not in _SUBCOMMANDS:
+        ap.print_usage(sys.stderr)
+        print(f"python -m repro: unknown subcommand {argv[0]!r} "
+              f"(choose from {', '.join(sorted(_SUBCOMMANDS))})",
+              file=sys.stderr)
+        return 2
+    return _SUBCOMMANDS[argv[0]](argv[1:])
+
+
+def deprecated_main(old: str, subcommand: str, argv=None) -> int:
+    """Shim for the legacy per-subsystem CLIs (``python -m repro.plan`` /
+    ``python -m repro.characterize``): warn, then run the unified
+    subcommand with unchanged flags."""
+    print(f"[deprecated] `python -m {old}` is now "
+          f"`python -m repro {subcommand}` (same flags); the shim will "
+          f"keep working but new options land on the unified CLI only.",
+          file=sys.stderr)
+    return _SUBCOMMANDS[subcommand](argv)

@@ -1,0 +1,29 @@
+"""``repro.deploy`` — one staged facade for the whole decision procedure:
+
+    characterize -> plan -> quantize+calibrate -> engines -> serve
+
+:class:`Deployment` is the entry point the README quickstart ships on::
+
+    from repro.deploy import Deployment
+    dep = Deployment.build(["jet_tagger", "tau_select"])
+    router = dep.serve()
+    router.drive(iters=20)
+    print(dep.summary())
+
+The stages themselves (:mod:`repro.deploy.stages`) are explicit,
+individually-invokable objects with typed inputs/outputs and artifact
+paths, so partial pipelines (plan-only, serve-from-a-committed-plan-JSON)
+are first-class.  CLI: ``python -m repro deploy <net...>`` (plus
+``characterize``/``plan``/``serve``/``bench`` subcommands that route
+through the same stages).
+"""
+
+from repro.deploy.deployment import BenchRow, Deployment
+from repro.deploy.stages import (PIPELINE, STAGES, CharacterizeStage,
+                                 EngineStage, PlanStage, StageContext,
+                                 StageResult, resolve_configs)
+
+__all__ = [
+    "BenchRow", "CharacterizeStage", "Deployment", "EngineStage", "PIPELINE",
+    "PlanStage", "STAGES", "StageContext", "StageResult", "resolve_configs",
+]

@@ -1,0 +1,263 @@
+"""``Deployment`` — the one-call facade over characterize → plan →
+calibrate → engines → serve.
+
+The paper's deliverable is a *decision procedure*: characterize the target,
+plan under the fitted model, deploy what fits, measure, recalibrate.  After
+PRs 1–4 those pieces lived in four subsystems with four entry points; this
+module is the staged pipeline that composes them:
+
+    from repro.deploy import Deployment
+    dep = Deployment.build(["jet_tagger", "tau_select"])   # chars + plans +
+    router = dep.serve()                                   #   engines, wired
+    router.drive(iters=20)                                 # measured traffic
+    rows = dep.bench()                                     # planned-vs-meas
+    dep.recalibrate()                                      # drift loop
+
+Every step is resumable and partial pipelines are first-class:
+``Deployment.build(cfgs, stop_after="plan")`` is plan-only,
+``Deployment.build(plan="fleet.json")`` serves a committed artifact, and
+the individual stages (:mod:`repro.deploy.stages`) can be invoked by hand
+against a :class:`StageContext`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.deploy.stages import (PIPELINE, StageContext, StageResult,
+                                 resolve_configs)
+from repro.plan.artifact import DeploymentPlan
+from repro.plan.multinet import FleetPlan
+
+_STAGE_ORDER = tuple(s.name for s in PIPELINE)
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchRow:
+    """One planned-vs-measured judgement, in the benchmark-row vocabulary."""
+    net_id: str
+    planned_s: float
+    measured_s: float
+    extra: str = ""                      # extra "k=v;" derived fields
+
+    @property
+    def ratio(self) -> float:
+        return (self.planned_s / self.measured_s if self.measured_s > 0
+                else float("inf"))
+
+    @property
+    def within_2x(self) -> bool:
+        return 0.5 <= self.ratio <= 2.0
+
+    @property
+    def derived(self) -> str:
+        return (f"planned_us={self.planned_s * 1e6:.1f};"
+                f"ratio={self.ratio:.2f};within_2x={self.within_2x};"
+                f"{self.extra}src=measured")
+
+    def as_record(self, name: str | None = None) -> dict:
+        """A ``benchmarks/common.emit``-shaped row for trend.py."""
+        return {"name": name or f"deploy/{self.net_id}/planned-vs-measured",
+                "us_per_call": round(self.measured_s * 1e6, 3),
+                "derived": self.derived}
+
+
+def _load_plan(plan) -> FleetPlan:
+    """Accept a FleetPlan, a DeploymentPlan, or a path to either artifact."""
+    if isinstance(plan, FleetPlan):
+        return plan
+    if isinstance(plan, DeploymentPlan):
+        return FleetPlan.from_plan(plan)
+    return FleetPlan.load(plan)          # handles v1/v2/v3 + fleet artifacts
+
+
+class Deployment:
+    """A built (or building) deployment: plans + engines + serving surface.
+
+    Construct via :meth:`build`; the staged pipeline state lives on
+    ``self.ctx`` and per-stage provenance (cache hits, wall time, artifact
+    paths) on :attr:`stage_results`.
+    """
+
+    def __init__(self, ctx: StageContext):
+        self.ctx = ctx
+        self._router = None
+        self._router_kw = None
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def build(cls, configs=None, *, target: str = "tpu",
+              machine_model: Any = "auto", cache=None, plan=None,
+              artifact_dir=None, lm_params: dict | None = None,
+              stop_after: str | None = None, batch: int | None = None,
+              x_scale: float = 0.05, seed: int = 0,
+              **plan_kw) -> "Deployment":
+        """Run the pipeline end-to-end (or up to ``stop_after``).
+
+        ``configs`` — one or many: edge net names, ``EdgeConfig``s,
+        ``ModelConfig``s (LM arch ids resolve to their smoke config).
+        ``machine_model`` — see :class:`~repro.deploy.stages.
+        CharacterizeStage`: ``"auto"`` (default) calibrates the planner to
+        this host, ``None`` keeps stock constants, ``"quick"``/``"full"``
+        run the characterization sweep, or pass a ``MachineModel``/path.
+        ``plan`` — a committed plan artifact (path, ``DeploymentPlan`` or
+        ``FleetPlan``): skips characterize+plan and serves it as-is.
+        ``stop_after`` — ``"characterize"`` or ``"plan"`` for partial
+        pipelines (``"plan"`` is the CLI's ``--dry-run``).
+        Planner knobs (``pl_budget``, ``pipeline_core_budget``, ``tpu=``,
+        fleet serve knobs…) pass through ``plan_kw``.
+        """
+        if stop_after is not None and stop_after not in _STAGE_ORDER:
+            raise ValueError(f"stop_after must be one of {_STAGE_ORDER}, "
+                             f"got {stop_after!r}")
+        ctx = StageContext(
+            configs=resolve_configs(configs), target=target,
+            machine_model=machine_model if plan is None else None,
+            cache=cache, artifact_dir=artifact_dir, plan_kw=dict(plan_kw),
+            lm_params=dict(lm_params or {}), batch=batch, x_scale=x_scale,
+            seed=seed)
+        if plan is not None:
+            ctx.fleet = _load_plan(plan)
+        dep = cls(ctx)
+        dep._run_until(stop_after or _STAGE_ORDER[-1])
+        return dep
+
+    def _run_until(self, last: str):
+        """Run pipeline stages (idempotently) through ``last``."""
+        for stage in PIPELINE:
+            if stage.name not in self.ctx.results:
+                stage.run(self.ctx)
+            if stage.name == last:
+                break
+
+    # -- typed views over the pipeline state ------------------------------
+    @property
+    def stage_results(self) -> dict[str, StageResult]:
+        return dict(self.ctx.results)
+
+    @property
+    def machine_model(self):
+        """The resolved model (``MachineModel``/``TpuV5e``) or None."""
+        return self.ctx.model
+
+    @property
+    def fleet(self) -> FleetPlan:
+        if self.ctx.fleet is None:
+            raise RuntimeError("not planned yet (run the plan stage)")
+        return self.ctx.fleet
+
+    @property
+    def plan(self):
+        """The single-net ``DeploymentPlan``, or the ``FleetPlan`` when
+        several networks were deployed together."""
+        fleet = self.fleet
+        return fleet.tenants[0].plan if len(fleet.tenants) == 1 else fleet
+
+    @property
+    def plans(self) -> dict[str, DeploymentPlan]:
+        return {t.net_id: t.plan for t in self.fleet.tenants}
+
+    @property
+    def engines(self) -> dict:
+        """net_id -> live engine (EdgeEngine | ContinuousBatcher), building
+        them on first access if the pipeline stopped before that stage."""
+        self._run_until("engines")
+        return self.ctx.engines
+
+    # -- serving ----------------------------------------------------------
+    def serve(self, *, shed_after: int | None = None,
+              drift_threshold: float | None = None,
+              drift_min_samples: int = 5, fresh: bool = False):
+        """The fleet behind a :class:`repro.serve.Router`, wired from the
+        plan's serve section and this deployment's engines.  Memoized —
+        repeated calls with the same knobs return the same live router;
+        different knobs (or ``fresh=True``) rebuild it (engines and their
+        compiled tiles are reused; router metrics start over).
+        """
+        from repro.serve import Router
+        kw = {"shed_after": shed_after, "drift_threshold": drift_threshold,
+              "drift_min_samples": drift_min_samples}
+        if self._router is None or fresh or kw != self._router_kw:
+            self._router = Router.from_fleet(
+                self.fleet, engines=self.engines, cache=self.ctx.cache, **kw)
+            self._router_kw = kw
+        return self._router
+
+    # -- measurement ------------------------------------------------------
+    def bench(self, *, iters: int = 5, warmup: int = 1) -> list[BenchRow]:
+        """Planned-vs-measured rows for every edge tenant (trend.py's row
+        shape via :meth:`BenchRow.as_record`): each engine is warmed up,
+        timed for ``iters`` calls, and judged against its plan's estimate
+        (median measured, the repo-wide robust statistic)."""
+        import jax.numpy as jnp
+
+        from repro.serve.engine import EdgeEngine
+        rows = []
+        for tp in self.fleet.tenants:
+            eng = self.engines[tp.net_id]
+            if not isinstance(eng, EdgeEngine):
+                continue                 # LM latency includes queue wait
+            x = jnp.ones((eng.cfg.batch, eng.cfg.dims[0]), jnp.float32)
+            for _ in range(warmup):
+                eng.infer(x)
+            eng.reset_measurements()
+            for _ in range(iters):
+                eng.infer(x)
+            groups = tp.plan.groups()
+            rows.append(BenchRow(
+                net_id=tp.net_id, planned_s=tp.plan.est_latency_s,
+                measured_s=eng.measured_p50_s,
+                extra=f"fuse_groups={len(groups)};"))
+        return rows
+
+    # -- the drift loop, behind one method --------------------------------
+    def recalibrate(self, *, budget_factor: float | None = None) -> FleetPlan:
+        """Feed measured latencies back and replan the fleet in place (the
+        PR-3 drift loop): router metrics when the deployment is serving,
+        engine measurements otherwise.  Costs and budgets move; tiles,
+        regimes and engines stay.  Returns (and adopts) the new fleet."""
+        from repro.plan import calibrate
+        if self._router is not None and any(
+                t.metrics.count for t in self._router._tenants.values()):
+            new_fleet = self._router.replan_fleet(
+                budget_factor=budget_factor)
+        else:
+            measurements = calibrate.measurements_from_engines(self.engines)
+            if not measurements:
+                raise RuntimeError(
+                    "nothing measured yet: serve traffic or run .bench() "
+                    "before recalibrating")
+            new_fleet = calibrate.recalibrate_fleet(
+                self.fleet, measurements, cache=self.ctx.cache,
+                budget_factor=budget_factor)
+            if self._router is not None:
+                # A live router must not keep serving the pre-recalibration
+                # plans/budgets just because its own metrics were empty.
+                self._router.adopt_fleet(new_fleet)
+            else:
+                for tp in new_fleet.tenants:
+                    eng = self.ctx.engines.get(tp.net_id)
+                    if eng is not None and hasattr(eng, "plan"):
+                        eng.plan = tp.plan
+        # No put_fleet: feedback already parked the calibrated tenant plans
+        # in the cache, and the next fleet-cache hit re-adopts them.
+        self.ctx.fleet = new_fleet
+        return new_fleet
+
+    # -- reporting --------------------------------------------------------
+    def summary(self) -> str:
+        """Human-readable stage + tenant table (the CLI's deploy report)."""
+        lines = ["stages:"]
+        for name in _STAGE_ORDER:
+            if name in self.ctx.results:
+                lines.append(f"  {self.ctx.results[name]}")
+        if self.ctx.fleet is not None:
+            lines.append("tenants:")
+            for t in self.ctx.fleet.tenants:
+                lines.append(
+                    f"  {t.net_id:<14} kind={t.plan.kind:<5} "
+                    f"planned={t.plan.est_latency_s * 1e6:9.1f}us "
+                    f"budget={t.latency_budget_s * 1e6:9.1f}us "
+                    f"groups={len(t.plan.groups())}")
+        return "\n".join(lines)

@@ -22,6 +22,7 @@ from repro.plan.artifact import (BoundaryPlan, DeploymentPlan, FusionGroup,
                                  LayerPlan, PlanCache, default_cache,
                                  plan_key)
 from repro.plan.calibrate import (calibrated_cpu_model, feedback,
+                                  measurements_from_engines,
                                   recalibrate_fleet)
 from repro.plan.graph import DataflowGraph, LayerNode, edge_graph, model_graph
 from repro.plan.multinet import FleetPlan, TenantPlan, plan_fleet
@@ -32,6 +33,6 @@ __all__ = [
     "FusionGroup", "LayerNode", "LayerPlan", "PlanCache", "TenantPlan",
     "as_graph",
     "calibrated_cpu_model", "default_cache", "edge_graph", "feedback",
-    "get_or_plan", "model_graph", "plan_deployment", "plan_fleet", "plan_key",
-    "recalibrate_fleet",
+    "get_or_plan", "measurements_from_engines", "model_graph",
+    "plan_deployment", "plan_fleet", "plan_key", "recalibrate_fleet",
 ]

@@ -1,134 +1,23 @@
-"""Planner CLI.
+"""Planner CLI — DEPRECATED shim over ``python -m repro plan``.
 
   PYTHONPATH=src python -m repro.plan jet_tagger
   PYTHONPATH=src python -m repro.plan all --target both --out plans/
   PYTHONPATH=src python -m repro.plan qwen2_5_3b --kind lm --target tpu
   PYTHONPATH=src python -m repro.plan jet_tagger tau_select --target aie
 
-Prints a per-layer plan table and writes the DeploymentPlan JSON artifact
-(``<out>/<net>_<target>.json``).  Naming MORE THAN ONE net plans them as a
-co-resident fleet (joint column packing, paper Section V-C) and writes a
-``FleetPlan`` artifact (``<out>/fleet_<n1>+<n2>_<target>.json``).
+Same flags, same artifacts, same tables — the implementation moved to the
+unified CLI (:mod:`repro.cli`), which routes through the staged deployment
+facade (:mod:`repro.deploy`).  Prefer ``python -m repro plan ...``.
 """
 
 from __future__ import annotations
 
-import argparse
-import pathlib
 import sys
-
-from repro.plan import artifact, multinet, planner
-
-
-def _print_plan(plan: artifact.DeploymentPlan) -> None:
-    print(f"\n# {plan.network} [{plan.target}]  batch={plan.batch}  "
-          f"key={plan.key[:12]}…")
-    hdr = (f"{'layer':<10}{'shape':>12}  {'regime':<9}{'LARE':>8}"
-           f"{'P_KxP_N':>9}{'band':>5}  {'tile':<16}{'interval':>11}")
-    print(hdr)
-    for l in plan.layers:
-        rep = f" x{l.repeat}" if l.repeat > 1 else ""
-        print(f"{l.name:<10}{f'{l.n_in}->{l.n_out}{rep}':>12}  "
-              f"{l.regime:<9}{l.lare:>8.1f}{f'{l.p_k}x{l.p_n}':>9}"
-              f"{l.band:>5}  {str(l.api_tile):<16}"
-              f"{l.est_interval_s * 1e6:>9.2f}us")
-    for b in plan.boundaries:
-        print(f"  boundary after layer {b.after_layer}: "
-              f"{b.from_regime}->{b.to_regime} "
-              f"(+{b.crossing_s * 1e6:.2f}us)")
-    print(f"totals: latency={plan.est_latency_s * 1e6:.2f}us  "
-          f"interval={plan.est_interval_s * 1e6:.2f}us  "
-          f"rate={plan.inferences_per_s / 1e6:.2f} MHz")
-
-
-def _print_fleet(fleet: multinet.FleetPlan) -> None:
-    print(f"\n# fleet {fleet.name} [{fleet.target}]  "
-          f"key={fleet.key[:12]}…  band1_cols={fleet.band1_cols_used}")
-    print(f"{'tenant':<14}{'cols':>10}  {'planned':>11}{'+cross':>10}"
-          f"{'budget':>11}")
-    for t in fleet.tenants:
-        cols = (f"{t.col_offset}..{t.col_offset + t.cols - 1}"
-                if t.cols else "-")
-        print(f"{t.net_id:<14}{cols:>10}  "
-              f"{t.plan.est_latency_s * 1e6:>9.2f}us"
-              f"{t.crossing_s * 1e6:>8.2f}us"
-              f"{t.latency_budget_s * 1e6:>9.2f}us")
-    for t in fleet.tenants:
-        _print_plan(t.plan)
 
 
 def main(argv: list[str] | None = None) -> int:
-    from repro.models import edge
-
-    ap = argparse.ArgumentParser(prog="python -m repro.plan",
-                                 description=__doc__)
-    ap.add_argument("net", nargs="+",
-                    help="edge net name (see EDGE_NETS), an LM arch id with "
-                         "--kind lm, or 'all'; several names plan a "
-                         "co-resident fleet")
-    ap.add_argument("--target", choices=("aie", "tpu", "both"),
-                    default="both")
-    ap.add_argument("--kind", choices=("edge", "lm"), default="edge")
-    ap.add_argument("--batch", type=int, default=None)
-    ap.add_argument("--pl-budget", type=float, default=400.0,
-                    help="PL DSP-equivalents per layer for the LARE decision")
-    ap.add_argument("--machine-model", default=None, metavar="MODEL_JSON",
-                    help="fitted MachineModel artifact (python -m "
-                         "repro.characterize) replacing the hand-tuned "
-                         "hw.py constants")
-    ap.add_argument("--out", default="plans",
-                    help="directory for the JSON artifacts")
-    args = ap.parse_args(argv)
-
-    machine_model = None
-    if args.machine_model is not None:
-        from repro.characterize import MachineModel
-        machine_model = MachineModel.load(args.machine_model)
-        print(f"# machine model {machine_model.version[:12]}… "
-              f"(sweep={machine_model.provenance.get('sweep')}, "
-              f"host={machine_model.provenance.get('host')})")
-
-    if args.kind == "lm":
-        from repro import configs
-        cfgs = [configs.get(n).config for n in args.net]
-    elif args.net == ["all"]:
-        cfgs = [edge.edge_config(n) for n in edge.EDGE_NETS]
-    else:
-        for n in args.net:
-            if n not in edge.EDGE_NETS:
-                print(f"unknown net {n!r}; choose from "
-                      f"{sorted(edge.EDGE_NETS)} or 'all'", file=sys.stderr)
-                return 2
-        cfgs = [edge.edge_config(n) for n in args.net]
-
-    targets = ("aie", "tpu") if args.target == "both" else (args.target,)
-    if args.kind == "lm":
-        targets = tuple(t for t in targets if t == "tpu") or ("tpu",)
-    out_dir = pathlib.Path(args.out)
-
-    # Several nets named explicitly: plan them as one co-resident fleet.
-    if len(args.net) > 1 and args.net != ["all"]:
-        for target in targets:
-            fleet = multinet.plan_fleet(cfgs, target=target,
-                                        batch=args.batch,
-                                        pl_budget=args.pl_budget,
-                                        machine_model=machine_model)
-            _print_fleet(fleet)
-            path = fleet.save(out_dir / f"fleet_{fleet.name}_{target}.json")
-            print(f"wrote {path}")
-        return 0
-
-    for cfg in cfgs:
-        for target in targets:
-            plan = planner.plan_deployment(cfg, target=target,
-                                           batch=args.batch,
-                                           pl_budget=args.pl_budget,
-                                           machine_model=machine_model)
-            _print_plan(plan)
-            name = getattr(cfg, "name", plan.network)
-            path = plan.save(out_dir / f"{name}_{target}.json")
-            print(f"wrote {path}")
-    return 0
+    from repro.cli import deprecated_main
+    return deprecated_main("repro.plan", "plan", argv)
 
 
 if __name__ == "__main__":

@@ -290,11 +290,15 @@ class PlanCache:
 
     Disk layout: ``<dir>/<key>.json`` — one artifact per key, content equal
     to ``DeploymentPlan.to_json()``, so cached files double as the CLI's
-    emitted artifacts.
+    emitted artifacts.  Fleet artifacts (``repro.plan.multinet.FleetPlan``)
+    live beside them as ``<dir>/<key>.fleet.json`` — same cache, second
+    namespace, so ``plan_fleet`` answers repeat questions from cache exactly
+    like ``get_or_plan`` does for single nets.
     """
 
     def __init__(self, directory: str | os.PathLike | None = None):
         self._mem: dict[str, DeploymentPlan] = {}
+        self._fleets: dict[str, object] = {}
         self.directory = pathlib.Path(directory) if directory else None
 
     def get(self, key: str) -> DeploymentPlan | None:
@@ -314,11 +318,34 @@ class PlanCache:
             plan.save(self.directory / f"{plan.key}.json")
         return plan
 
+    def get_fleet(self, key: str):
+        """Cached ``FleetPlan`` under its serve-scoped store key, or None."""
+        if key in self._fleets:
+            return self._fleets[key]
+        if self.directory is not None:
+            p = self.directory / f"{key}.fleet.json"
+            if p.exists():
+                from repro.plan.multinet import FleetPlan
+                fleet = FleetPlan.load(p)
+                self._fleets[key] = fleet
+                return fleet
+        return None
+
+    def put_fleet(self, fleet, *, key: str | None = None):
+        """Store a fleet under ``key`` (the serve-scoped store key; the
+        fleet's own planner key when omitted)."""
+        key = key if key is not None else fleet.key
+        self._fleets[key] = fleet
+        if self.directory is not None:
+            fleet.save(self.directory / f"{key}.fleet.json")
+        return fleet
+
     def clear(self):
         self._mem.clear()
+        self._fleets.clear()
 
     def __len__(self) -> int:
-        return len(self._mem)
+        return len(self._mem) + len(self._fleets)
 
 
 _DEFAULT_CACHE: PlanCache | None = None

@@ -47,6 +47,16 @@ from repro.plan.artifact import (PLAN_SCHEMA_VERSION, PLANNER_VERSION,
 # repo-wide planned-vs-measured 2x acceptance band).
 DEFAULT_BUDGET_FACTOR = 2.0
 
+# The serve-policy knobs and their defaults, in one place: plan_fleet's
+# signature AND the serve-scoped fleet-cache key derive from this dict, so
+# they cannot drift apart (repro.deploy computes store keys from it too).
+SERVE_DEFAULTS = {
+    "budget_factor": DEFAULT_BUDGET_FACTOR,
+    "serve_slots_total": 8,
+    "prefill_chunk": 8,
+    "queue_depth_factor": 4,
+}
+
 
 def _band1_cols(plan: DeploymentPlan) -> int:
     """Band-1 array columns a plan occupies (0 off the AIE target)."""
@@ -178,7 +188,10 @@ class FleetPlan:
 
 def _fleet_key(graphs, target: str, opts: dict) -> str:
     """sha256 over the ordered per-net plan keys — same nets, same order,
-    same hardware and knobs => same fleet answer."""
+    same hardware and knobs => same fleet answer.  Deliberately EXCLUDES the
+    serve-policy knobs: per-tenant plan keys derive from this key, and the
+    calibration feedback parked under them must survive a serve-policy
+    change (only the planner's question is the cache's question)."""
     payload = {
         "planner": PLANNER_VERSION,
         "fleet": [planner._key_for(g, target, opts) for g in graphs],
@@ -186,6 +199,57 @@ def _fleet_key(graphs, target: str, opts: dict) -> str:
     }
     blob = json.dumps(payload, sort_keys=True).encode()
     return hashlib.sha256(blob).hexdigest()
+
+
+def _serve_scoped_key(key: str, serve_kw: dict) -> str:
+    """The FLEET-cache store key: the planner key plus the serve knobs, so a
+    cached fleet can never override the slots/chunking/budgets a later call
+    asked for (they are not part of the planner key, by design)."""
+    blob = json.dumps({"key": key, "serve": serve_kw}, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def fleet_store_key(cfgs, *, target: str = "tpu", batch: int | None = None,
+                    **kw) -> str:
+    """The store key :func:`plan_fleet` will use for these cfgs + knobs —
+    THE way to predict a fleet-cache hit (``repro.deploy``'s plan stage
+    reports its ``cached`` flag with it).  Serve knobs default exactly as in
+    ``plan_fleet`` (both read ``SERVE_DEFAULTS``); remaining ``kw`` are
+    planner knobs."""
+    graphs = [planner.as_graph(c, batch=batch) for c in cfgs]
+    serve_kw = {k: kw.pop(k, default) for k, default in
+                SERVE_DEFAULTS.items()}
+    return _serve_scoped_key(_fleet_key(graphs, target, planner._resolve(kw)),
+                             serve_kw)
+
+
+def _refresh_fleet(fleet: "FleetPlan", cache) -> "FleetPlan":
+    """Re-adopt per-tenant calibrated costs on a fleet cache hit.
+
+    ``calibrate.feedback`` parks calibrated plans in the cache under the
+    per-tenant keys AFTER the fleet was first planned; a hit must pick those
+    up (and re-derive each budget with the tenant's original headroom
+    factor) or serving a cached fleet would silently drop the autotune loop.
+    """
+    tenants = []
+    changed = False
+    for tp in fleet.tenants:
+        plan = _cached_or(tp.plan, cache)
+        if plan == tp.plan:
+            tenants.append(tp)
+            continue
+        changed = True
+        planned = tp.plan.est_latency_s + tp.crossing_s
+        factor = tp.latency_budget_s / planned if planned > 0 \
+            else DEFAULT_BUDGET_FACTOR
+        tenants.append(dataclasses.replace(
+            tp, plan=plan,
+            latency_budget_s=factor * (plan.est_latency_s + tp.crossing_s)))
+    if not changed:
+        return fleet
+    return dataclasses.replace(
+        fleet, tenants=tuple(tenants),
+        est_latency_s=max(t.total_latency_s for t in tenants))
 
 
 def _net_ids(graphs) -> list[str]:
@@ -305,16 +369,21 @@ def _plan_fleet_tpu(graphs, ids, *, key: str, budget_factor: float,
 
 
 def plan_fleet(cfgs, *, target: str = "tpu", batch: int | None = None,
-               budget_factor: float = DEFAULT_BUDGET_FACTOR,
-               serve_slots_total: int = 8, prefill_chunk: int | None = 8,
-               queue_depth_factor: int = 4, cache=None, **kw) -> FleetPlan:
+               budget_factor: float = SERVE_DEFAULTS["budget_factor"],
+               serve_slots_total: int = SERVE_DEFAULTS["serve_slots_total"],
+               prefill_chunk: int | None = SERVE_DEFAULTS["prefill_chunk"],
+               queue_depth_factor: int = SERVE_DEFAULTS["queue_depth_factor"],
+               cache=None, **kw) -> FleetPlan:
     """Place N networks on one array/chip.  ``cfgs`` are EdgeConfigs,
     ModelConfigs or pre-built graphs; planner knobs (``pl_budget``,
     ``pipeline_core_budget``, ``pl``/``aie``/``tpu``, and ``machine_model``
     — a fitted :class:`repro.characterize.MachineModel` replacing the
     hand-tuned constants) pass through ``kw``.
 
-    Per-tenant plans are looked up in ``cache`` (the process-wide default
+    The whole fleet is cached: a repeat call with the same nets, hardware,
+    planner AND serve knobs returns the cached :class:`FleetPlan`
+    (re-adopting any per-tenant calibration written since).  Per-tenant
+    plans are additionally looked up in ``cache`` (the process-wide default
     cache unless given) under their fleet-scoped keys before the fresh plan
     is used, which closes the autotune loop: measured latencies written back
     by ``calibrate.feedback`` / ``EdgeEngine.record_calibration`` are picked
@@ -325,17 +394,27 @@ def plan_fleet(cfgs, *, target: str = "tpu", batch: int | None = None,
     graphs = [planner.as_graph(c, batch=batch) for c in cfgs]
     ids = _net_ids(graphs)
     opts = planner._resolve(kw)
+    serve_kw = {"budget_factor": budget_factor,
+                "serve_slots_total": serve_slots_total,
+                "prefill_chunk": prefill_chunk,
+                "queue_depth_factor": queue_depth_factor}
     key = _fleet_key(graphs, target, opts)
+    store_key = _serve_scoped_key(key, serve_kw)
     cache = cache if cache is not None else default_cache()
+    hit = cache.get_fleet(store_key)
+    if hit is not None:
+        return _refresh_fleet(hit, cache)
     if target == "aie":
-        return _plan_fleet_aie(graphs, ids, key=key,
-                               budget_factor=budget_factor, cache=cache,
-                               opts=opts)
-    if target == "tpu":
-        return _plan_fleet_tpu(graphs, ids, key=key,
-                               budget_factor=budget_factor,
-                               serve_slots_total=serve_slots_total,
-                               prefill_chunk=prefill_chunk,
-                               queue_depth_factor=queue_depth_factor,
-                               cache=cache, opts=opts)
-    raise ValueError(f"unknown target {target!r} (want 'aie' or 'tpu')")
+        fleet = _plan_fleet_aie(graphs, ids, key=key,
+                                budget_factor=budget_factor, cache=cache,
+                                opts=opts)
+    elif target == "tpu":
+        fleet = _plan_fleet_tpu(graphs, ids, key=key,
+                                budget_factor=budget_factor,
+                                serve_slots_total=serve_slots_total,
+                                prefill_chunk=prefill_chunk,
+                                queue_depth_factor=queue_depth_factor,
+                                cache=cache, opts=opts)
+    else:
+        raise ValueError(f"unknown target {target!r} (want 'aie' or 'tpu')")
+    return cache.put_fleet(fleet, key=store_key)

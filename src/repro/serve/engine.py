@@ -15,6 +15,7 @@ Two serving surfaces:
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 from typing import Any, Callable
@@ -167,6 +168,12 @@ class BatchPolicy:
 
     @classmethod
     def from_plan(cls, plan, **overrides) -> "BatchPolicy":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(overrides) - fields
+        if unknown:
+            raise TypeError(
+                f"unknown BatchPolicy override(s): {sorted(unknown)} "
+                f"(valid: {sorted(fields)})")
         serve = dict(getattr(plan, "serve", None) or {})
         slots = serve.get("slots")
         kw = {
@@ -380,31 +387,34 @@ class EdgeEngine:
     """
 
     def __init__(self, cfg, params=None, *, plan=None, x_scale: float = 0.05,
-                 seed: int = 0, calibrate: bool = True):
+                 seed: int = 0, calibrate: bool = True, qparams=None,
+                 calib_x=None):
         from repro.models import edge as edge_lib
         self.cfg = cfg
         self.plan = plan if plan is not None else edge_lib.deployment_plan(cfg)
-        if params is None:
-            params = edge_lib.init_edge(jax.random.PRNGKey(seed), cfg)
-        calib_x = None
-        if calibrate:
-            calib_x = jax.random.normal(
-                jax.random.fold_in(jax.random.PRNGKey(seed), 7),
-                (cfg.batch, cfg.dims[0]), F32)
-        self.qparams = edge_lib.quantize_edge(params, calib_x=calib_x,
-                                              act=cfg.act)
+        if qparams is None:
+            if params is None:
+                params = edge_lib.init_edge(jax.random.PRNGKey(seed), cfg)
+            if calibrate and calib_x is None:
+                calib_x = jax.random.normal(
+                    jax.random.fold_in(jax.random.PRNGKey(seed), 7),
+                    (cfg.batch, cfg.dims[0]), F32)
+            qparams = edge_lib.quantize_edge(
+                params, calib_x=calib_x if calibrate else None, act=cfg.act)
+        self.qparams = qparams
         self.x_scale = x_scale
         self._fwd = jax.jit(lambda x: edge_lib.edge_forward_q8(
             self.qparams, cfg, x, x_scale=x_scale, plan=self.plan))
-        self.calls = 0
-        self.total_s = 0.0
+        self.reset_measurements()
 
     def infer(self, x) -> jax.Array:
         import time
         t0 = time.perf_counter()
         y = jax.block_until_ready(self._fwd(x))
-        self.total_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.total_s += dt
         self.calls += 1
+        self._latencies.append(dt)
         return y
 
     @property
@@ -415,9 +425,20 @@ class EdgeEngine:
     def measured_mean_s(self) -> float:
         return self.total_s / self.calls if self.calls else 0.0
 
+    @property
+    def measured_p50_s(self) -> float:
+        """Median over the recent-call window — the robust statistic the
+        planned-vs-measured comparisons and the recalibration loop use (one
+        scheduler spike must not swing a calibration)."""
+        if not self._latencies:
+            return 0.0
+        xs = sorted(self._latencies)
+        return xs[len(xs) // 2]
+
     def reset_measurements(self):
         """Drop accumulated timings (e.g. after jit warmup)."""
         self.calls, self.total_s = 0, 0.0
+        self._latencies = collections.deque(maxlen=256)
 
     def record_calibration(self, cache=None):
         """Autotune hook: write the measured mean latency back into the plan

@@ -177,6 +177,45 @@ class Router:
             f"{t.metrics.consecutive_violations} consecutive requests "
             f"over the {t.metrics.latency_budget_s * 1e6:.1f}us budget")
 
+    # -- measurement loop (shared by benchmarks / facade / examples) ------
+    def default_inputs(self) -> dict:
+        """One representative input batch per edge tenant (ones at the
+        plan's batch/width) — the probe traffic ``warmup``/``drive`` use
+        when the caller has no real inputs."""
+        import jax.numpy as jnp
+        from repro.models import edge as edge_lib
+        out = {}
+        for nid, t in self._tenants.items():
+            if t.kind != "edge":
+                continue
+            cfg = getattr(t.engine, "cfg", None) or \
+                edge_lib.edge_config(t.plan.network)
+            out[nid] = jnp.ones((cfg.batch, cfg.dims[0]), jnp.float32)
+        return out
+
+    def warmup(self, inputs: dict | None = None) -> dict:
+        """One inference per edge tenant (jit compile + first dispatch),
+        then zero every metric and engine measurement, so what follows is
+        steady-state.  Returns the inputs used (handy for ``drive``)."""
+        inputs = inputs if inputs is not None else self.default_inputs()
+        for nid, x in inputs.items():
+            self.infer(nid, x)
+        self.reset_metrics()
+        for t in self._tenants.values():
+            if hasattr(t.engine, "reset_measurements"):
+                t.engine.reset_measurements()
+        return inputs
+
+    def drive(self, inputs: dict | None = None, *, iters: int = 10) -> dict:
+        """Interleaved multi-tenant traffic (not one net at a time): ``iters``
+        rounds of one inference per edge tenant, then :meth:`report`.  The
+        fig9/fig10-style measurement loop, hoisted out of the benchmarks."""
+        inputs = inputs if inputs is not None else self.default_inputs()
+        for _ in range(iters):
+            for nid, x in inputs.items():
+                self.infer(nid, x)
+        return self.report()
+
     # -- edge path (synchronous) ------------------------------------------
     def infer(self, net_id: str, x):
         """Route one edge inference; measured against the tenant's budget."""
@@ -270,20 +309,31 @@ class Router:
             return None
         return self.replan_fleet()
 
-    def replan_fleet(self):
+    def replan_fleet(self, *, budget_factor: float | None = None):
         """Fleet-wide recalibration: feed every measured edge tenant's p50
         back into the plan cache
         (:func:`repro.plan.calibrate.recalibrate_fleet`) and swap the
         replanned :class:`FleetPlan` into the live tenants — cost
         annotations and budgets move; engines keep their compiled tiles.
-        Returns the replanned fleet."""
+        ``budget_factor`` overrides each tenant's original headroom factor
+        when re-deriving budgets.  Returns the replanned fleet."""
         from repro.plan import calibrate
         measurements = {nid: t.metrics.p50_s
                         for nid, t in self._tenants.items()
                         if t.kind == "edge" and t.metrics.count
                         and t.metrics.p50_s > 0}
         new_fleet = calibrate.recalibrate_fleet(self.fleet, measurements,
-                                                cache=self._cache)
+                                                cache=self._cache,
+                                                budget_factor=budget_factor)
+        self.adopt_fleet(new_fleet)
+        self.replans += 1
+        return new_fleet
+
+    def adopt_fleet(self, new_fleet):
+        """Swap a replanned fleet into the live tenants: plans, budgets and
+        engine plan annotations move; engines keep their compiled tiles.
+        Used by :meth:`replan_fleet` and by ``Deployment.recalibrate`` when
+        the recalibration was driven from engine measurements."""
         for tp in new_fleet.tenants:
             t = self._tenants[tp.net_id]
             t.plan = tp.plan
@@ -296,8 +346,6 @@ class Router:
             if hasattr(t.engine, "plan"):
                 t.engine.plan = tp.plan
         self.fleet = new_fleet
-        self.replans += 1
-        return new_fleet
 
     # -- reporting --------------------------------------------------------
     def report(self) -> dict:

@@ -102,44 +102,8 @@ def test_fleet_json_roundtrip(tmp_path):
     assert plan_lib.FleetPlan.load(p) == fleet
 
 
-def _as_v1_dict(plan: plan_lib.DeploymentPlan) -> dict:
-    """Re-create a PR-1 v1 artifact dict (no 'kind', schema 1)."""
-    d = plan.to_dict()
-    d["schema"] = 1
-    d.pop("kind")
-    return d
-
-
-def test_v1_deployment_plan_still_loads(tmp_path):
-    plan = plan_lib.plan_deployment(edge.edge_config("jet_tagger"),
-                                    target="tpu")
-    p = tmp_path / "v1.json"
-    p.write_text(json.dumps(_as_v1_dict(plan)))
-    loaded = plan_lib.DeploymentPlan.load(p)
-    assert loaded.network == plan.network
-    assert loaded.schema == plan_lib.artifact.PLAN_SCHEMA_VERSION
-    assert loaded.kind == "edge"                   # v1 default
-    assert loaded.layers == plan.layers
-
-
-def test_fleet_load_wraps_v1_plan(tmp_path):
-    """FleetPlan.load on a PR-1 single-net artifact => one-tenant fleet."""
-    plan = plan_lib.plan_deployment(edge.edge_config("tau_select"),
-                                    target="tpu")
-    p = tmp_path / "v1.json"
-    p.write_text(json.dumps(_as_v1_dict(plan)))
-    fleet = plan_lib.FleetPlan.load(p)
-    assert fleet.net_ids == ["tau_select"]
-    t = fleet.tenants[0]
-    assert t.plan.layers == plan.layers
-    assert t.latency_budget_s == pytest.approx(2.0 * plan.est_latency_s)
-
-
-def test_unknown_schema_rejected():
-    with pytest.raises(ValueError):
-        plan_lib.DeploymentPlan.from_dict({"schema": 99})
-    with pytest.raises(ValueError):
-        plan_lib.FleetPlan.from_dict({"schema": 99, "tenants": []})
+# (v1/v2/v3 schema round-trips — including FleetPlan.load wrapping old
+# single-net artifacts — are consolidated in tests/test_plan_compat.py.)
 
 
 # ---------------------------------------------------------------------------
@@ -479,6 +443,20 @@ def test_batch_policy_rejects_stalling_values():
         serve = {"slots": 0}
     with pytest.raises(ValueError):
         engine.BatchPolicy.from_plan(_P())
+
+
+def test_batch_policy_from_plan_rejects_unknown_override():
+    """Regression: a typo'd override key must fail loudly with the valid
+    key set, not be silently mis-applied."""
+    class _P:
+        serve = {"slots": 2}
+    with pytest.raises(TypeError, match="unknown BatchPolicy override"):
+        engine.BatchPolicy.from_plan(_P(), prefill_chunks=2)   # typo'd key
+    with pytest.raises(TypeError, match="slot"):
+        engine.BatchPolicy.from_plan(_P(), slot=3)
+    # Valid overrides still outrank the plan's serve section.
+    p = engine.BatchPolicy.from_plan(_P(), slots=3)
+    assert p.slots == 3
 
 
 def test_router_idle_tenant_does_not_stall_busy_cotenant():

@@ -187,42 +187,8 @@ def test_v3_fusion_groups_roundtrip():
         parts + hwlib.TPU_V5E.kernel_overhead_s)
 
 
-def test_v1_v2_artifacts_load_unchanged(tmp_path):
-    """Downgraded v1/v2 artifacts load, normalize to v3, and derive their
-    fusion groups from the per-layer fuse_group ids they already carried."""
-    cfg = edge.edge_config("vae")
-    plan = plan_lib.plan_deployment(cfg, target="tpu")
-    d = plan.to_dict()
-
-    v2 = dict(d)
-    v2.pop("fusion_groups")
-    v2["schema"] = 2
-    (tmp_path / "v2.json").write_text(json.dumps(v2))
-    p2 = plan_lib.DeploymentPlan.load(tmp_path / "v2.json")
-    assert p2.schema == 3
-    assert p2.layers == plan.layers
-    assert p2.groups() == plan.groups()             # derived == planned
-    # Derived estimates use the legacy per-launch accounting (no invented
-    # fused-epilogue discount), so they sum the member layer estimates.
-    for g in p2.fusion_groups:
-        assert g.est_latency_s == pytest.approx(
-            sum(p2.layer(i).est_latency_s * p2.layer(i).repeat
-                for i in g.layers))
-
-    v1 = dict(v2)
-    v1["schema"] = 1
-    v1.pop("kind")
-    (tmp_path / "v1.json").write_text(json.dumps(v1))
-    p1 = plan_lib.DeploymentPlan.load(tmp_path / "v1.json")
-    assert p1.schema == 3 and p1.kind == "edge"
-    assert p1.groups() == plan.groups()
-    # A v1 artifact still executes through the group-driven path.
-    _, qp = _qparams(cfg)
-    x = jax.random.normal(jax.random.PRNGKey(7), (cfg.batch, cfg.dims[0]))
-    np.testing.assert_allclose(
-        np.asarray(edge.edge_forward_q8(qp, cfg, x, plan=p1)),
-        np.asarray(edge.edge_forward_q8(qp, cfg, x, plan=plan)),
-        rtol=1e-5, atol=1e-5)
+# (v1/v2 artifact loading/derivation/execution compat is consolidated in
+# tests/test_plan_compat.py.)
 
 
 def test_aie_plans_fall_back_to_per_layer_groups():

@@ -227,24 +227,6 @@ def test_cli_artifact_roundtrip(tmp_path):
     assert plan_lib.DeploymentPlan.from_json(plan.to_json()) == plan
 
 
-def test_cli_artifact_v1_backward_compat(tmp_path):
-    """A CLI artifact downgraded to the PR-1 v1 schema still loads under
-    schema v2 — both as a DeploymentPlan and wrapped by FleetPlan."""
-    assert plan_cli.main(["vae", "--target", "tpu",
-                          "--out", str(tmp_path)]) == 0
-    art = tmp_path / "vae_tpu.json"
-    d = json.loads(art.read_text())
-    d["schema"] = 1
-    d.pop("kind")
-    v1 = tmp_path / "vae_tpu_v1.json"
-    v1.write_text(json.dumps(d))
-    plan = plan_lib.DeploymentPlan.load(v1)
-    assert plan.schema == plan_lib.artifact.PLAN_SCHEMA_VERSION
-    assert plan == plan_lib.DeploymentPlan.load(art)
-    fleet = plan_lib.FleetPlan.load(v1)
-    assert fleet.net_ids == ["vae"]
-
-
 def test_cli_fleet_emits_artifact(tmp_path, capsys):
     rc = plan_cli.main(["jet_tagger", "tau_select", "--target", "aie",
                         "--pl-budget", "0", "--out", str(tmp_path)])

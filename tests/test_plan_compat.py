@@ -1,0 +1,126 @@
+"""Plan-artifact schema compatibility — the consolidated coverage.
+
+One parametrized round-trip replaces the per-file ad-hoc compat tests that
+used to live in test_plan.py / test_fleet.py / test_fusion.py: every
+supported schema (v1, v2, v3) must load through ``DeploymentPlan.load``,
+wrap through ``FleetPlan.load``, serve through the facade's
+``Deployment.build(plan=...)`` path, and execute through the group-driven
+int8 path unchanged.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import plan as plan_lib
+from repro.deploy import Deployment
+from repro.models import edge
+
+SCHEMAS = (1, 2, 3)
+
+
+def _downgrade(d: dict, schema: int) -> dict:
+    """Re-create an artifact as an older PR would have written it."""
+    d = dict(d)
+    if schema <= 2:
+        d.pop("fusion_groups", None)       # v3 addition
+    if schema == 1:
+        d.pop("kind", None)                # v2 addition
+    d["schema"] = schema
+    return d
+
+
+@pytest.fixture(scope="module")
+def v3_plan():
+    return plan_lib.plan_deployment(edge.edge_config("vae"), target="tpu")
+
+
+def _artifact(tmp_path, v3_plan, schema):
+    p = tmp_path / f"v{schema}.json"
+    p.write_text(json.dumps(_downgrade(v3_plan.to_dict(), schema)))
+    return p
+
+
+@pytest.mark.parametrize("schema", SCHEMAS)
+def test_schema_roundtrips_everywhere(tmp_path, v3_plan, schema):
+    art = _artifact(tmp_path, v3_plan, schema)
+
+    # DeploymentPlan.load: normalized to the current schema, nothing lost.
+    loaded = plan_lib.DeploymentPlan.load(art)
+    assert loaded.schema == plan_lib.artifact.PLAN_SCHEMA_VERSION
+    assert loaded.kind == "edge"                   # v1 default
+    assert loaded.layers == v3_plan.layers
+    assert loaded.groups() == v3_plan.groups()
+    if schema == 3:
+        assert loaded == v3_plan
+        assert loaded.fusion_groups == v3_plan.fusion_groups
+    else:
+        # Pre-v3 artifacts derive groups from their per-layer fuse_group ids
+        # with the legacy per-launch accounting (no invented fused-epilogue
+        # discount for plans whose planner never priced one).
+        for g in loaded.fusion_groups:
+            assert g.est_latency_s == pytest.approx(
+                sum(loaded.layer(i).est_latency_s * loaded.layer(i).repeat
+                    for i in g.layers))
+    # Reloaded artifacts re-serialize losslessly under the current schema.
+    assert plan_lib.DeploymentPlan.from_json(loaded.to_json()) == loaded
+
+    # FleetPlan.load: any single-net artifact wraps as a one-tenant fleet.
+    fleet = plan_lib.FleetPlan.load(art)
+    assert fleet.net_ids == ["vae"]
+    t = fleet.tenants[0]
+    assert t.plan.layers == v3_plan.layers
+    assert t.latency_budget_s == pytest.approx(2.0 * v3_plan.est_latency_s)
+
+    # The facade: serve-from-a-committed-plan is first-class for every
+    # schema — the plan stage adopts the artifact instead of re-planning.
+    dep = Deployment.build(plan=art, stop_after="plan")
+    assert dep.plan.layers == v3_plan.layers
+    assert dep.stage_results["plan"].cached
+    assert "characterize" not in dep.stage_results \
+        or dep.stage_results["characterize"].skipped
+
+
+def test_v1_artifact_executes_through_group_path(tmp_path, v3_plan):
+    """A v1 artifact drives the SAME fused execution as the v3 plan: the
+    facade builds engines from it and the outputs agree bit-for-bit."""
+    art = _artifact(tmp_path, v3_plan, 1)
+    cfg = edge.edge_config("vae")
+    dep_v1 = Deployment.build(plan=art, machine_model=None)
+    dep_v3 = Deployment.build(plan=v3_plan, machine_model=None)
+    x = jax.random.normal(jax.random.PRNGKey(7), (cfg.batch, cfg.dims[0]))
+    np.testing.assert_allclose(
+        np.asarray(dep_v1.engines["vae"].infer(x)),
+        np.asarray(dep_v3.engines["vae"].infer(x)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_fleet_artifact_roundtrips_through_facade(tmp_path):
+    """A committed FleetPlan JSON serves as-is through the facade."""
+    cfgs = [edge.edge_config(n) for n in ("jet_tagger", "tau_select")]
+    fleet = plan_lib.plan_fleet(cfgs, target="tpu",
+                                cache=plan_lib.PlanCache())
+    p = fleet.save(tmp_path / "fleet.json")
+    dep = Deployment.build(plan=p, stop_after="plan")
+    assert dep.fleet.net_ids == ["jet_tagger", "tau_select"]
+    assert dep.fleet == fleet
+
+
+def test_unknown_schema_rejected():
+    with pytest.raises(ValueError):
+        plan_lib.DeploymentPlan.from_dict({"schema": 99})
+    with pytest.raises(ValueError):
+        plan_lib.FleetPlan.from_dict({"schema": 99, "tenants": []})
+
+
+def test_stale_plan_key_mismatch_is_loadable(tmp_path, v3_plan):
+    """Loading never validates the key (plans are data); staleness is the
+    CACHE's concern — a key mixed over PLANNER_VERSION misses on change."""
+    d = v3_plan.to_dict()
+    d["key"] = "0" * 64
+    p = tmp_path / "stale.json"
+    p.write_text(json.dumps(d))
+    assert plan_lib.DeploymentPlan.load(p).key == "0" * 64
