@@ -5,6 +5,7 @@
   python -m repro characterize --sweep quick --out model.json
   python -m repro serve jet_tagger --lm qwen2_5_3b
   python -m repro bench jet_tagger tau_select
+  python -m repro trace jet_tagger --lm qwen2_5_3b   # spans + attribution
 
 See :mod:`repro.cli` for the subcommand implementations (each routes
 through :mod:`repro.deploy`'s pipeline stages).

@@ -162,15 +162,18 @@ def _provenance(sweep: str, batch: int, iters: int, terms) -> dict:
 
 
 def characterize(*, sweep: str = "quick", batch: int = 8, iters: int = 5,
-                 terms=sweeplib.TERMS, timer=None, aie=None) -> MachineModel:
+                 terms=sweeplib.TERMS, timer=None, aie=None,
+                 tracer=None) -> MachineModel:
     """Run the characterization sweeps and fit the machine model.
 
     ``timer`` replaces wall-clock measurement with a synthetic cost function
     (tests, dry runs); ``terms`` restricts the sweep (e.g. only
-    ``("gemm_int8",)`` for the legacy calibration path).
+    ``("gemm_int8",)`` for the legacy calibration path); ``tracer`` (a
+    :class:`repro.obs.Tracer`) records one span per term sweep.
     """
     samples = sweeplib.run_sweep(sweep=sweep, batch=batch, iters=iters,
-                                 terms=terms, timer=timer, aie=aie)
+                                 terms=terms, timer=timer, aie=aie,
+                                 tracer=tracer)
     fits = fitlib.fit_all(samples)
     prov = _provenance(sweep, batch, iters, terms)
     if timer is not None:

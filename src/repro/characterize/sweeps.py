@@ -83,8 +83,16 @@ def grid(term: str, sweep: str):
 
 def run_term(term: str, *, sweep: str = "quick", batch: int = 8,
              iters: int = 5, timer: Timer | None = None,
-             aie=None) -> list[Sample]:
-    """Run one cost term's sweep; returns its samples."""
+             aie=None, tracer=None) -> list[Sample]:
+    """Run one cost term's sweep; returns its samples.  With ``tracer``
+    (a :class:`repro.obs.Tracer`) the whole term sweep is timed as one
+    ``characterize/<term>`` span, so a traced build shows where the
+    characterization wall time went."""
+    if tracer is not None and tracer.enabled:
+        with tracer.span(f"characterize/{term}", tenant="characterize",
+                         sweep=sweep):
+            return run_term(term, sweep=sweep, batch=batch, iters=iters,
+                            timer=timer, aie=aie)
     g = grid(term, sweep)
     if term == "gemm_int8":
         return [harness.time_int8_pipeline(w, d, batch=batch, iters=iters,
@@ -106,10 +114,10 @@ def run_term(term: str, *, sweep: str = "quick", batch: int = 8,
 
 def run_sweep(*, sweep: str = "quick", batch: int = 8, iters: int = 5,
               terms=TERMS, timer: Timer | None = None,
-              aie=None) -> list[Sample]:
+              aie=None, tracer=None) -> list[Sample]:
     """Run every requested term's sweep (the CLI entry's workhorse)."""
     out: list[Sample] = []
     for term in terms:
         out.extend(run_term(term, sweep=sweep, batch=batch, iters=iters,
-                            timer=timer, aie=aie))
+                            timer=timer, aie=aie, tracer=tracer))
     return out

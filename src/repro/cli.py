@@ -10,6 +10,7 @@ subsystems by hand:
   python -m repro deploy vae --dry-run                  # stop after planning
   python -m repro serve jet_tagger --lm qwen2_5_3b
   python -m repro bench jet_tagger tau_select --iters 10
+  python -m repro trace jet_tagger --lm qwen2_5_3b      # spans + attribution
 
 ``python -m repro.plan`` and ``python -m repro.characterize`` remain as
 deprecation shims over the matching subcommands.
@@ -229,7 +230,7 @@ def _deploy_parser(prog: str, description: str) -> argparse.ArgumentParser:
     return ap
 
 
-def _build_deployment(args, *, stop_after=None):
+def _build_deployment(args, *, stop_after=None, trace=False):
     from repro.deploy import Deployment
     specs = list(args.net)
     if args.lm:
@@ -237,7 +238,8 @@ def _build_deployment(args, *, stop_after=None):
     return Deployment.build(
         specs, target="tpu",
         machine_model=_machine_model_spec(args.machine_model),
-        artifact_dir=args.out, stop_after=stop_after, batch=args.batch)
+        artifact_dir=args.out, stop_after=stop_after, batch=args.batch,
+        trace=trace)
 
 
 def _serve_smoke(dep, *, iters: int, requests: int = 3) -> dict:
@@ -339,6 +341,40 @@ def cmd_bench(argv: list[str] | None = None) -> int:
     return 0
 
 
+def cmd_trace(argv: list[str] | None = None) -> int:
+    ap = _deploy_parser(
+        "python -m repro trace",
+        "Traced end-to-end run: build + serve with spans on, then export "
+        "the Chrome/Perfetto trace.json, a Prometheus metrics snapshot, "
+        "per-tenant BENCH_serve_<net>.json rows (with per-span-kind "
+        "percentiles), and print the plan-vs-measured attribution table.")
+    ap.add_argument("--requests", type=int, default=3,
+                    help="LM smoke requests per LM tenant")
+    ap.add_argument("--trace-out", default=None, metavar="DIR",
+                    help="directory for trace.json / metrics.prom / "
+                         "BENCH_serve_*.json (default: <--out>/obs)")
+    args = ap.parse_args(argv)
+    dep = _build_deployment(args, trace=True)
+    print(dep.summary())
+    report = _serve_smoke(dep, iters=args.iters, requests=args.requests)
+    _print_report(report)
+
+    from repro.serve.metrics import write_serve_snapshots
+    out = pathlib.Path(args.trace_out or pathlib.Path(args.out) / "obs")
+    trace_path = dep.export_trace(out / "trace.json")
+    prom_path = dep.export_prometheus(out / "metrics.prom")
+    bench_paths = write_serve_snapshots(
+        report, out, meta={"source": "python -m repro trace"})
+
+    print("\nplan-vs-measured attribution:")
+    print(dep.format_attribution())
+    print(f"\nwrote {trace_path}   (load at https://ui.perfetto.dev)")
+    print(f"wrote {prom_path}")
+    for p in bench_paths:
+        print(f"wrote {p}")
+    return 0
+
+
 # ---------------------------------------------------------------------------
 # entry point
 # ---------------------------------------------------------------------------
@@ -349,6 +385,7 @@ _SUBCOMMANDS = {
     "deploy": cmd_deploy,
     "serve": cmd_serve,
     "bench": cmd_bench,
+    "trace": cmd_trace,
 }
 
 

@@ -23,10 +23,12 @@ against a :class:`StageContext`.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 from repro.deploy.stages import (PIPELINE, StageContext, StageResult,
                                  resolve_configs)
+from repro.obs import NULL_TRACER, Tracer
 from repro.plan.artifact import DeploymentPlan
 from repro.plan.multinet import FleetPlan
 
@@ -91,7 +93,7 @@ class Deployment:
               machine_model: Any = "auto", cache=None, plan=None,
               artifact_dir=None, lm_params: dict | None = None,
               stop_after: str | None = None, batch: int | None = None,
-              x_scale: float = 0.05, seed: int = 0,
+              x_scale: float = 0.05, seed: int = 0, trace=False,
               **plan_kw) -> "Deployment":
         """Run the pipeline end-to-end (or up to ``stop_after``).
 
@@ -105,18 +107,25 @@ class Deployment:
         ``FleetPlan``): skips characterize+plan and serves it as-is.
         ``stop_after`` — ``"characterize"`` or ``"plan"`` for partial
         pipelines (``"plan"`` is the CLI's ``--dry-run``).
+        ``trace`` — ``True`` (a fresh :class:`repro.obs.Tracer`) or a
+        caller-supplied ``Tracer``: every stage emits a ``stage/<name>``
+        span and the serving surface decomposes requests into
+        queue/prefill/decode spans; export via :meth:`export_trace` /
+        :meth:`export_prometheus`, judge via :meth:`attribution`.
         Planner knobs (``pl_budget``, ``pipeline_core_budget``, ``tpu=``,
         fleet serve knobs…) pass through ``plan_kw``.
         """
         if stop_after is not None and stop_after not in _STAGE_ORDER:
             raise ValueError(f"stop_after must be one of {_STAGE_ORDER}, "
                              f"got {stop_after!r}")
+        tracer = (trace if isinstance(trace, Tracer)
+                  else Tracer() if trace else NULL_TRACER)
         ctx = StageContext(
             configs=resolve_configs(configs), target=target,
             machine_model=machine_model if plan is None else None,
             cache=cache, artifact_dir=artifact_dir, plan_kw=dict(plan_kw),
             lm_params=dict(lm_params or {}), batch=batch, x_scale=x_scale,
-            seed=seed)
+            seed=seed, tracer=tracer)
         if plan is not None:
             ctx.fleet = _load_plan(plan)
         dep = cls(ctx)
@@ -124,10 +133,17 @@ class Deployment:
         return dep
 
     def _run_until(self, last: str):
-        """Run pipeline stages (idempotently) through ``last``."""
+        """Run pipeline stages (idempotently) through ``last``; each run
+        emits a ``stage/<name>`` span carrying the cached/skipped flags."""
         for stage in PIPELINE:
             if stage.name not in self.ctx.results:
-                stage.run(self.ctx)
+                t0 = time.perf_counter()
+                res = stage.run(self.ctx)
+                if self.ctx.tracer.enabled:
+                    self.ctx.tracer.add(
+                        f"stage/{stage.name}", t0, time.perf_counter(),
+                        tenant="deploy", cached=res.cached,
+                        skipped=res.skipped)
             if stage.name == last:
                 break
 
@@ -165,6 +181,12 @@ class Deployment:
         self._run_until("engines")
         return self.ctx.engines
 
+    @property
+    def tracer(self) -> Tracer:
+        """The deployment's span sink (:data:`repro.obs.NULL_TRACER` unless
+        built with ``trace=``)."""
+        return self.ctx.tracer
+
     # -- serving ----------------------------------------------------------
     def serve(self, *, shed_after: int | None = None,
               drift_threshold: float | None = None,
@@ -179,8 +201,11 @@ class Deployment:
         kw = {"shed_after": shed_after, "drift_threshold": drift_threshold,
               "drift_min_samples": drift_min_samples}
         if self._router is None or fresh or kw != self._router_kw:
+            tracer = (self.ctx.tracer
+                      if self.ctx.tracer is not NULL_TRACER else None)
             self._router = Router.from_fleet(
-                self.fleet, engines=self.engines, cache=self.ctx.cache, **kw)
+                self.fleet, engines=self.engines, cache=self.ctx.cache,
+                tracer=tracer, **kw)
             self._router_kw = kw
         return self._router
 
@@ -245,6 +270,30 @@ class Deployment:
         self.ctx.fleet = new_fleet
         return new_fleet
 
+    # -- observability ----------------------------------------------------
+    def export_trace(self, path="trace.json"):
+        """Write the span stream as a Chrome/Perfetto ``trace.json``
+        (load at https://ui.perfetto.dev); returns the path."""
+        from repro.obs import write_chrome
+        return write_chrome(self.tracer.spans, path,
+                            dropped=self.tracer.dropped)
+
+    def export_prometheus(self, path="metrics.prom"):
+        """Write per-(tenant, kind) span aggregates as a Prometheus
+        text-exposition snapshot; returns the path."""
+        from repro.obs import aggregate, write_prometheus
+        return write_prometheus(aggregate(self.tracer.spans), path)
+
+    def attribution(self):
+        """Plan-vs-measured rows per (tenant, span kind) — see
+        :func:`repro.obs.attribution`."""
+        from repro.obs import attribution as attr
+        return attr(self.plans, self.tracer.spans)
+
+    def format_attribution(self) -> str:
+        from repro.obs import format_attribution
+        return format_attribution(self.attribution())
+
     # -- reporting --------------------------------------------------------
     def summary(self) -> str:
         """Human-readable stage + tenant table (the CLI's deploy report)."""
@@ -260,4 +309,11 @@ class Deployment:
                     f"planned={t.plan.est_latency_s * 1e6:9.1f}us "
                     f"budget={t.latency_budget_s * 1e6:9.1f}us "
                     f"groups={len(t.plan.groups())}")
+        if self.tracer.enabled:
+            kinds: dict[str, int] = {}
+            for s in self.tracer.spans:
+                kinds[s.name] = kinds.get(s.name, 0) + 1
+            per_kind = " ".join(f"{k}={n}" for k, n in sorted(kinds.items()))
+            lines.append(f"tracing: {len(self.tracer.spans)} spans "
+                         f"({self.tracer.dropped} dropped) {per_kind}")
         return "\n".join(lines)

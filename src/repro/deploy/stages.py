@@ -26,6 +26,7 @@ import pathlib
 import time
 from typing import Any
 
+from repro.obs import NULL_TRACER
 from repro.plan import PlanCache, default_cache
 from repro.plan.multinet import FleetPlan, plan_fleet
 
@@ -74,6 +75,7 @@ class StageContext:
     batch: int | None = None
     x_scale: float = 0.05
     seed: int = 0
+    tracer: Any = NULL_TRACER            # repro.obs.Tracer when tracing
     # stage outputs
     model: Any = None                    # MachineModel | TpuV5e | None
     fleet: FleetPlan | None = None
@@ -194,7 +196,7 @@ class CharacterizeStage:
                 return done(_SWEEP_MEMO[spec], cached=True,
                             detail=f"{spec} sweep (memo)")
             from repro.characterize import characterize
-            model = characterize(sweep=spec)
+            model = characterize(sweep=spec, tracer=ctx.tracer)
             _SWEEP_MEMO[spec] = model
             if artifact is not None:
                 model.save(artifact)
@@ -205,7 +207,7 @@ class CharacterizeStage:
                         detail=f"loaded {pathlib.Path(spec).name}")
         if isinstance(spec, dict):           # CLI: explicit sweep options
             from repro.characterize import characterize
-            model = characterize(**spec)
+            model = characterize(tracer=ctx.tracer, **spec)
             artifact = None
             if ctx.artifact_dir is not None:
                 artifact = ctx.artifact_dir / _MODEL_ARTIFACT

@@ -1,0 +1,34 @@
+"""``repro.obs`` — end-to-end tracing, span-decomposed service time, and
+plan-vs-measured attribution.
+
+The measurement substrate under the characterize → plan → engine → serve
+pipeline: a lightweight host-side span/trace API (:mod:`repro.obs.trace`),
+Chrome/Perfetto + Prometheus exporters (:mod:`repro.obs.export`), and a
+plan-attribution layer joining measured spans against planned costs per
+span kind (:mod:`repro.obs.attribution`).
+
+Quick start::
+
+    from repro.deploy import Deployment
+    dep = Deployment.build(["jet_tagger", "lm:qwen2_5_3b"], trace=True)
+    router = dep.serve()
+    ...                                    # traffic
+    dep.export_trace("trace.json")         # load in ui.perfetto.dev
+    print(dep.format_attribution())        # planned-vs-measured per kind
+
+or ``python -m repro trace`` for the CLI equivalent.
+"""
+
+from repro.obs.attribution import (AttributionRow, aggregate, attribution,
+                                   format_attribution, reconcile)
+from repro.obs.export import (parse_prometheus, prometheus_text, to_chrome,
+                              write_chrome, write_prometheus)
+from repro.obs.trace import (NULL_TRACER, Span, Tracer, percentile,
+                             summarize)
+
+__all__ = [
+    "NULL_TRACER", "AttributionRow", "Span", "Tracer", "aggregate",
+    "attribution", "format_attribution", "parse_prometheus", "percentile",
+    "prometheus_text", "reconcile", "summarize", "to_chrome", "write_chrome",
+    "write_prometheus",
+]

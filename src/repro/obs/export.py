@@ -1,0 +1,164 @@
+"""Span exporters: Chrome/Perfetto ``trace.json`` and Prometheus text.
+
+Two inspection surfaces over one span stream:
+
+* :func:`to_chrome` / :func:`write_chrome` — the Trace Event Format that
+  ``chrome://tracing`` and https://ui.perfetto.dev load directly: one
+  complete (``"ph": "X"``) event per span, rows (``tid``) grouped by tenant
+  so a request's queue/prefill/decode decomposition reads left-to-right on
+  one timeline.
+* :func:`prometheus_text` — a Prometheus text-exposition snapshot of span
+  aggregates (summary-style quantiles + count + sum per ``{tenant, kind}``),
+  for scrape-shaped consumers and the CI smoke that validates it with
+  :func:`parse_prometheus`.
+
+Both outputs are strict: JSON is written with ``allow_nan=False`` (a NaN in
+a trace is a bug upstream, not something to smuggle into a viewer) and the
+Prometheus serializer emits only finite samples.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+import re
+from typing import Iterable
+
+from repro.obs.trace import Span
+
+_PROM_METRIC = "repro_span_seconds"
+
+
+def _chrome_tid_map(spans: Iterable[Span]) -> dict[str, int]:
+    """Stable tenant -> tid assignment (row order in the viewer)."""
+    tids: dict[str, int] = {}
+    for s in spans:
+        tenant = str(s.attrs.get("tenant", "-"))
+        if tenant not in tids:
+            tids[tenant] = len(tids) + 1
+    return tids
+
+
+def to_chrome(spans: Iterable[Span], *, dropped: int = 0) -> dict:
+    """Spans as a Trace Event Format payload (``{"traceEvents": [...]}``).
+
+    Timestamps are microseconds on the process ``perf_counter`` clock; each
+    tenant gets its own thread row, and thread-name metadata events label
+    the rows so Perfetto shows tenant ids instead of bare tids."""
+    spans = list(spans)
+    tids = _chrome_tid_map(spans)
+    events = [
+        {"name": "thread_name", "ph": "M", "pid": 1, "tid": tid,
+         "args": {"name": f"tenant:{tenant}"}}
+        for tenant, tid in tids.items()
+    ]
+    for s in spans:
+        args = {k: v for k, v in s.attrs.items() if k != "tenant"}
+        if s.trace_id is not None:
+            args["trace_id"] = s.trace_id
+        events.append({
+            "name": s.name,
+            "cat": str(s.attrs.get("tenant", "repro")),
+            "ph": "X",
+            "ts": round(s.t0_s * 1e6, 3),
+            "dur": round(s.dur_s * 1e6, 3),
+            "pid": 1,
+            "tid": tids[str(s.attrs.get("tenant", "-"))],
+            "args": args,
+        })
+    meta = {"clock": "perf_counter", "spans": len(spans), "dropped": dropped}
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": meta}
+
+
+def write_chrome(spans: Iterable[Span], path, *, dropped: int = 0):
+    """Write the Perfetto-loadable ``trace.json``; returns the path."""
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    payload = to_chrome(spans, dropped=dropped)
+    p.write_text(json.dumps(payload, indent=1, sort_keys=True,
+                            allow_nan=False) + "\n")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition
+# ---------------------------------------------------------------------------
+
+def _prom_escape(v: str) -> str:
+    return v.replace("\\", r"\\").replace('"', r'\"').replace("\n", r"\n")
+
+
+def _fmt(x: float) -> str:
+    return repr(float(x))
+
+
+def prometheus_text(stats: dict, *, metric: str = _PROM_METRIC) -> str:
+    """Render span aggregates as a Prometheus text-format snapshot.
+
+    ``stats`` maps ``(tenant, kind)`` to a :func:`repro.obs.trace.summarize`
+    dict.  Output is summary-typed: ``{quantile="0.5"|"0.95"}`` samples plus
+    ``_count``/``_sum`` series per label set.  Non-finite values are skipped
+    rather than serialized (Prometheus would accept ``NaN`` but every
+    downstream alert rule then mis-fires)."""
+    lines = [
+        f"# HELP {metric} Span-decomposed service time by tenant and kind.",
+        f"# TYPE {metric} summary",
+    ]
+    for (tenant, kind), agg in sorted(stats.items()):
+        labels = (f'tenant="{_prom_escape(str(tenant))}",'
+                  f'kind="{_prom_escape(str(kind))}"')
+        for q, key in (("0.5", "p50_s"), ("0.95", "p95_s")):
+            v = agg.get(key, 0.0)
+            if not math.isfinite(v):
+                continue
+            lines.append(f'{metric}{{{labels},quantile="{q}"}} {_fmt(v)}')
+        total = agg.get("total_s", 0.0)
+        if math.isfinite(total):
+            lines.append(f"{metric}_sum{{{labels}}} {_fmt(total)}")
+        lines.append(f"{metric}_count{{{labels}}} {int(agg.get('count', 0))}")
+    return "\n".join(lines) + "\n"
+
+
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)\s*$")
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def parse_prometheus(text: str) -> list[dict]:
+    """Parse a text-exposition snapshot back into sample dicts.
+
+    A deliberately strict reader (names, label syntax, float values) used by
+    the tests and the CI smoke to prove the exporter emits well-formed
+    output; raises ``ValueError`` on any malformed line."""
+    samples = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip() or line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if m is None:
+            raise ValueError(f"malformed Prometheus sample "
+                             f"(line {lineno}): {line!r}")
+        labels = dict(_LABEL_RE.findall(m["labels"] or ""))
+        try:
+            value = float(m["value"])
+        except ValueError:
+            raise ValueError(f"non-numeric sample value "
+                             f"(line {lineno}): {line!r}") from None
+        if not math.isfinite(value):
+            raise ValueError(f"non-finite sample value "
+                             f"(line {lineno}): {line!r}")
+        samples.append({"name": m["name"], "labels": labels, "value": value})
+    if not samples:
+        raise ValueError("no samples found in Prometheus text")
+    return samples
+
+
+def write_prometheus(stats: dict, path, *, metric: str = _PROM_METRIC):
+    """Write the Prometheus snapshot; returns the path."""
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(prometheus_text(stats, metric=metric))
+    return p

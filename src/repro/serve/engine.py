@@ -18,6 +18,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import queue
+import time
 from typing import Any, Callable
 
 import jax
@@ -27,6 +28,7 @@ import numpy as np
 from repro import partition, runtime
 from repro.models import api
 from repro.models.config import ModelConfig
+from repro.obs import NULL_TRACER, summarize
 
 F32 = jnp.float32
 
@@ -142,6 +144,14 @@ class Request:
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     filled: int = 0                  # prompt tokens prefilled so far (chunked)
+    # Trace bookkeeping (perf_counter clock).  ``rid`` doubles as the trace
+    # id: every span this request produces — queue wait, prefill chunks,
+    # decode steps — carries it, so the flat span stream decomposes back
+    # into per-request timelines.  Stamps survive shedding retries and
+    # max_new_cap eviction: the request object is the source of truth.
+    t_submit: float | None = None    # stamped by ContinuousBatcher.submit
+    t_admit: float | None = None     # stamped when a slot is assigned
+    t_done: float | None = None      # stamped when the request completes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -201,7 +211,7 @@ class ContinuousBatcher:
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int | None = None,
                  max_len: int = 256, plan=None,
-                 policy: "BatchPolicy | None" = None):
+                 policy: "BatchPolicy | None" = None, tracer=None):
         self.cfg, self.params = cfg, params
         if policy is None:
             policy = (BatchPolicy.from_plan(plan) if plan is not None
@@ -211,6 +221,15 @@ class ContinuousBatcher:
         self.policy = policy
         self.plan = plan
         self.slots, self.max_len = policy.slots, max_len
+        # Span-decomposed service time.  The per-kind windows are ALWAYS
+        # maintained (a handful of perf_counter calls per tick, invisible
+        # next to a jitted decode) so decode-step p50 exists for the drift
+        # watcher even with tracing off; the tracer additionally receives
+        # per-request spans when one is attached (router or Deployment).
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.trace_label = cfg.name
+        self._windows: dict[str, collections.deque] = {}
+        self._span_totals: dict[str, int] = {}
         self.state = api.init_decode_state(cfg, self.slots, max_len)
         self.pos = np.zeros((self.slots,), np.int32)
         self.active: list[Request | None] = [None] * self.slots
@@ -251,7 +270,48 @@ class ContinuousBatcher:
         self._steps = 0
 
     def submit(self, req: Request):
+        req.t_submit = time.perf_counter()
         self.queue.put(req)
+
+    # -- span recording ----------------------------------------------------
+    def _record(self, kind: str, t0: float, t1: float, *, trace=None,
+                emit: bool = True, **attrs):
+        """One observed interval: window (always) + tracer (when enabled).
+        ``emit=False`` keeps the window observation but skips the tracer —
+        used when the caller emits finer-grained (per-request) spans for the
+        same interval, so aggregates never double-count it."""
+        win = self._windows.get(kind)
+        if win is None:
+            win = self._windows[kind] = collections.deque(maxlen=512)
+            self._span_totals[kind] = 0
+        win.append(t1 - t0)
+        self._span_totals[kind] += 1
+        if emit and self.tracer.enabled:
+            self.tracer.add(kind, t0, t1, trace=trace,
+                            tenant=self.trace_label, **attrs)
+
+    def span_stats(self) -> dict:
+        """Windowed per-kind service-time aggregates (count/mean/p50/p95
+        over the recent window, plus the lifetime observation count)."""
+        out = {}
+        for kind, win in self._windows.items():
+            agg = summarize(win)
+            agg["total_count"] = self._span_totals[kind]
+            out[kind] = agg
+        return out
+
+    @property
+    def measured_decode_p50_s(self) -> float:
+        """Median decode-step service time over the recent window — queue
+        wait and prefill excluded, so it is directly comparable to the LM
+        plan's ``est_latency_s`` (an LM plan models ONE decode step).  This
+        is the statistic that lets LM tenants join drift replanning."""
+        win = self._windows.get("decode_step")
+        return summarize(win)["p50_s"] if win else 0.0
+
+    @property
+    def decode_steps_observed(self) -> int:
+        return self._span_totals.get("decode_step", 0)
 
     def _decode_masked(self, tok: np.ndarray, live: np.ndarray):
         # Snapshot the host buffers: CPU device_put can alias numpy memory
@@ -289,6 +349,8 @@ class ContinuousBatcher:
                  else min(len(req.prompt), req.filled + chunk))
         if req.filled >= limit:
             return
+        t0 = time.perf_counter()
+        first = req.filled
         tok = np.zeros((self.slots, 1), np.int32)
         live = np.zeros((self.slots,), bool)
         live[i] = True
@@ -300,6 +362,8 @@ class ContinuousBatcher:
         req.filled = limit
         if req.filled == len(req.prompt):
             req.out.append(int(jnp.argmax(logits[i, -1])))
+        self._record("prefill_chunk", t0, time.perf_counter(), trace=req.rid,
+                     tokens=limit - first, slot=i)
 
     def _admit(self, wait_s: float = 0.0) -> int:
         """Fill free slots from the queue.  ``wait_s > 0`` blocks on the
@@ -318,14 +382,28 @@ class ContinuousBatcher:
             except queue.Empty:
                 break
             wait_s = 0.0                 # block at most once per tick
+            now = time.perf_counter()
+            req.t_admit = now
+            if req.t_submit is not None:
+                self._record("queue", req.t_submit, now, trace=req.rid)
             if len(req.prompt) == 0:     # nothing to prefill or decode
                 req.done = True
+                req.t_done = now
+                self._finish(req)
                 continue
             self._reset_slot(i)
             req.filled = 0
             self.active[i] = req
             admitted += 1
         return admitted
+
+    def _finish(self, req: Request):
+        """Close out a completed (or evicted) request's trace: the request
+        span covers submit -> done, whatever path ended it."""
+        if self.tracer.enabled and req.t_submit is not None:
+            self.tracer.add("request", req.t_submit, req.t_done,
+                            trace=req.rid, tenant=self.trace_label,
+                            tokens_out=len(req.out))
 
     def step(self, wait_s: float = 0.0) -> int:
         """One tick: admit, advance chunked prefills, decode live slots.
@@ -348,16 +426,33 @@ class ContinuousBatcher:
                 tok[i, 0] = req.out[-1]
                 live[i] = True
         if live.any():
+            t0 = time.perf_counter()
             logits = self._decode_masked(tok, live)
             self._steps += 1
+            stepped = []                 # (slot, request) pairs that decoded
+            done_reqs = []
             for i, req in enumerate(self.active):
                 if req is None or not live[i]:
                     continue
+                stepped.append((i, req))
                 self.pos[i] += 1
                 req.out.append(int(jnp.argmax(logits[i, -1])))
                 if len(req.out) >= self._max_new(req):
-                    req.done = True
+                    req.done = True      # completion OR max_new_cap eviction
+                    done_reqs.append(req)
                     self.active[i] = None
+            # The int(argmax) consumption above synchronized the async
+            # dispatch, so [t0, t1] is the honest batched service interval.
+            t1 = time.perf_counter()
+            self._record("decode_step", t0, t1, batch=len(stepped),
+                         emit=False)
+            if self.tracer.enabled:
+                for i, req in stepped:   # per-request view of the shared step
+                    self.tracer.add("decode_step", t0, t1, trace=req.rid,
+                                    tenant=self.trace_label, slot=i)
+            for req in done_reqs:
+                req.t_done = t1
+                self._finish(req)
         return self.n_active
 
     def run_until_drained(self, max_ticks: int = 10_000):
@@ -388,9 +483,11 @@ class EdgeEngine:
 
     def __init__(self, cfg, params=None, *, plan=None, x_scale: float = 0.05,
                  seed: int = 0, calibrate: bool = True, qparams=None,
-                 calib_x=None):
+                 calib_x=None, tracer=None):
         from repro.models import edge as edge_lib
         self.cfg = cfg
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.trace_label = cfg.name
         self.plan = plan if plan is not None else edge_lib.deployment_plan(cfg)
         if qparams is None:
             if params is None:
@@ -408,14 +505,26 @@ class EdgeEngine:
         self.reset_measurements()
 
     def infer(self, x) -> jax.Array:
-        import time
         t0 = time.perf_counter()
         y = jax.block_until_ready(self._fwd(x))
-        dt = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        dt = t1 - t0
         self.total_s += dt
         self.calls += 1
         self._latencies.append(dt)
+        if self.tracer.enabled:
+            self.tracer.add("infer", t0, t1, trace=self.calls,
+                            tenant=self.trace_label)
         return y
+
+    def span_stats(self) -> dict:
+        """The edge path is synchronous — one span kind, ``infer``, whose
+        service time IS the request latency (no queue decomposition)."""
+        if not self._latencies:
+            return {}
+        agg = summarize(self._latencies)
+        agg["total_count"] = self.calls
+        return {"infer": agg}
 
     @property
     def planned_latency_s(self) -> float:

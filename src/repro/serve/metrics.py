@@ -14,10 +14,22 @@ latency across runs the same way it diffs benchmark runs.
 from __future__ import annotations
 
 import collections
+import hashlib
 import json
 import math
 import pathlib
 import re
+
+from repro.obs.trace import percentile
+
+
+def _finite(x, default=None):
+    """JSON-strict value: finite floats pass through, NaN/inf become
+    ``default`` (None serializes as null — parseable everywhere, unlike the
+    bare ``Infinity``/``NaN`` tokens ``json.dumps`` emits by default)."""
+    if isinstance(x, (int, float)) and not math.isfinite(x):
+        return default
+    return x
 
 
 class TenantMetrics:
@@ -35,13 +47,20 @@ class TenantMetrics:
         self.total_s = 0.0
         self.budget_violations = 0
         self.consecutive_violations = 0
+        self.invalid_observations = 0
         self._latencies = collections.deque(maxlen=self.window)
         self._occ_sum = 0.0
         self._occ_n = 0
 
     # -- observations -----------------------------------------------------
     def observe_latency(self, dt_s: float) -> bool:
-        """Record one request's latency; returns True when within budget."""
+        """Record one request's latency; returns True when within budget.
+        Non-finite observations (a poisoned timer, a NaN from upstream) are
+        counted separately and never enter the window — one bad sample must
+        not turn every percentile into NaN."""
+        if not math.isfinite(dt_s):
+            self.invalid_observations += 1
+            return False
         self.count += 1
         self.total_s += dt_s
         self._latencies.append(dt_s)
@@ -74,10 +93,7 @@ class TenantMetrics:
 
     @property
     def p95_s(self) -> float:
-        if not self._latencies:
-            return 0.0
-        xs = sorted(self._latencies)
-        return xs[min(len(xs) - 1, int(math.ceil(0.95 * len(xs))) - 1)]
+        return percentile(self._latencies, 0.95)
 
     @property
     def occupancy(self) -> float:
@@ -85,21 +101,36 @@ class TenantMetrics:
         return self._occ_sum / self._occ_n if self._occ_n else 0.0
 
     def snapshot(self) -> dict:
+        # _finite on every float: a math.inf budget (the "no budget" default)
+        # or a poisoned aggregate must not leak Infinity/NaN tokens into a
+        # snapshot that gets json.dumps'd with allow_nan=False downstream.
         return {
             "net_id": self.net_id,
             "count": self.count,
-            "mean_s": self.mean_s,
-            "p50_s": self.p50_s,
-            "p95_s": self.p95_s,
-            "latency_budget_s": self.latency_budget_s,
+            "mean_s": _finite(self.mean_s, 0.0),
+            "p50_s": _finite(self.p50_s, 0.0),
+            "p95_s": _finite(self.p95_s, 0.0),
+            "latency_budget_s": _finite(self.latency_budget_s),
             "budget_violations": self.budget_violations,
-            "occupancy": self.occupancy,
+            "invalid_observations": self.invalid_observations,
+            "occupancy": _finite(self.occupancy, 0.0),
         }
 
 
 def _safe_net_name(net_id: str) -> str:
-    """Filesystem-safe tenant name (duplicate nets carry a '#index')."""
-    return re.sub(r"[^A-Za-z0-9._-]", "_", net_id)
+    """Filesystem-safe tenant name (duplicate nets carry a '#index').
+
+    Every character outside ``[A-Za-z0-9._-]`` maps to ``_`` (this covers
+    path separators on both platforms, so a hostile net id can never walk
+    out of ``json_dir``).  A net id that sanitizes to nothing but filler —
+    empty, all underscores, or all dots (``"."``/``".."`` would otherwise
+    yield the directory entries) — falls back to a short content hash so
+    the file still gets a unique, stable name."""
+    safe = re.sub(r"[^A-Za-z0-9._-]", "_", net_id)
+    if not safe or set(safe) <= {".", "_", "-"}:
+        digest = hashlib.sha256(net_id.encode()).hexdigest()[:8]
+        return f"net_{digest}"
+    return safe
 
 
 def write_serve_snapshots(report: dict, json_dir, *,
@@ -110,6 +141,17 @@ def write_serve_snapshots(report: dict, json_dir, *,
     shape ``benchmarks/common.emit`` records (``name``/``us_per_call``/
     ``derived``), so :mod:`benchmarks.trend` diffs serving latency across
     runs exactly like benchmark runs.  Returns the written paths.
+
+    Request-grain percentile rows are skipped for tenants with no completed
+    requests (a 0.0 "latency" row would read as a regression-to-zero in the
+    trend diff).  When the snapshot carries per-span-kind aggregates (the
+    router's ``report()`` attaches ``engine.span_stats()``), each kind gets
+    its own ``serve/<net>/<kind>/p50|p95`` rows so trend gating covers
+    decode-step service time and queue wait separately from end-to-end
+    request latency.  LM tenants additionally emit a
+    ``serve/<net>/decode_step/planned`` model row: an LM plan's graph models
+    one decode step, so ``plan.est_latency_s`` is the planned analogue of
+    the measured decode-step row, not of request latency.
     """
     out_dir = pathlib.Path(json_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -118,20 +160,40 @@ def write_serve_snapshots(report: dict, json_dir, *,
         derived = (f"src=measured;count={snap['count']};"
                    f"violations={snap['budget_violations']};"
                    f"kind={snap.get('kind', '?')}")
-        rows = [
-            {"name": f"serve/{nid}/p50", "us_per_call":
-             round(snap["p50_s"] * 1e6, 3), "derived": derived},
-            {"name": f"serve/{nid}/p95", "us_per_call":
-             round(snap["p95_s"] * 1e6, 3), "derived": derived},
-            {"name": f"serve/{nid}/mean", "us_per_call":
-             round(snap["mean_s"] * 1e6, 3), "derived": derived},
-        ]
+        rows = []
+        if snap["count"]:
+            rows += [
+                {"name": f"serve/{nid}/p50", "us_per_call":
+                 round(snap["p50_s"] * 1e6, 3), "derived": derived},
+                {"name": f"serve/{nid}/p95", "us_per_call":
+                 round(snap["p95_s"] * 1e6, 3), "derived": derived},
+                {"name": f"serve/{nid}/mean", "us_per_call":
+                 round(snap["mean_s"] * 1e6, 3), "derived": derived},
+            ]
         if snap.get("planned_latency_s"):
             rows.append({"name": f"serve/{nid}/planned", "us_per_call":
                          round(snap["planned_latency_s"] * 1e6, 3),
                          "derived": "src=model"})
+        for kind, agg in sorted((snap.get("spans") or {}).items()):
+            if not agg.get("count"):
+                continue
+            span_derived = (f"src=measured;count={agg['count']};"
+                            f"span={kind}")
+            for pct in ("p50", "p95"):
+                v = agg.get(f"{pct}_s", 0.0)
+                if not math.isfinite(v):
+                    continue
+                rows.append({"name": f"serve/{nid}/{kind}/{pct}",
+                             "us_per_call": round(v * 1e6, 3),
+                             "derived": span_derived})
+        if snap.get("kind") == "lm" and snap.get("planned_latency_s"):
+            rows.append({"name": f"serve/{nid}/decode_step/planned",
+                         "us_per_call":
+                         round(snap["planned_latency_s"] * 1e6, 3),
+                         "derived": "src=model"})
         payload = {"meta": {"net_id": nid, **(meta or {})}, "rows": rows}
         p = out_dir / f"BENCH_serve_{_safe_net_name(nid)}.json"
-        p.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+        p.write_text(json.dumps(payload, indent=2, sort_keys=True,
+                                allow_nan=False) + "\n")
         paths.append(p)
     return paths

@@ -34,19 +34,29 @@ Two further plan-driven controls:
   back-pressure at admission instead of shedding after the damage.
 
 * **Drift watcher** — with ``drift_threshold=r`` the router compares a
-  tenant's measured p50 against its planned latency after every completed
-  request; when the ratio leaves ``[1/r, r]`` (and ``drift_min_samples``
-  observations exist) it triggers a FLEET-WIDE recalibration:
-  :func:`repro.plan.calibrate.recalibrate_fleet` feeds the measured
-  latencies back into the plan cache and replans the ``FleetPlan`` in place
-  (costs + budgets move; tiles and column assignments stay), and the router
-  swaps the replanned fleet into its live tenants.  This closes the
-  characterize -> plan -> serve -> drift -> replan loop fleet-wide.  Only
-  SYNCHRONOUS (edge) tenants drive and feed the watcher: their request
-  latency is the same quantity the plan estimates, while an LM request's
-  latency includes queue wait, so recalibrating from it under a burst would
-  bake transient load into the cost model (LM drift needs a decomposed
-  service-time measurement — a ROADMAP follow-up).
+  tenant's measured service time against its planned latency after every
+  completed request; when the ratio leaves ``[1/r, r]`` (and
+  ``drift_min_samples`` observations exist) it triggers a FLEET-WIDE
+  recalibration: :func:`repro.plan.calibrate.recalibrate_fleet` feeds the
+  measured latencies back into the plan cache and replans the ``FleetPlan``
+  in place (costs + budgets move; tiles and column assignments stay), and
+  the router swaps the replanned fleet into its live tenants.  This closes
+  the characterize -> plan -> serve -> drift -> replan loop fleet-wide.
+  The measured quantity is chosen per tenant kind so it is the SAME
+  quantity the plan estimates: edge tenants feed request p50 (their request
+  IS the planned pipeline), LM tenants feed the batcher's decomposed
+  **decode-step** p50 (an LM plan's graph models one decode step; an LM
+  request's end-to-end latency includes queue wait, so recalibrating from
+  it under a burst would bake transient load into the cost model).  The
+  decode-step windows are maintained by the batcher unconditionally —
+  LM drift works with tracing disabled.
+
+Pass ``tracer=`` (a :class:`repro.obs.Tracer`) to thread request-grain
+spans through every tenant engine: edge requests emit ``infer`` +
+``request`` spans, LM requests decompose into ``queue`` / ``prefill_chunk``
+/ ``decode_step`` / ``request`` spans keyed by the request id as trace id.
+``report()`` attaches each engine's per-kind service-time aggregates under
+``"spans"`` regardless of tracing, so snapshots carry the decomposition.
 """
 
 from __future__ import annotations
@@ -54,6 +64,7 @@ from __future__ import annotations
 import time
 from typing import Iterable
 
+from repro.obs import NULL_TRACER
 from repro.serve.tenant import Tenant, edge_tenant, lm_tenant
 
 
@@ -69,12 +80,20 @@ class Router:
     def __init__(self, tenants: Iterable[Tenant], *,
                  shed_after: int | None = None, fleet=None,
                  drift_threshold: float | None = None,
-                 drift_min_samples: int = 5, cache=None):
+                 drift_min_samples: int = 5, cache=None, tracer=None):
         self._tenants: dict[str, Tenant] = {}
         for t in tenants:
             if t.net_id in self._tenants:
                 raise ValueError(f"duplicate tenant id {t.net_id!r}")
             self._tenants[t.net_id] = t
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if tracer is not None:
+            # Retrofit the shared tracer onto every tenant engine, labeled
+            # by NET ID (the engine's own cfg.name default can collide when
+            # duplicate nets carry a '#index').
+            for t in self._tenants.values():
+                t.engine.tracer = tracer
+                t.engine.trace_label = t.net_id
         self.shed_after = shed_after
         self.fleet = fleet
         if drift_threshold is not None and drift_threshold <= 1.0:
@@ -93,7 +112,7 @@ class Router:
     def from_fleet(cls, fleet, *, engines: dict | None = None,
                    lm: dict | None = None, shed_after: int | None = None,
                    drift_threshold: float | None = None,
-                   drift_min_samples: int = 5, cache=None,
+                   drift_min_samples: int = 5, cache=None, tracer=None,
                    x_scale: float = 0.05, seed: int = 0) -> "Router":
         """Build a router from a :class:`FleetPlan`.
 
@@ -123,7 +142,8 @@ class Router:
                 tenants.append(edge_tenant(tp, x_scale=x_scale, seed=seed))
         return cls(tenants, shed_after=shed_after, fleet=fleet,
                    drift_threshold=drift_threshold,
-                   drift_min_samples=drift_min_samples, cache=cache)
+                   drift_min_samples=drift_min_samples, cache=cache,
+                   tracer=tracer)
 
     # -- lookup -----------------------------------------------------------
     def tenant(self, net_id: str) -> Tenant:
@@ -223,7 +243,15 @@ class Router:
         self._admission_check(t)
         t0 = time.perf_counter()
         y = t.engine.infer(x)
-        t.metrics.observe_latency(time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        t.metrics.observe_latency(t1 - t0)
+        if self.tracer.enabled:
+            # The router-grain envelope around the engine's own ``infer``
+            # span; the engine numbered this call, so reuse its counter as
+            # the trace id and the two spans join on it.
+            self.tracer.add("request", t0, t1,
+                            trace=getattr(t.engine, "calls", None),
+                            tenant=net_id)
         self._maybe_replan(t)
         return y
 
@@ -248,6 +276,7 @@ class Router:
         total = 0
         for t in lm:
             nid = t.net_id
+            steps_before = getattr(t.engine, "decode_steps_observed", 0)
             n = t.engine.step(wait_s=remaining_wait)
             remaining_wait = 0.0
             t.metrics.observe_occupancy(t.engine.n_active, t.slots)
@@ -261,6 +290,10 @@ class Router:
                 else:
                     still.append((req, t0))
             self._inflight[nid] = still
+            # Drift check per tick that actually decoded (n_active can be 0
+            # when every stepped request completed within the tick).
+            if getattr(t.engine, "decode_steps_observed", 0) > steps_before:
+                self._maybe_replan(t)
         return total
 
     def run_until_drained(self, max_ticks: int = 10_000,
@@ -275,25 +308,37 @@ class Router:
             self.step(wait_s=wait_s)
 
     # -- drift watcher (characterize -> plan -> serve -> replan loop) -----
+    def _drift_measurement(self, t: Tenant) -> tuple[float, int]:
+        """(measured seconds, sample count) of the plan-comparable service
+        time for one tenant: request p50 for edge (the request IS the
+        planned pipeline), decode-step p50 for LM (the plan's graph models
+        one decode step; request latency would fold queue wait into the
+        cost model)."""
+        if t.kind == "lm":
+            return (getattr(t.engine, "measured_decode_p50_s", 0.0),
+                    getattr(t.engine, "decode_steps_observed", 0))
+        return t.metrics.p50_s, t.metrics.count
+
     def drift(self, net_id: str) -> float:
-        """Measured/planned latency ratio for one tenant (p50 over the
-        metrics window vs the tenant plan's estimate); 1.0 when either side
-        has no signal yet."""
+        """Measured/planned service-time ratio for one tenant (p50 over the
+        kind-appropriate window vs the tenant plan's estimate); 1.0 when
+        either side has no signal yet."""
         t = self.tenant(net_id)
         planned = getattr(t.plan, "est_latency_s", 0.0)
-        measured = t.metrics.p50_s
+        measured, _ = self._drift_measurement(t)
         if planned <= 0 or measured <= 0:
             return 1.0
         return measured / planned
 
     def _tenant_drifted(self, t: Tenant) -> bool:
-        if t.kind != "edge" or t.metrics.count < self.drift_min_samples:
-            return False                            # see module doc: LM p50
-        r = self.drift(t.net_id)                    # includes queue wait
+        _, samples = self._drift_measurement(t)
+        if samples < self.drift_min_samples:
+            return False
+        r = self.drift(t.net_id)
         return r > self.drift_threshold or r < 1.0 / self.drift_threshold
 
     def drifted(self) -> list[str]:
-        """Edge tenants whose drift ratio left ``[1/threshold, threshold]``
+        """Tenants whose drift ratio left ``[1/threshold, threshold]``
         with at least ``drift_min_samples`` observations."""
         if self.drift_threshold is None:
             return []
@@ -310,18 +355,19 @@ class Router:
         return self.replan_fleet()
 
     def replan_fleet(self, *, budget_factor: float | None = None):
-        """Fleet-wide recalibration: feed every measured edge tenant's p50
-        back into the plan cache
-        (:func:`repro.plan.calibrate.recalibrate_fleet`) and swap the
-        replanned :class:`FleetPlan` into the live tenants — cost
+        """Fleet-wide recalibration: feed every measured tenant's
+        plan-comparable p50 (edge request / LM decode step) back into the
+        plan cache (:func:`repro.plan.calibrate.recalibrate_fleet`) and
+        swap the replanned :class:`FleetPlan` into the live tenants — cost
         annotations and budgets move; engines keep their compiled tiles.
         ``budget_factor`` overrides each tenant's original headroom factor
         when re-deriving budgets.  Returns the replanned fleet."""
         from repro.plan import calibrate
-        measurements = {nid: t.metrics.p50_s
-                        for nid, t in self._tenants.items()
-                        if t.kind == "edge" and t.metrics.count
-                        and t.metrics.p50_s > 0}
+        measurements = {}
+        for nid, t in self._tenants.items():
+            measured, samples = self._drift_measurement(t)
+            if samples and measured > 0:
+                measurements[nid] = measured
         new_fleet = calibrate.recalibrate_fleet(self.fleet, measurements,
                                                 cache=self._cache,
                                                 budget_factor=budget_factor)
@@ -357,6 +403,8 @@ class Router:
             snap["kind"] = t.kind
             snap["shed"] = self.over_budget(nid)
             snap["drift"] = self.drift(nid)
+            if hasattr(t.engine, "span_stats"):
+                snap["spans"] = t.engine.span_stats()
             out[nid] = snap
         return out
 

@@ -318,11 +318,13 @@ def test_no_replan_within_threshold():
     assert router.replans == 0
 
 
-def test_lm_tenant_latency_never_feeds_recalibration():
+def test_lm_tenant_drift_uses_decode_step_not_request_latency():
     """LM request latency includes queue wait, which is not the quantity the
-    plan estimates: the drift watcher must neither trip on it nor feed it
-    into recalibrate_fleet (otherwise a burst bakes transient load into the
-    cached cost model)."""
+    plan estimates, so it must never feed recalibration.  With the span
+    decomposition, LM tenants join the drift loop through the batcher's
+    measured DECODE-STEP p50 instead: the same quantity-vs-quantity
+    comparison the edge path has (an LM plan's graph models one decode
+    step)."""
     import numpy as np
     from repro import configs
     from repro.models import api
@@ -342,13 +344,20 @@ def test_lm_tenant_latency_never_feeds_recalibration():
     router.run_until_drained(max_ticks=200)
     t = router.tenant(nid)
     assert t.metrics.count == 3
-    # Wall clock on the smoke model is wildly off the datasheet plan, yet:
-    assert router.drifted() == []
-    assert router.replans == 0
-    # And a manual fleet replan ignores the LM tenant's inflated p50.
-    before = t.plan.est_latency_s
-    router.replan_fleet()
-    assert router.tenant(nid).plan.est_latency_s == before
+    # The drift ratio is decode-step-based: queue-polluted request p50 (the
+    # metrics window) never enters it.
+    decode_p50 = t.engine.measured_decode_p50_s
+    assert decode_p50 > 0
+    assert decode_p50 < t.metrics.p50_s           # request latency >> step
+    planned = router.fleet.tenant(nid).plan.est_latency_s
+    assert router.drift(nid) == pytest.approx(decode_p50 / planned)
+    # The interpret-mode step is wildly off the datasheet plan, so the
+    # watcher tripped and replanned DURING serving — from the decode step.
+    assert router.replans >= 1
+    recal = router.tenant(nid).plan.est_latency_s
+    assert recal == pytest.approx(decode_p50, rel=0.5)
+    assert recal < t.metrics.p50_s / 10           # not the queue-wait number
+    assert "calibration" in router.tenant(nid).plan.serve
 
 
 def test_router_rejects_bad_drift_threshold():

@@ -1,0 +1,494 @@
+"""Observability tests: span/trace API, exporters, plan attribution,
+span-decomposed serving reconciliation, and the tracing-off overhead guard.
+"""
+
+import json
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro import plan as plan_lib
+from repro.models import api, edge
+from repro.obs import (NULL_TRACER, Tracer, aggregate, attribution,
+                       format_attribution, parse_prometheus, percentile,
+                       prometheus_text, reconcile, summarize, to_chrome,
+                       write_chrome, write_prometheus)
+from repro.serve import (Router, TenantMetrics, TenantQueueFull, engine,
+                         write_serve_snapshots)
+from repro.serve.metrics import _safe_net_name
+
+
+# ---------------------------------------------------------------------------
+# Tracer primitives (no jax)
+# ---------------------------------------------------------------------------
+
+def test_span_ctx_records_interval():
+    tr = Tracer()
+    with tr.span("work", trace=7, tenant="a"):
+        time.sleep(0.002)
+    (s,) = tr.spans
+    assert s.name == "work" and s.trace_id == 7
+    assert s.attrs["tenant"] == "a"
+    assert s.dur_s >= 0.002
+    assert s.t1_s == pytest.approx(s.t0_s + s.dur_s)
+
+
+def test_disabled_tracer_returns_shared_noop_ctx():
+    tr = Tracer(enabled=False)
+    a = tr.span("x")
+    b = tr.span("y", trace=1, tenant="t")
+    assert a is b                        # no per-call allocation when off
+    with a:
+        pass
+    tr.add("x", 0.0, 1.0)
+    assert len(tr) == 0
+
+
+def test_tracer_maxlen_drops_and_counts():
+    tr = Tracer(maxlen=3)
+    for i in range(5):
+        tr.add("s", float(i), float(i) + 0.5)
+    assert len(tr) == 3 and tr.dropped == 2
+    payload = to_chrome(tr.spans, dropped=tr.dropped)
+    assert payload["otherData"]["dropped"] == 2
+    tr.clear()
+    assert len(tr) == 0 and tr.dropped == 0
+
+
+def test_null_tracer_cannot_be_enabled():
+    NULL_TRACER.enabled = True           # write is silently refused
+    assert NULL_TRACER.enabled is False
+    assert not NULL_TRACER
+    NULL_TRACER.add("x", 0.0, 1.0)
+    assert len(NULL_TRACER) == 0
+
+
+def test_add_clamps_negative_duration():
+    tr = Tracer()
+    tr.add("backwards", 2.0, 1.0)
+    assert tr.spans[0].dur_s == 0.0
+
+
+def test_percentile_and_summarize_conventions():
+    assert percentile([], 0.95) == 0.0
+    assert percentile([3.0], 0.95) == 3.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0.0) == 1.0
+    agg = summarize([])
+    assert agg["count"] == 0 and agg["p50_s"] == 0.0 and agg["p95_s"] == 0.0
+    assert not any(math.isnan(v) for v in agg.values())
+    # Same nearest-rank convention as TenantMetrics.
+    m = TenantMetrics("x")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        m.observe_latency(v)
+    assert m.p95_s == percentile([1.0, 2.0, 3.0, 4.0], 0.95)
+
+
+# ---------------------------------------------------------------------------
+# Exporters
+# ---------------------------------------------------------------------------
+
+def _sample_tracer() -> Tracer:
+    tr = Tracer()
+    tr.add("queue", 0.0, 0.001, trace=1, tenant="lm0")
+    tr.add("decode_step", 0.001, 0.003, trace=1, tenant="lm0", tokens=1)
+    tr.add("infer", 0.0, 0.0005, trace=1, tenant="edge0")
+    return tr
+
+
+def test_chrome_payload_shape_and_strict_json(tmp_path):
+    tr = _sample_tracer()
+    payload = to_chrome(tr.spans)
+    names = {e["name"] for e in payload["traceEvents"]}
+    assert {"queue", "decode_step", "infer", "thread_name"} <= names
+    meta = [e for e in payload["traceEvents"] if e["ph"] == "M"]
+    assert {m["args"]["name"] for m in meta} == {"tenant:lm0", "tenant:edge0"}
+    x = [e for e in payload["traceEvents"]
+         if e["ph"] == "X" and e["name"] == "decode_step"][0]
+    assert x["ts"] == pytest.approx(1000.0)        # microseconds
+    assert x["dur"] == pytest.approx(2000.0)
+    assert x["args"]["trace_id"] == 1
+    # Spans from one tenant share a row; different tenants do not.
+    tids = {e["cat"]: e["tid"] for e in payload["traceEvents"]
+            if e["ph"] == "X"}
+    assert tids["lm0"] != tids["edge0"]
+    p = write_chrome(tr.spans, tmp_path / "trace.json")
+    json.loads(p.read_text(), parse_constant=lambda _: 1 / 0)  # strict
+
+
+def test_prometheus_roundtrip():
+    tr = _sample_tracer()
+    text = prometheus_text(aggregate(tr.spans))
+    samples = parse_prometheus(text)
+    by_name = {}
+    for s in samples:
+        by_name.setdefault(s["name"], []).append(s)
+    assert "repro_span_seconds" in by_name
+    counts = {(s["labels"]["tenant"], s["labels"]["kind"]): s["value"]
+              for s in by_name["repro_span_seconds_count"]}
+    assert counts[("lm0", "queue")] == 1
+    assert counts[("edge0", "infer")] == 1
+    q = [s for s in by_name["repro_span_seconds"]
+         if s["labels"] == {"tenant": "lm0", "kind": "decode_step",
+                            "quantile": "0.5"}]
+    assert q and q[0]["value"] == pytest.approx(0.002)
+
+
+def test_prometheus_parser_is_strict(tmp_path):
+    with pytest.raises(ValueError, match="malformed"):
+        parse_prometheus('metric{unterminated 1.0\n')
+    with pytest.raises(ValueError, match="non-numeric"):
+        parse_prometheus('metric{a="b"} not_a_float\n')
+    with pytest.raises(ValueError, match="non-finite"):
+        parse_prometheus('metric{a="b"} nan\n')
+    with pytest.raises(ValueError, match="no samples"):
+        parse_prometheus("# HELP only comments\n")
+    # The writer never trips its own parser, non-finite aggregates included.
+    stats = {("t", "k"): {"count": 1, "total_s": float("inf"),
+                          "p50_s": float("nan"), "p95_s": 0.5}}
+    p = write_prometheus(stats, tmp_path / "m.prom")
+    samples = parse_prometheus(p.read_text())
+    assert all(math.isfinite(s["value"]) for s in samples)
+
+
+# ---------------------------------------------------------------------------
+# Attribution
+# ---------------------------------------------------------------------------
+
+class _FakePlan:
+    def __init__(self, est):
+        self.est_latency_s = est
+
+
+def test_aggregate_groups_by_tenant_kind_and_sums_tokens():
+    tr = Tracer()
+    tr.add("prefill_chunk", 0.0, 0.1, trace=1, tenant="lm", tokens=4)
+    tr.add("prefill_chunk", 0.1, 0.3, trace=2, tenant="lm", tokens=2)
+    tr.add("prefill_chunk", 0.0, 0.1, trace=3, tenant="other", tokens=8)
+    agg = aggregate(tr.spans)
+    assert agg[("lm", "prefill_chunk")]["count"] == 2
+    assert agg[("lm", "prefill_chunk")]["tokens"] == 6
+    assert agg[("other", "prefill_chunk")]["tokens"] == 8
+
+
+def test_attribution_planned_analogue_per_kind():
+    tr = Tracer()
+    tr.add("decode_step", 0.0, 0.002, trace=1, tenant="lm")
+    tr.add("queue", 0.0, 0.5, trace=1, tenant="lm")
+    tr.add("prefill_chunk", 0.0, 0.006, trace=1, tenant="lm", tokens=3)
+    rows = {(r.tenant, r.kind): r
+            for r in attribution({"lm": _FakePlan(0.002)}, tr.spans)}
+    dec = rows[("lm", "decode_step")]
+    assert dec.planned_s == 0.002 and dec.ratio == pytest.approx(1.0)
+    assert dec.within_2x is True
+    # prefill prices per token: est x mean tokens/chunk = 0.002 * 3.
+    pre = rows[("lm", "prefill_chunk")]
+    assert pre.planned_s == pytest.approx(0.006)
+    # Queue wait is exactly what the plan does NOT price.
+    q = rows[("lm", "queue")]
+    assert q.planned_s is None and q.ratio is None and q.within_2x is None
+    table = format_attribution(list(rows.values()))
+    assert "decode_step" in table and "queue" in table
+    # Unknown tenants degrade to unplanned rows, not KeyError.
+    rows2 = attribution({}, tr.spans)
+    assert all(r.planned_s is None for r in rows2)
+
+
+def test_reconcile_excludes_request_envelope():
+    tr = Tracer()
+    tr.add("request", 0.0, 1.0, trace=9, tenant="lm")   # the e2e envelope
+    tr.add("queue", 0.0, 0.4, trace=9, tenant="lm")
+    tr.add("decode_step", 0.4, 0.9, trace=9, tenant="lm")
+    tr.add("decode_step", 0.0, 0.5, trace=8, tenant="lm")  # other trace
+    rec = reconcile(tr.spans, 9, 1.0)
+    assert rec["sum_s"] == pytest.approx(0.9)
+    assert rec["coverage"] == pytest.approx(0.9)
+    assert set(rec["by_kind"]) == {"queue", "decode_step"}
+
+
+# ---------------------------------------------------------------------------
+# Metrics satellites: NaN-free snapshots, filename hardening
+# ---------------------------------------------------------------------------
+
+def test_tenant_metrics_snapshot_strict_json_on_empty_window():
+    m = TenantMetrics("x")                    # latency_budget_s = inf
+    snap = m.snapshot()
+    assert snap["p95_s"] == 0.0 and snap["p50_s"] == 0.0
+    assert snap["latency_budget_s"] is None   # inf -> null, not "Infinity"
+    json.dumps(snap, allow_nan=False)
+
+
+def test_tenant_metrics_rejects_nonfinite_observations():
+    m = TenantMetrics("x", latency_budget_s=1.0)
+    for bad in (float("nan"), float("inf"), float("-inf")):
+        assert m.observe_latency(bad) is False
+    m.observe_latency(0.5)
+    assert m.count == 1 and m.invalid_observations == 3
+    assert m.p95_s == 0.5 and not math.isnan(m.mean_s)
+    json.dumps(m.snapshot(), allow_nan=False)
+
+
+def test_safe_net_name_hardening():
+    # The established mapping (test_fleet relies on the '#'->'_' filenames).
+    assert _safe_net_name("jet_tagger#1") == "jet_tagger_1"
+    assert _safe_net_name("a/b\\c") == "a_b_c"
+    # Degenerate ids fall back to a stable content hash, never "" or "..".
+    for bad in ("", "..", ".", "___", "//", "--"):
+        safe = _safe_net_name(bad)
+        assert safe.startswith("net_") and len(safe) > 4, (bad, safe)
+    assert _safe_net_name("..") != _safe_net_name(".")
+
+
+def test_write_serve_snapshots_hostile_id_and_cold_tenant(tmp_path):
+    report = {
+        "../evil": {"net_id": "../evil", "count": 0, "mean_s": 0.0,
+                    "p50_s": 0.0, "p95_s": 0.0, "budget_violations": 0,
+                    "kind": "edge", "planned_latency_s": 1e-6},
+    }
+    (p,) = write_serve_snapshots(report, tmp_path)
+    assert p.parent == tmp_path               # no traversal out of json_dir
+    rows = json.loads(p.read_text())["rows"]
+    names = [r["name"] for r in rows]
+    # Cold tenant: no 0.0 percentile rows (they would read as a regression
+    # to zero in the trend diff) — only the model-sourced planned row.
+    assert names == ["serve/../evil/planned"]
+
+
+def test_write_serve_snapshots_span_kind_rows(tmp_path):
+    report = {
+        "lm0": {"net_id": "lm0", "count": 2, "mean_s": 1.0, "p50_s": 1.0,
+                "p95_s": 1.2, "budget_violations": 0, "kind": "lm",
+                "planned_latency_s": 2e-5,
+                "spans": {"decode_step": summarize([1e-3, 2e-3]),
+                          "queue": summarize([0.5]),
+                          "cold": summarize([])}},
+    }
+    (p,) = write_serve_snapshots(report, tmp_path)
+    rows = {r["name"]: r for r in json.loads(p.read_text())["rows"]}
+    assert rows["serve/lm0/decode_step/p50"]["us_per_call"] == \
+        pytest.approx(2000.0)                     # upper-median convention
+    assert "span=decode_step" in rows["serve/lm0/decode_step/p50"]["derived"]
+    assert "serve/lm0/queue/p95" in rows
+    assert "serve/lm0/cold/p50" not in rows   # empty window: no rows
+    # The LM decode-step planned analogue rides along as a model row.
+    planned = rows["serve/lm0/decode_step/planned"]
+    assert planned["derived"] == "src=model"
+    assert planned["us_per_call"] == pytest.approx(20.0)
+
+
+# ---------------------------------------------------------------------------
+# Span-decomposed serving: reconciliation, shed/evict, decode-step drift
+# ---------------------------------------------------------------------------
+
+def _smoke_batcher(tracer=None, serve=None, max_len=64):
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    plan = plan_lib.plan_deployment(cfg, target="tpu")
+    if serve:
+        plan = plan_lib.DeploymentPlan.from_dict(
+            {**plan.to_dict(), "serve": serve})
+    return engine.ContinuousBatcher(cfg, params, plan=plan, max_len=max_len,
+                                    tracer=tracer)
+
+
+def _warm(b):
+    """One throwaway request: jit compile + slot-reset dispatch, so traced
+    requests measure steady-state service, not compilation."""
+    b.submit(engine.Request(rid=-1, prompt=np.array([2, 3], np.int32),
+                            max_new=2))
+    b.run_until_drained(max_ticks=50)
+    if b.tracer.enabled:
+        b.tracer.clear()
+
+
+def test_solo_request_spans_reconcile_with_e2e_latency():
+    tr = Tracer()
+    b = _smoke_batcher(tracer=tr, serve={"slots": 2, "prefill_chunk": 2})
+    _warm(b)
+    req = engine.Request(rid=42, prompt=np.array([3, 5, 7], np.int32),
+                         max_new=4)
+    b.submit(req)
+    b.run_until_drained(max_ticks=50)
+    assert req.done
+    mine = tr.by_trace(42)
+    kinds = {s.name for s in mine}
+    assert {"queue", "prefill_chunk", "decode_step", "request"} <= kinds
+    (envelope,) = [s for s in mine if s.name == "request"]
+    assert envelope.attrs["tokens_out"] == 4
+    e2e = envelope.dur_s
+    assert e2e == pytest.approx(req.t_done - req.t_submit)
+    rec = reconcile(tr.spans, 42, e2e)
+    # A solo request's spans tile its end-to-end latency: the only
+    # uncovered wall time is inter-tick bookkeeping (slot reset, the drain
+    # loop), the only overlap none.  Far below 1 would mean the request
+    # spent time no span accounts for.
+    assert 0.7 <= rec["coverage"] <= 1.05, rec
+    # Components are consistent: decode steps = generated tokens - the one
+    # emitted by the prefill finish.
+    n_dec = sum(1 for s in mine if s.name == "decode_step")
+    assert n_dec == 3
+    assert sum(s.attrs["tokens"] for s in mine
+               if s.name == "prefill_chunk") == len(req.prompt)
+
+
+def test_concurrent_request_spans_keep_trace_ids_apart():
+    tr = Tracer()
+    b = _smoke_batcher(tracer=tr, serve={"slots": 2})
+    _warm(b)
+    reqs = [engine.Request(rid=100 + i,
+                           prompt=np.array([3 + i, 5], np.int32), max_new=3)
+            for i in range(3)]
+    for r in reqs:
+        b.submit(r)
+    b.run_until_drained(max_ticks=100)
+    for r in reqs:
+        mine = tr.by_trace(r.rid)
+        kinds = {s.name for s in mine}
+        assert {"queue", "prefill_chunk", "decode_step", "request"} <= kinds
+        assert len([s for s in mine if s.name == "request"]) == 1
+        # Batched decode: per-request spans share the step interval, so
+        # coverage can exceed 1 (legit overlap) but never collapse.
+        rec = reconcile(tr.spans, r.rid, r.t_done - r.t_submit)
+        assert rec["coverage"] > 0.5, (r.rid, rec)
+    # No span leaked onto another request's trace id.
+    all_ids = {s.trace_id for s in tr.spans if s.trace_id is not None}
+    assert all_ids == {100, 101, 102}
+
+
+def test_trace_survives_max_new_cap_eviction():
+    tr = Tracer()
+    b = _smoke_batcher(tracer=tr, serve={"slots": 1, "max_new_cap": 2})
+    _warm(b)
+    req = engine.Request(rid=7, prompt=np.array([3, 5], np.int32),
+                         max_new=50)              # plan cap evicts at 2
+    b.submit(req)
+    b.run_until_drained(max_ticks=20)
+    assert req.done and len(req.out) == 2
+    (envelope,) = [s for s in tr.by_trace(7) if s.name == "request"]
+    assert envelope.attrs["tokens_out"] == 2      # the evicted trace closed
+    assert req.t_done is not None
+    assert envelope.dur_s == pytest.approx(req.t_done - req.t_submit)
+
+
+def test_trace_survives_queue_full_shedding():
+    """A refused submit (TenantQueueFull) must neither emit spans for the
+    refused request nor corrupt the admitted requests' traces."""
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    fleet = plan_lib.plan_fleet([cfg], target="tpu", serve_slots_total=1,
+                                queue_depth_factor=2,
+                                cache=plan_lib.PlanCache())
+    nid = fleet.net_ids[0]
+    tr = Tracer()
+    router = Router.from_fleet(fleet, lm={nid: (cfg, params)}, tracer=tr)
+    reqs = [engine.Request(rid=i, prompt=np.array([3 + i], np.int32),
+                           max_new=2) for i in range(3)]
+    router.submit(nid, reqs[0])
+    router.submit(nid, reqs[1])
+    with pytest.raises(TenantQueueFull):
+        router.submit(nid, reqs[2])
+    assert tr.by_trace(2) == []                   # refused: no spans
+    router.run_until_drained(max_ticks=200)
+    for r in reqs[:2]:
+        assert r.done
+        mine = tr.by_trace(r.rid)
+        assert [s for s in mine if s.name == "request"]
+        # Spans are labeled with the ROUTER's net id, not cfg.name.
+        assert {s.attrs["tenant"] for s in mine} == {nid}
+    # The shed request can be resubmitted later and traces normally.
+    router.submit(nid, reqs[2])
+    router.run_until_drained(max_ticks=200)
+    assert reqs[2].done and tr.by_trace(2)
+
+
+def test_decode_step_window_is_always_on():
+    """Drift needs decode-step p50 with tracing DISABLED: the batcher's
+    windows are maintained unconditionally."""
+    b = _smoke_batcher()                          # no tracer
+    assert not b.tracer.enabled
+    b.submit(engine.Request(rid=0, prompt=np.array([3, 5], np.int32),
+                            max_new=4))
+    b.run_until_drained(max_ticks=50)
+    assert b.measured_decode_p50_s > 0
+    assert b.decode_steps_observed == 3
+    stats = b.span_stats()
+    assert {"queue", "prefill_chunk", "decode_step"} <= set(stats)
+    assert stats["decode_step"]["total_count"] == 3
+
+
+def test_router_report_carries_span_stats():
+    cfg = edge.edge_config("jet_tagger")
+    fleet = plan_lib.plan_fleet([cfg], target="tpu",
+                                cache=plan_lib.PlanCache())
+    router = Router.from_fleet(fleet)
+    x = jnp.ones((cfg.batch, cfg.dims[0]), jnp.float32)
+    router.warmup({"jet_tagger": x})
+    router.drive({"jet_tagger": x}, iters=3)
+    snap = router.report()["jet_tagger"]
+    assert snap["spans"]["infer"]["count"] == 3
+    assert snap["spans"]["infer"]["p50_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Deployment + stage spans
+# ---------------------------------------------------------------------------
+
+def test_traced_build_emits_stage_spans(tmp_path):
+    from repro.deploy import Deployment
+    dep = Deployment.build("jet_tagger", machine_model=None,
+                           stop_after="plan", trace=True,
+                           cache=plan_lib.PlanCache())
+    by_name = {s.name: s for s in dep.tracer.spans}
+    assert set(by_name) == {"stage/characterize", "stage/plan"}
+    assert by_name["stage/characterize"].attrs["skipped"] is True
+    assert by_name["stage/plan"].attrs["skipped"] is False
+    assert "tracing:" in dep.summary()
+    p = dep.export_trace(tmp_path / "trace.json")
+    json.loads(p.read_text(), parse_constant=lambda _: 1 / 0)
+    samples = parse_prometheus(
+        dep.export_prometheus(tmp_path / "m.prom").read_text())
+    assert samples
+
+
+def test_untraced_build_uses_null_tracer():
+    from repro.deploy import Deployment
+    dep = Deployment.build("jet_tagger", machine_model=None,
+                           stop_after="plan", cache=plan_lib.PlanCache())
+    assert dep.tracer is NULL_TRACER
+    assert len(dep.tracer.spans) == 0
+
+
+# ---------------------------------------------------------------------------
+# Overhead guard: tracing-off dispatch must stay in the noise
+# ---------------------------------------------------------------------------
+
+def test_tracing_disabled_adds_under_2pct_to_edge_dispatch():
+    """EdgeEngine.infer with the (disabled) tracer branch vs the raw jitted
+    forward: the median must agree within 2%.  Retries absorb scheduler
+    noise — the guard is against a systematic regression (e.g. span
+    allocation on the disabled path), not against a noisy host."""
+    cfg = edge.edge_config("jet_tagger")
+    eng = engine.EdgeEngine(cfg)
+    assert eng.tracer is NULL_TRACER
+    x = jnp.ones((cfg.batch, cfg.dims[0]), jnp.float32)
+    for _ in range(10):
+        eng.infer(x)                               # jit + cache warm
+    n = 50
+    for _ in range(3):
+        raw = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            jax.block_until_ready(eng._fwd(x))
+            raw.append(time.perf_counter() - t0)
+        eng.reset_measurements()
+        for _ in range(n):
+            eng.infer(x)
+        if eng.measured_p50_s <= percentile(raw, 0.5) * 1.02:
+            return
+    pytest.fail(f"traced-off dispatch overhead > 2%: "
+                f"infer p50 {eng.measured_p50_s * 1e6:.1f}us vs "
+                f"raw p50 {percentile(raw, 0.5) * 1e6:.1f}us")
