@@ -140,7 +140,9 @@ def report(old_payload: dict, new_payload: dict, *,
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(prog="python -m benchmarks.trend",
                                  description=__doc__)
-    ap.add_argument("snapshot", help="current BENCH_<name>.json")
+    ap.add_argument("snapshot", nargs="+",
+                    help="current BENCH_<name>.json (several snapshots "
+                         "diff/gate independently; worst exit code wins)")
     ap.add_argument("--against", default=None,
                     help="previous snapshot (default: committed version "
                          "via git show HEAD:<path>)")
@@ -150,24 +152,32 @@ def main(argv: list[str] | None = None) -> int:
                          "(override: TREND_GATE_OVERRIDE=1 / the "
                          "perf-regression-ok PR label)")
     args = ap.parse_args(argv)
-    new_payload = load(args.snapshot)
-    old_payload = (load(args.against) if args.against
-                   else load_committed(args.snapshot))
-    if old_payload is None:
-        if args.gate:       # a brand-new snapshot has nothing to regress
-            print(f"[gate] no committed baseline for {args.snapshot}; "
-                  f"nothing to gate")
-            return 0
-        print(f"no committed baseline for {args.snapshot}; nothing to diff",
-              file=sys.stderr)
-        return 1
-    deltas = report(old_payload, new_payload)
-    for d in deltas:
-        if d["status"] == "steady":
-            print(format_delta(d))
-    if args.gate:
-        return gate(deltas)
-    return 0
+    if args.against and len(args.snapshot) > 1:
+        print("--against pairs with exactly one snapshot", file=sys.stderr)
+        return 2
+    rc = 0
+    for snap in args.snapshot:
+        if len(args.snapshot) > 1:
+            print(f"== {snap}")
+        new_payload = load(snap)
+        old_payload = (load(args.against) if args.against
+                       else load_committed(snap))
+        if old_payload is None:
+            if args.gate:   # a brand-new snapshot has nothing to regress
+                print(f"[gate] no committed baseline for {snap}; "
+                      f"nothing to gate")
+                continue
+            print(f"no committed baseline for {snap}; nothing to diff",
+                  file=sys.stderr)
+            rc = max(rc, 1)
+            continue
+        deltas = report(old_payload, new_payload)
+        for d in deltas:
+            if d["status"] == "steady":
+                print(format_delta(d))
+        if args.gate:
+            rc = max(rc, gate(deltas))
+    return rc
 
 
 if __name__ == "__main__":

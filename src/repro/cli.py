@@ -11,6 +11,7 @@ subsystems by hand:
   python -m repro serve jet_tagger --lm qwen2_5_3b
   python -m repro bench jet_tagger tau_select --iters 10
   python -m repro trace jet_tagger --lm qwen2_5_3b      # spans + attribution
+  python -m repro replay --scenario flash_crowd         # open-loop traffic
 
 ``python -m repro.plan`` and ``python -m repro.characterize`` remain as
 deprecation shims over the matching subcommands.
@@ -243,27 +244,19 @@ def _build_deployment(args, *, stop_after=None, trace=False):
 
 
 def _serve_smoke(dep, *, iters: int, requests: int = 3) -> dict:
-    """Drive the deployment end-to-end: interleaved edge traffic plus a
-    small LM request set; returns the router report."""
-    import numpy as np
-
-    from repro.serve.engine import ContinuousBatcher, Request
+    """Drive the deployment end-to-end through the open-loop replay
+    driver: interleaved edge traffic plus a small LM request set (the
+    same deterministic smoke trace everywhere); returns the router
+    report."""
+    from repro.obs import workload
     router = dep.serve()
     inputs = router.warmup()
-    rng = np.random.default_rng(0)
-    reqs = []
-    for nid, eng in dep.engines.items():
-        if isinstance(eng, ContinuousBatcher):
-            for i in range(requests):
-                r = Request(rid=len(reqs),
-                            prompt=rng.integers(
-                                1, eng.cfg.vocab_size, 3).astype(np.int32),
-                            max_new=4)
-                router.submit(nid, r)
-                reqs.append(r)
-    router.drive(inputs, iters=iters)
-    router.run_until_drained(max_ticks=200)
-    assert all(r.done for r in reqs), "LM smoke requests did not drain"
+    tenants = {t.net_id: t.plan.kind for t in dep.fleet.tenants}
+    trace = workload.smoke_trace(tenants, edge_iters=iters,
+                                 lm_requests=requests)
+    report = workload.replay(router, trace, inputs=inputs)
+    bad = [r for r in report.records if r.status != "ok"]
+    assert not bad, f"smoke replay left non-ok requests: {bad[:3]}"
     return router.report()
 
 
@@ -375,6 +368,75 @@ def cmd_trace(argv: list[str] | None = None) -> int:
     return 0
 
 
+def cmd_replay(argv: list[str] | None = None) -> int:
+    from repro.obs import workload as wl
+    ap = _deploy_parser(
+        "python -m repro replay",
+        "Open-loop traffic replay against a served fleet: generate a "
+        "deterministic scenario trace (or load one), fire arrivals on the "
+        "wall clock regardless of completions, and report per-tenant tail "
+        "latency, scheduling lag, and the SLO verdict.")
+    ap.add_argument("--scenario", choices=sorted(wl.SCENARIOS),
+                    default="flash_crowd")
+    ap.add_argument("--duration", type=float, default=0.25, metavar="S",
+                    help="trace duration in seconds (default 0.25)")
+    ap.add_argument("--rate", type=float, default=None, metavar="HZ",
+                    help="edge-tenant mean arrival rate")
+    ap.add_argument("--lm-rate", type=float, default=None, metavar="HZ",
+                    help="LM-tenant mean arrival rate")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--speed", type=float, default=1.0,
+                    help="replay speedup: 2.0 compresses arrivals 2x")
+    ap.add_argument("--trace-file", default=None, metavar="JSONL",
+                    help="replay this saved trace instead of generating")
+    ap.add_argument("--save-trace", default=None, metavar="JSONL",
+                    help="also save the generated trace for re-replay")
+    ap.add_argument("--json-dir", default=None, metavar="DIR",
+                    help="write BENCH_serve_<net>__<scenario>.json tail "
+                         "snapshots here")
+    ap.add_argument("--underbudget", default=None, metavar="NET",
+                    help="shrink NET's SLO budgets to ~0 before replay "
+                         "(CI fault injection: the monitor must flag it)")
+    args = ap.parse_args(argv)
+
+    dep = _build_deployment(args)
+    router = dep.serve()
+    if args.underbudget:
+        if router.slo is None:
+            print("--underbudget needs the SLO monitor (serve(slo=True))",
+                  file=sys.stderr)
+            return 2
+        router.slo.set_budget(args.underbudget, p95_s=1e-9, p99_s=1e-9)
+        print(f"# injected near-zero SLO budget for {args.underbudget}")
+
+    requests = None
+    if args.trace_file:
+        requests = wl.load_trace(args.trace_file)
+        print(f"# loaded {len(requests)} request(s) from {args.trace_file}")
+    scenario_kw = {}
+    if args.rate is not None:
+        scenario_kw["rate_hz"] = args.rate
+    if args.lm_rate is not None:
+        scenario_kw["lm_rate_hz"] = args.lm_rate
+    if requests is None and args.save_trace:
+        tenants = {t.net_id: t.plan.kind for t in dep.fleet.tenants}
+        requests = wl.make_scenario(args.scenario, tenants,
+                                    duration_s=args.duration,
+                                    seed=args.seed, **scenario_kw)
+        print(f"[wrote {wl.save_trace(requests, args.save_trace)}]")
+
+    report = dep.replay(args.scenario, duration_s=args.duration,
+                        seed=args.seed, speed=args.speed,
+                        requests=requests, json_dir=args.json_dir,
+                        **scenario_kw)
+    print(wl.format_replay(report, slo=router.slo))
+    if args.json_dir:
+        out = pathlib.Path(args.json_dir)
+        for p in sorted(out.glob("BENCH_serve_*__*.json")):
+            print(f"wrote {p}")
+    return 0
+
+
 # ---------------------------------------------------------------------------
 # entry point
 # ---------------------------------------------------------------------------
@@ -386,6 +448,7 @@ _SUBCOMMANDS = {
     "serve": cmd_serve,
     "bench": cmd_bench,
     "trace": cmd_trace,
+    "replay": cmd_replay,
 }
 
 

@@ -190,24 +190,73 @@ class Deployment:
     # -- serving ----------------------------------------------------------
     def serve(self, *, shed_after: int | None = None,
               drift_threshold: float | None = None,
-              drift_min_samples: int = 5, fresh: bool = False):
+              drift_min_samples: int = 5, slo: Any = True,
+              defer_limit: int = 4, fresh: bool = False):
         """The fleet behind a :class:`repro.serve.Router`, wired from the
         plan's serve section and this deployment's engines.  Memoized —
         repeated calls with the same knobs return the same live router;
         different knobs (or ``fresh=True``) rebuild it (engines and their
         compiled tiles are reused; router metrics start over).
+
+        ``slo`` — ``True`` (default) attaches a
+        :class:`repro.obs.slo.SloMonitor` with per-tenant p95/p99 budgets
+        from each plan's serve section, enabling the router's SLO-aware
+        priority scheduling; pass a ready monitor to customize windows and
+        budgets, or ``False``/``None`` for the pre-SLO behavior.
         """
+        from repro.obs.slo import SloMonitor
         from repro.serve import Router
         kw = {"shed_after": shed_after, "drift_threshold": drift_threshold,
-              "drift_min_samples": drift_min_samples}
+              "drift_min_samples": drift_min_samples, "slo": slo,
+              "defer_limit": defer_limit}
         if self._router is None or fresh or kw != self._router_kw:
             tracer = (self.ctx.tracer
                       if self.ctx.tracer is not NULL_TRACER else None)
+            monitor = slo if isinstance(slo, SloMonitor) else (
+                SloMonitor.from_fleet(self.fleet, tracer=tracer)
+                if slo else None)
             self._router = Router.from_fleet(
                 self.fleet, engines=self.engines, cache=self.ctx.cache,
-                tracer=tracer, **kw)
+                tracer=tracer, slo=monitor, defer_limit=defer_limit,
+                shed_after=shed_after, drift_threshold=drift_threshold,
+                drift_min_samples=drift_min_samples)
             self._router_kw = kw
         return self._router
+
+    @property
+    def slo(self):
+        """The live router's SLO monitor (None before :meth:`serve` or when
+        serving with ``slo=False``)."""
+        return self._router.slo if self._router is not None else None
+
+    def replay(self, scenario: str = "steady", *, duration_s: float = 0.25,
+               seed: int = 0, speed: float = 1.0, requests=None,
+               json_dir=None, **scenario_kw):
+        """Open-loop traffic replay through the served fleet (see
+        :mod:`repro.obs.workload`): generate (or take) a trace, warm the
+        router, fire arrivals on the wall clock, and return the
+        :class:`~repro.obs.workload.ReplayReport` (per-request e2e latency
+        + scheduling lag).  ``requests`` overrides the generator with an
+        explicit trace (e.g. :func:`repro.obs.workload.load_trace`);
+        ``json_dir`` additionally writes the per-tenant
+        ``BENCH_serve_<net>__<scenario>.json`` tail snapshots."""
+        from repro.obs import workload
+        router = self.serve()
+        inputs = router.warmup()
+        if requests is None:
+            tenants = {t.net_id: t.plan.kind for t in self.fleet.tenants}
+            requests = workload.make_scenario(
+                scenario, tenants, duration_s=duration_s, seed=seed,
+                **scenario_kw)
+        report = workload.replay(router, requests, inputs=inputs,
+                                 speed=speed)
+        report.scenario = scenario
+        if json_dir is not None:
+            workload.write_replay_snapshots(
+                report, json_dir, scenario=scenario, slo=router.slo,
+                meta={"source": "Deployment.replay", "seed": seed,
+                      "duration_s": duration_s})
+        return report
 
     # -- measurement ------------------------------------------------------
     def bench(self, *, iters: int = 5, warmup: int = 1) -> list[BenchRow]:
@@ -280,9 +329,15 @@ class Deployment:
 
     def export_prometheus(self, path="metrics.prom"):
         """Write per-(tenant, kind) span aggregates as a Prometheus
-        text-exposition snapshot; returns the path."""
+        text-exposition snapshot — including the tracer's dropped-span
+        counter and, once serving with an SLO monitor, the per-tenant
+        budget/latency/burn-rate/violation families; returns the path."""
         from repro.obs import aggregate, write_prometheus
-        return write_prometheus(aggregate(self.tracer.spans), path)
+        slo = self.slo
+        return write_prometheus(
+            aggregate(self.tracer.spans), path,
+            dropped=self.tracer.dropped if self.tracer.enabled else None,
+            slo=slo.snapshot() if slo is not None else None)
 
     def attribution(self):
         """Plan-vs-measured rows per (tenant, span kind) — see
@@ -292,7 +347,7 @@ class Deployment:
 
     def format_attribution(self) -> str:
         from repro.obs import format_attribution
-        return format_attribution(self.attribution())
+        return format_attribution(self.attribution(), slo=self.slo)
 
     # -- reporting --------------------------------------------------------
     def summary(self) -> str:
@@ -316,4 +371,14 @@ class Deployment:
             per_kind = " ".join(f"{k}={n}" for k, n in sorted(kinds.items()))
             lines.append(f"tracing: {len(self.tracer.spans)} spans "
                          f"({self.tracer.dropped} dropped) {per_kind}")
+        slo = self.slo
+        if slo is not None:
+            counts = slo.violation_counts()
+            total = sum(counts.values())
+            if total:
+                per = " ".join(f"{t}={n}" for t, n in sorted(counts.items())
+                               if n)
+                lines.append(f"slo: {total} violation event(s) {per}")
+            else:
+                lines.append("slo: ok (no violation events)")
         return "\n".join(lines)

@@ -3,9 +3,12 @@ plan-vs-measured attribution.
 
 The measurement substrate under the characterize → plan → engine → serve
 pipeline: a lightweight host-side span/trace API (:mod:`repro.obs.trace`),
-Chrome/Perfetto + Prometheus exporters (:mod:`repro.obs.export`), and a
+Chrome/Perfetto + Prometheus exporters (:mod:`repro.obs.export`), a
 plan-attribution layer joining measured spans against planned costs per
-span kind (:mod:`repro.obs.attribution`).
+span kind (:mod:`repro.obs.attribution`), workload traces + scenario
+generators + the open-loop replay driver (:mod:`repro.obs.workload`), and
+the per-tenant SLO monitor with priority classes and burn-rate windows
+(:mod:`repro.obs.slo`).
 
 Quick start::
 
@@ -23,12 +26,22 @@ from repro.obs.attribution import (AttributionRow, aggregate, attribution,
                                    format_attribution, reconcile)
 from repro.obs.export import (parse_prometheus, prometheus_text, to_chrome,
                               write_chrome, write_prometheus)
+from repro.obs.slo import (PRIORITY_CLASSES, SloBudget, SloMonitor,
+                           SloViolation, priority_rank)
 from repro.obs.trace import (NULL_TRACER, Span, Tracer, percentile,
                              summarize)
+from repro.obs.workload import (SCENARIOS, ReplayReport, RequestRecord,
+                                TraceRequest, format_replay, load_trace,
+                                make_scenario, replay, save_trace,
+                                smoke_trace, write_replay_snapshots)
 
 __all__ = [
-    "NULL_TRACER", "AttributionRow", "Span", "Tracer", "aggregate",
-    "attribution", "format_attribution", "parse_prometheus", "percentile",
-    "prometheus_text", "reconcile", "summarize", "to_chrome", "write_chrome",
-    "write_prometheus",
+    "NULL_TRACER", "PRIORITY_CLASSES", "AttributionRow", "ReplayReport",
+    "RequestRecord", "SCENARIOS", "SloBudget", "SloMonitor", "SloViolation",
+    "Span", "TraceRequest", "Tracer", "aggregate", "attribution",
+    "format_attribution", "format_replay", "load_trace", "make_scenario",
+    "parse_prometheus", "percentile", "priority_rank", "prometheus_text",
+    "reconcile", "replay", "save_trace", "smoke_trace", "summarize",
+    "to_chrome", "write_chrome", "write_prometheus",
+    "write_replay_snapshots",
 ]

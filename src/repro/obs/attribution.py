@@ -121,8 +121,14 @@ def attribution(plans: dict, stats_or_spans) -> list[AttributionRow]:
     return rows
 
 
-def format_attribution(rows: list[AttributionRow]) -> str:
-    """Human-readable attribution table (the ``repro trace`` report)."""
+def format_attribution(rows: list[AttributionRow], *, slo=None) -> str:
+    """Human-readable attribution table (the ``repro trace`` report).
+
+    Pass ``slo=`` (a :class:`repro.obs.slo.SloMonitor`) to append the
+    tail-contract verdict under the component table: per-tenant measured
+    p95/p99 vs budget, burn rates, and the violation-event count — the
+    span decomposition says *where* the time went, the SLO lines say
+    whether the tenant's contract survived it."""
     tenant_w = max([18] + [len(r.tenant) + 1 for r in rows])
     kind_w = max([20] + [len(r.kind) + 1 for r in rows])
     lines = [f"{'tenant':<{tenant_w}}{'span kind':<{kind_w}}{'n':>6}"
@@ -138,6 +144,20 @@ def format_attribution(rows: list[AttributionRow]) -> str:
             f"{r.measured_p50_s * 1e6:12.1f}us"
             f"{r.measured_p95_s * 1e6:12.1f}us"
             f"{r.total_s * 1e3:10.2f}ms{planned}{ratio}  {within}")
+    if slo is not None:
+        lines.append("slo:")
+        for tenant, st in sorted(slo.snapshot().items()):
+            budget = st["p95_budget_s"]
+            budget_txt = (f"{budget * 1e6:.1f}us" if budget is not None
+                          else "none")
+            verdict = (f"  VIOLATION x{st['violations']}"
+                       if st["violations"] or st["in_violation"] else "  ok")
+            lines.append(
+                f"  {tenant:<{tenant_w - 2}} prio={st['priority']:<9} "
+                f"p95={st['p95_s'] * 1e6:9.1f}us / {budget_txt:<10} "
+                f"p99={st['p99_s'] * 1e6:9.1f}us "
+                f"burn={st['burn_fast']:.2f}/{st['burn_slow']:.2f}"
+                f"{verdict}")
     return "\n".join(lines)
 
 

@@ -94,14 +94,23 @@ def _fmt(x: float) -> str:
     return repr(float(x))
 
 
-def prometheus_text(stats: dict, *, metric: str = _PROM_METRIC) -> str:
+def prometheus_text(stats: dict, *, metric: str = _PROM_METRIC,
+                    dropped: int | None = None,
+                    slo: dict | None = None) -> str:
     """Render span aggregates as a Prometheus text-format snapshot.
 
     ``stats`` maps ``(tenant, kind)`` to a :func:`repro.obs.trace.summarize`
     dict.  Output is summary-typed: ``{quantile="0.5"|"0.95"}`` samples plus
     ``_count``/``_sum`` series per label set.  Non-finite values are skipped
     rather than serialized (Prometheus would accept ``NaN`` but every
-    downstream alert rule then mis-fires)."""
+    downstream alert rule then mis-fires).
+
+    ``dropped`` (a :attr:`repro.obs.Tracer.dropped` count) adds the
+    ``repro_tracer_dropped_total`` counter — a scrape that silently
+    truncates its own evidence is worse than none.  ``slo`` (a
+    :meth:`repro.obs.slo.SloMonitor.snapshot` dict) adds the SLO families:
+    per-tenant budget/latency quantile gauges, fast/slow burn rates, and
+    the violation-event counter."""
     lines = [
         f"# HELP {metric} Span-decomposed service time by tenant and kind.",
         f"# TYPE {metric} summary",
@@ -118,7 +127,58 @@ def prometheus_text(stats: dict, *, metric: str = _PROM_METRIC) -> str:
         if math.isfinite(total):
             lines.append(f"{metric}_sum{{{labels}}} {_fmt(total)}")
         lines.append(f"{metric}_count{{{labels}}} {int(agg.get('count', 0))}")
+    if dropped is not None:
+        lines += [
+            "# HELP repro_tracer_dropped_total Spans dropped after the "
+            "tracer's maxlen filled (the snapshot under-counts by this).",
+            "# TYPE repro_tracer_dropped_total counter",
+            f"repro_tracer_dropped_total {int(dropped)}",
+        ]
+    if slo:
+        lines += _slo_families(slo)
     return "\n".join(lines) + "\n"
+
+
+def _slo_families(slo: dict) -> list[str]:
+    """The SLO metric families from a ``SloMonitor.snapshot()`` dict."""
+    budget, latency, burn, viol = [], [], [], []
+    for tenant, st in sorted(slo.items()):
+        t = f'tenant="{_prom_escape(str(tenant))}"'
+        prio = f'priority="{_prom_escape(str(st.get("priority", "")))}"'
+        for q, key in (("0.95", "p95_budget_s"), ("0.99", "p99_budget_s")):
+            v = st.get(key)
+            if v is not None and math.isfinite(v):
+                budget.append(
+                    f'repro_slo_budget_seconds{{{t},{prio},'
+                    f'quantile="{q}"}} {_fmt(v)}')
+        for q, key in (("0.95", "p95_s"), ("0.99", "p99_s")):
+            v = st.get(key, 0.0)
+            if math.isfinite(v):
+                latency.append(
+                    f'repro_slo_latency_seconds{{{t},'
+                    f'quantile="{q}"}} {_fmt(v)}')
+        for window in ("fast", "slow"):
+            v = st.get(f"burn_{window}", 0.0)
+            if math.isfinite(v):
+                burn.append(f'repro_slo_burn_rate{{{t},'
+                            f'window="{window}"}} {_fmt(v)}')
+        viol.append(f"repro_slo_violations_total{{{t}}} "
+                    f"{int(st.get('violations', 0))}")
+    lines = []
+    for name, kind, help_txt, samples in (
+            ("repro_slo_budget_seconds", "gauge",
+             "Per-tenant tail-latency SLO budget (plan-derived).", budget),
+            ("repro_slo_latency_seconds", "gauge",
+             "Per-tenant measured tail latency over the SLO window.",
+             latency),
+            ("repro_slo_burn_rate", "gauge",
+             "Error-budget burn rate (1.0 = exactly at contract).", burn),
+            ("repro_slo_violations_total", "counter",
+             "Edge-triggered SLO violation events.", viol)):
+        if samples:
+            lines += [f"# HELP {name} {help_txt}", f"# TYPE {name} {kind}",
+                      *samples]
+    return lines
 
 
 _SAMPLE_RE = re.compile(
@@ -156,9 +216,11 @@ def parse_prometheus(text: str) -> list[dict]:
     return samples
 
 
-def write_prometheus(stats: dict, path, *, metric: str = _PROM_METRIC):
+def write_prometheus(stats: dict, path, *, metric: str = _PROM_METRIC,
+                     dropped: int | None = None, slo: dict | None = None):
     """Write the Prometheus snapshot; returns the path."""
     p = pathlib.Path(path)
     p.parent.mkdir(parents=True, exist_ok=True)
-    p.write_text(prometheus_text(stats, metric=metric))
+    p.write_text(prometheus_text(stats, metric=metric, dropped=dropped,
+                                 slo=slo))
     return p

@@ -65,7 +65,7 @@ import os
 import pathlib
 
 PLAN_SCHEMA_VERSION = 3
-PLANNER_VERSION = "plan-4"      # bump on any search/cost-model change
+PLANNER_VERSION = "plan-5"      # bump on any search/cost-model change
 
 
 @dataclasses.dataclass(frozen=True)

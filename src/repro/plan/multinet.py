@@ -279,6 +279,22 @@ def _cached_or(plan: DeploymentPlan, cache) -> DeploymentPlan:
     return dataclasses.replace(hit, serve=serve)
 
 
+def _with_slo(serve: dict, kind: str, budget_s: float) -> dict:
+    """The tail contract + priority class, written into the plan's serve
+    section so the runtime (:class:`repro.obs.slo.SloMonitor`,
+    :class:`repro.serve.Router`) needs no side channel: p95 at the
+    mean-style latency budget (``budget_factor x (planned + crossing)``),
+    p99 at 1.5x that — the headroom a nearest-rank p99 needs over p95 under
+    the planner's own jitter model.  Edge tenants default ``critical`` (the
+    trigger path the paper's fixed-latency budgets are about), LM tenants
+    ``standard``."""
+    return {
+        **serve,
+        "priority": "standard" if kind == "lm" else "critical",
+        "slo": {"p95_s": budget_s, "p99_s": 1.5 * budget_s},
+    }
+
+
 def _plan_fleet_aie(graphs, ids, *, key: str, budget_factor: float,
                     cache, opts: dict) -> FleetPlan:
     pl, aie = opts["pl"], opts["aie"]
@@ -315,11 +331,13 @@ def _plan_fleet_aie(graphs, ids, *, key: str, budget_factor: float,
         crossing = boundary.crossing_cost_aie(
             last.out_bytes(g.batch), plan.est_latency_s, aie=aie)
         cols_used = _band1_cols(plan)
+        budget = budget_factor * (plan.est_latency_s + crossing)
+        plan = dataclasses.replace(plan, serve=_with_slo(plan.serve, g.kind,
+                                                         budget))
         tenants.append(TenantPlan(
             net_id=net_id, plan=plan, col_offset=col, cols=cols_used,
             crossing_s=crossing,
-            latency_budget_s=budget_factor
-            * (plan.est_latency_s + crossing)))
+            latency_budget_s=budget))
         col += cols_used
 
     est = max(t.total_latency_s for t in tenants)
@@ -358,11 +376,13 @@ def _plan_fleet_tpu(graphs, ids, *, key: str, budget_factor: float,
         plan = _cached_or(dataclasses.replace(plan, serve=serve), cache)
         crossing = boundary.crossing_cost_tpu(g.nodes[-1].out_bytes(g.batch),
                                               tpu)
+        budget = budget_factor * (plan.est_latency_s + crossing)
+        plan = dataclasses.replace(plan, serve=_with_slo(plan.serve, g.kind,
+                                                         budget))
         tenants.append(TenantPlan(
             net_id=net_id, plan=plan, col_offset=0, cols=0,
             crossing_s=crossing,
-            latency_budget_s=budget_factor
-            * (plan.est_latency_s + crossing)))
+            latency_budget_s=budget))
     est = max(t.total_latency_s for t in tenants)
     return FleetPlan(name="+".join(ids), target="tpu", key=key,
                      tenants=tuple(tenants), est_latency_s=est)

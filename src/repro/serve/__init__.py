@@ -8,8 +8,8 @@ co-resident networks dispatched by net id under per-tenant latency budgets.
 
 from repro.serve.metrics import TenantMetrics, write_serve_snapshots
 from repro.serve.router import Router, TenantOverBudget, TenantQueueFull
-from repro.serve.tenant import Tenant, edge_tenant, lm_tenant
+from repro.serve.tenant import Tenant, edge_tenant, lm_tenant, plan_priority
 
 __all__ = ["Router", "Tenant", "TenantMetrics", "TenantOverBudget",
-           "TenantQueueFull", "edge_tenant", "lm_tenant",
+           "TenantQueueFull", "edge_tenant", "lm_tenant", "plan_priority",
            "write_serve_snapshots"]

@@ -365,15 +365,24 @@ class ContinuousBatcher:
         self._record("prefill_chunk", t0, time.perf_counter(), trace=req.rid,
                      tokens=limit - first, slot=i)
 
-    def _admit(self, wait_s: float = 0.0) -> int:
+    def _admit(self, wait_s: float = 0.0, admit_cap: int | None = None) -> int:
         """Fill free slots from the queue.  ``wait_s > 0`` blocks on the
         FIRST pop (``queue.get(timeout=...)``) so an idle serving loop parks
-        in the kernel instead of spinning on ``queue.empty()``."""
+        in the kernel instead of spinning on ``queue.empty()``.
+
+        ``admit_cap`` tightens the policy's per-tick admission bound for
+        THIS tick only (the router's SLO-aware deferral passes 0 to hold a
+        lower-priority tenant's queue while a higher-priority tenant burns
+        its budget — live slots keep decoding either way)."""
+        caps = [c for c in (self.policy.admit_per_tick, admit_cap)
+                if c is not None]
+        cap = min(caps) if caps else None
+        if cap is not None and cap <= 0:
+            return 0
         admitted = 0
         for i in range(self.slots):
             if self.active[i] is not None:
                 continue
-            cap = self.policy.admit_per_tick
             if cap is not None and admitted >= cap:
                 break
             try:
@@ -405,12 +414,15 @@ class ContinuousBatcher:
                             trace=req.rid, tenant=self.trace_label,
                             tokens_out=len(req.out))
 
-    def step(self, wait_s: float = 0.0) -> int:
+    def step(self, wait_s: float = 0.0, *,
+             admit_cap: int | None = None) -> int:
         """One tick: admit, advance chunked prefills, decode live slots.
         Returns #active.  ``wait_s`` bounds the blocking idle wait — applied
         only when EVERY slot is empty, so a busy batcher never stalls its
-        live decodes waiting for new arrivals."""
-        self._admit(wait_s=wait_s if not any(self.active) else 0.0)
+        live decodes waiting for new arrivals.  ``admit_cap`` tightens this
+        tick's admissions (0 = defer the queue, keep decoding)."""
+        self._admit(wait_s=wait_s if not any(self.active) else 0.0,
+                    admit_cap=admit_cap)
         # Slots mid-prefill (including just-admitted ones) advance by one
         # chunk instead of decoding; with no chunk configured the whole
         # prompt lands in this tick, which is the pre-policy behavior.

@@ -96,6 +96,13 @@ class TenantMetrics:
         return percentile(self._latencies, 0.95)
 
     @property
+    def p99_s(self) -> float:
+        """Tail of the window — what the SLO monitor's p99 contracts and
+        the replay snapshots judge (nearest-rank, like every percentile in
+        the repo)."""
+        return percentile(self._latencies, 0.99)
+
+    @property
     def occupancy(self) -> float:
         """Mean fraction of slots busy across observed ticks."""
         return self._occ_sum / self._occ_n if self._occ_n else 0.0
@@ -110,6 +117,7 @@ class TenantMetrics:
             "mean_s": _finite(self.mean_s, 0.0),
             "p50_s": _finite(self.p50_s, 0.0),
             "p95_s": _finite(self.p95_s, 0.0),
+            "p99_s": _finite(self.p99_s, 0.0),
             "latency_budget_s": _finite(self.latency_budget_s),
             "budget_violations": self.budget_violations,
             "invalid_observations": self.invalid_observations,
@@ -167,6 +175,9 @@ def write_serve_snapshots(report: dict, json_dir, *,
                  round(snap["p50_s"] * 1e6, 3), "derived": derived},
                 {"name": f"serve/{nid}/p95", "us_per_call":
                  round(snap["p95_s"] * 1e6, 3), "derived": derived},
+                {"name": f"serve/{nid}/p99", "us_per_call":
+                 round(snap.get("p99_s", snap["p95_s"]) * 1e6, 3),
+                 "derived": derived},
                 {"name": f"serve/{nid}/mean", "us_per_call":
                  round(snap["mean_s"] * 1e6, 3), "derived": derived},
             ]

@@ -51,6 +51,16 @@ Two further plan-driven controls:
   decode-step windows are maintained by the batcher unconditionally —
   LM drift works with tracing disabled.
 
+* **SLO-aware priority scheduling** — with ``slo=`` (a
+  :class:`repro.obs.slo.SloMonitor`) the router feeds every completed
+  request into the monitor and turns its burn-rate signal into scheduling:
+  LM tenants tick priority-first, and while any tenant is actively burning
+  its p95 budget, strictly lower-priority tenants admit nothing
+  (``admit_cap=0`` — live slots keep decoding) and have their queue-depth
+  bound halved.  Deferral ages out after ``defer_limit`` consecutive ticks
+  so a backlog is slowed, never starved; shedding remains the last resort.
+  Every deferral lands as a ``sched/defer`` audit span.
+
 Pass ``tracer=`` (a :class:`repro.obs.Tracer`) to thread request-grain
 spans through every tenant engine: edge requests emit ``infer`` +
 ``request`` spans, LM requests decompose into ``queue`` / ``prefill_chunk``
@@ -65,6 +75,7 @@ import time
 from typing import Iterable
 
 from repro.obs import NULL_TRACER
+from repro.obs.slo import priority_rank
 from repro.serve.tenant import Tenant, edge_tenant, lm_tenant
 
 
@@ -80,7 +91,8 @@ class Router:
     def __init__(self, tenants: Iterable[Tenant], *,
                  shed_after: int | None = None, fleet=None,
                  drift_threshold: float | None = None,
-                 drift_min_samples: int = 5, cache=None, tracer=None):
+                 drift_min_samples: int = 5, cache=None, tracer=None,
+                 slo=None, defer_limit: int = 4):
         self._tenants: dict[str, Tenant] = {}
         for t in tenants:
             if t.net_id in self._tenants:
@@ -106,6 +118,14 @@ class Router:
         self._inflight: dict[str, list[tuple]] = {
             nid: [] for nid in self._tenants}
         self._refused: dict[str, int] = {nid: 0 for nid in self._tenants}
+        # SLO-aware scheduling (see repro.obs.slo): the monitor is fed
+        # every completed request and read by the tick/admission policy.
+        self.slo = slo
+        if defer_limit < 1:
+            raise ValueError(f"defer_limit must be >= 1, got {defer_limit}")
+        self.defer_limit = defer_limit
+        self._defer_streak: dict[str, int] = {
+            nid: 0 for nid in self._tenants}
 
     # -- construction -----------------------------------------------------
     @classmethod
@@ -113,6 +133,7 @@ class Router:
                    lm: dict | None = None, shed_after: int | None = None,
                    drift_threshold: float | None = None,
                    drift_min_samples: int = 5, cache=None, tracer=None,
+                   slo=None, defer_limit: int = 4,
                    x_scale: float = 0.05, seed: int = 0) -> "Router":
         """Build a router from a :class:`FleetPlan`.
 
@@ -143,7 +164,7 @@ class Router:
         return cls(tenants, shed_after=shed_after, fleet=fleet,
                    drift_threshold=drift_threshold,
                    drift_min_samples=drift_min_samples, cache=cache,
-                   tracer=tracer)
+                   tracer=tracer, slo=slo, defer_limit=defer_limit)
 
     # -- lookup -----------------------------------------------------------
     def tenant(self, net_id: str) -> Tenant:
@@ -177,11 +198,19 @@ class Router:
         # Queue-depth-aware admission (LM path): refuse BEFORE the backlog
         # outgrows the plan's depth bound, not only after budget violations.
         bound = self.queue_depth_bound(t.net_id)
-        if bound is not None and t.kind == "lm" \
-                and t.engine.queue.qsize() >= bound:
-            raise TenantQueueFull(
-                f"tenant {t.net_id!r} queue at plan depth bound "
-                f"({t.engine.queue.qsize()}/{bound}); retry after a tick")
+        if bound is not None and t.kind == "lm":
+            # SLO pressure halves a lower-priority tenant's depth bound
+            # while a higher-priority tenant is burning budget: its backlog
+            # will drain slower under deferral, so the same depth would
+            # mean strictly worse tail latency for its own requests.
+            pressure = (self.slo.pressure_rank()
+                        if self.slo is not None else None)
+            if pressure is not None and priority_rank(t.priority) > pressure:
+                bound = max(1, bound // 2)
+            if t.engine.queue.qsize() >= bound:
+                raise TenantQueueFull(
+                    f"tenant {t.net_id!r} queue at plan depth bound "
+                    f"({t.engine.queue.qsize()}/{bound}); retry after a tick")
         if self.shed_after is None \
                 or t.metrics.consecutive_violations < self.shed_after:
             return
@@ -245,6 +274,8 @@ class Router:
         y = t.engine.infer(x)
         t1 = time.perf_counter()
         t.metrics.observe_latency(t1 - t0)
+        if self.slo is not None:
+            self.slo.observe(net_id, t1 - t0)
         if self.tracer.enabled:
             # The router-grain envelope around the engine's own ``infer``
             # span; the engine numbered this call, so reuse its counter as
@@ -264,12 +295,66 @@ class Router:
         t.engine.submit(request)
         return request
 
+    def lm_pending(self) -> bool:
+        """True while any LM tenant holds queued or in-slot work — the
+        open-loop replay driver's "should I tick or sleep" predicate."""
+        return any(not t.engine.queue.empty() or t.engine.n_active
+                   for t in self._tenants.values() if t.kind == "lm")
+
+    def _deferrals(self, lm_order: list[Tenant]) -> set[str]:
+        """SLO-aware tick policy: while any tenant is actively burning its
+        p95 budget (``slo.at_risk``), strictly LOWER-priority LM tenants
+        with queued work admit nothing this tick (``admit_cap=0``) — their
+        live slots keep decoding, but free capacity goes to the pressured
+        class first.  Deferral is bounded: after ``defer_limit`` consecutive
+        deferred ticks the tenant admits anyway (aging), so a permanently
+        at-risk tenant can slow a batch-class backlog but never starve it.
+        Every deferral is emitted as a zero-duration ``sched/defer`` audit
+        span, so priority decisions are inspectable in the trace."""
+        if self.slo is None:
+            return set()
+        pressure = self.slo.pressure_rank()
+        if pressure is None:
+            for nid in self._defer_streak:
+                self._defer_streak[nid] = 0
+            return set()
+        deferred = set()
+        for t in lm_order:
+            nid = t.net_id
+            if priority_rank(t.priority) <= pressure \
+                    or t.engine.queue.empty():
+                self._defer_streak[nid] = 0
+                continue
+            streak = self._defer_streak[nid]
+            if streak >= self.defer_limit:
+                self._defer_streak[nid] = 0      # aged out: admit this tick
+                continue
+            self._defer_streak[nid] = streak + 1
+            deferred.add(nid)
+            if self.tracer.enabled:
+                now = time.perf_counter()
+                self.tracer.add("sched/defer", now, now, tenant=nid,
+                                priority=t.priority, pressure_rank=pressure,
+                                streak=streak + 1)
+        return deferred
+
     def step(self, wait_s: float = 0.0) -> int:
         """Tick every LM tenant's batcher once; returns total active slots.
         The blocking idle wait ``wait_s`` is applied only when EVERY LM
         tenant is idle, and at most once per router tick — one idle tenant
-        must not stall a busy co-tenant's decodes."""
+        must not stall a busy co-tenant's decodes.
+
+        Tick order is priority-first (burn-rate breaks ties inside a
+        class), and with an SLO monitor attached lower-priority tenants may
+        have their admissions deferred for this tick — see
+        :meth:`_deferrals`."""
         lm = [t for t in self._tenants.values() if t.kind == "lm"]
+        if self.slo is not None:
+            lm.sort(key=lambda t: (priority_rank(t.priority),
+                                   -self.slo.burn_rate(t.net_id)))
+        else:
+            lm.sort(key=lambda t: priority_rank(t.priority))
+        deferred = self._deferrals(lm)
         all_idle = all(t.engine.n_active == 0 and t.engine.queue.empty()
                        for t in lm)
         remaining_wait = wait_s if all_idle else 0.0
@@ -277,7 +362,8 @@ class Router:
         for t in lm:
             nid = t.net_id
             steps_before = getattr(t.engine, "decode_steps_observed", 0)
-            n = t.engine.step(wait_s=remaining_wait)
+            n = t.engine.step(wait_s=remaining_wait,
+                              admit_cap=0 if nid in deferred else None)
             remaining_wait = 0.0
             t.metrics.observe_occupancy(t.engine.n_active, t.slots)
             total += n
@@ -287,6 +373,8 @@ class Router:
             for req, t0 in self._inflight[nid]:
                 if req.done:
                     t.metrics.observe_latency(now - t0)
+                    if self.slo is not None:
+                        self.slo.observe(nid, now - t0)
                 else:
                     still.append((req, t0))
             self._inflight[nid] = still
@@ -397,14 +485,18 @@ class Router:
     def report(self) -> dict:
         """Per-tenant metrics + planned-vs-budget context."""
         out = {}
+        slo_snap = self.slo.snapshot() if self.slo is not None else {}
         for nid, t in self._tenants.items():
             snap = t.metrics.snapshot()
             snap["planned_latency_s"] = t.plan.est_latency_s
             snap["kind"] = t.kind
+            snap["priority"] = t.priority
             snap["shed"] = self.over_budget(nid)
             snap["drift"] = self.drift(nid)
             if hasattr(t.engine, "span_stats"):
                 snap["spans"] = t.engine.span_stats()
+            if nid in slo_snap:
+                snap["slo"] = slo_snap[nid]
             out[nid] = snap
         return out
 
@@ -413,3 +505,7 @@ class Router:
         for t in self._tenants.values():
             t.metrics.reset()
         self._refused = {nid: 0 for nid in self._tenants}
+        self._defer_streak = {nid: 0 for nid in self._tenants}
+        if self.slo is not None:
+            # Warmup samples (jit compile) must not pre-burn the budget.
+            self.slo.reset()

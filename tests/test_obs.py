@@ -454,6 +454,27 @@ def test_traced_build_emits_stage_spans(tmp_path):
     assert samples
 
 
+def test_tracer_saturation_surfaces_in_summary_and_prometheus(tmp_path):
+    """Regression: once the span ring buffer fills, the dropped count must
+    surface in BOTH reporting sinks (``summary()`` and the Prometheus
+    snapshot) — a truncated trace that looks complete is the failure
+    mode."""
+    from repro.deploy import Deployment
+    dep = Deployment.build("jet_tagger", machine_model=None,
+                           stop_after="plan", trace=True,
+                           cache=plan_lib.PlanCache())
+    dep.tracer.maxlen = len(dep.tracer.spans) + 2
+    for i in range(10):                        # saturate past maxlen
+        dep.tracer.add("probe", 0.0, 1e-6, tenant="t")
+    assert dep.tracer.dropped == 8
+    assert "(8 dropped)" in dep.summary()
+    samples = parse_prometheus(
+        dep.export_prometheus(tmp_path / "m.prom").read_text())
+    (drop,) = [s for s in samples
+               if s["name"] == "repro_tracer_dropped_total"]
+    assert drop["value"] == 8.0
+
+
 def test_untraced_build_uses_null_tracer():
     from repro.deploy import Deployment
     dep = Deployment.build("jet_tagger", machine_model=None,

@@ -1,0 +1,457 @@
+"""Traffic replay + SLO observability tests: trace format + scenario
+generators (determinism, spike density, JSONL round-trip), the open-loop
+replay driver (fake-router unit level + a real edge fleet), the SLO
+monitor (edge-triggered violations, burn rates, re-arm), priority-aware
+deferral in the router, serve-metrics percentile edges, and the new
+Prometheus families."""
+
+import json
+import math
+
+import pytest
+
+from repro.obs import (SloBudget, SloMonitor, Tracer, parse_prometheus,
+                       priority_rank, prometheus_text, workload)
+from repro.obs.workload import TraceRequest
+from repro.serve import TenantMetrics
+
+TENANTS = {"jet_tagger": "edge", "tau_select": "edge", "lm0": "lm"}
+
+
+# ---------------------------------------------------------------------------
+# Scenario generators + trace format
+# ---------------------------------------------------------------------------
+
+def test_scenarios_deterministic_and_nonempty():
+    for name in workload.SCENARIOS:
+        kw = dict(duration_s=0.1, lm_rate_hz=120.0, seed=7)
+        a = workload.make_scenario(name, TENANTS, **kw)
+        b = workload.make_scenario(name, TENANTS, **kw)
+        assert a == b, name                     # same seed, same trace
+        assert a, name
+        c = workload.make_scenario(name, TENANTS, **{**kw, "seed": 8})
+        assert a != c, name                     # seed actually matters
+        # rids are sequential in arrival order (the merge-sort contract).
+        assert [r.rid for r in a] == list(range(len(a)))
+        arrivals = [r.arrival_s for r in a]
+        assert arrivals == sorted(arrivals)
+        assert all(0 <= t < 0.1 for t in arrivals)
+        # Every tenant with a positive rate offers something at these knobs.
+        assert {r.tenant for r in a} == set(TENANTS)
+
+
+def test_flash_crowd_spike_density():
+    """The spike window must be much denser than the baseline around it."""
+    reqs = workload.flash_crowd({"n": "edge"}, duration_s=1.0, rate_hz=300.0,
+                                seed=3, spike_factor=8.0, spike_start=0.4,
+                                spike_frac=0.2)
+    in_spike = sum(1 for r in reqs if 0.4 <= r.arrival_s < 0.6)
+    before = sum(1 for r in reqs if 0.0 <= r.arrival_s < 0.2)
+    assert in_spike > 3 * max(1, before)
+
+
+def test_trace_jsonl_roundtrip(tmp_path):
+    reqs = workload.make_scenario("bursty", TENANTS, duration_s=0.05, seed=1)
+    p = workload.save_trace(reqs, tmp_path / "trace.jsonl")
+    # Strict JSON, one object per line.
+    for line in p.read_text().splitlines():
+        json.loads(line, parse_constant=lambda c: 1 / 0)
+    assert workload.load_trace(p) == reqs
+
+
+def test_trace_request_validation():
+    with pytest.raises(ValueError, match="kind"):
+        TraceRequest(arrival_s=0.0, tenant="x", kind="gpu")
+    with pytest.raises(ValueError, match="arrival_s"):
+        TraceRequest(arrival_s=-1.0, tenant="x")
+    with pytest.raises(ValueError, match="unknown scenario"):
+        workload.make_scenario("tsunami", TENANTS)
+    with pytest.raises(ValueError, match="duration_s"):
+        workload.steady(TENANTS, duration_s=0.0)
+
+
+def test_smoke_trace_shape():
+    reqs = workload.smoke_trace(TENANTS, edge_iters=4, lm_requests=2)
+    by_tenant = {}
+    for r in reqs:
+        by_tenant.setdefault(r.tenant, []).append(r)
+    assert len(by_tenant["jet_tagger"]) == 4
+    assert len(by_tenant["lm0"]) == 2
+    assert all(r.kind == "lm" for r in by_tenant["lm0"])
+    assert [r.rid for r in reqs] == list(range(len(reqs)))
+
+
+# ---------------------------------------------------------------------------
+# Open-loop replay driver (fake router: no jax, no engines)
+# ---------------------------------------------------------------------------
+
+class _FakeRouter:
+    """Edge-only router stub: records calls, optionally refuses."""
+
+    def __init__(self, refuse=None):
+        self.calls = []
+        self.refuse = refuse or {}
+
+    def default_inputs(self):
+        return {t: None for t in TENANTS}
+
+    def infer(self, nid, x):
+        self.calls.append(nid)
+        exc = self.refuse.get(nid)
+        if exc is not None:
+            raise exc
+        return x
+
+    def step(self, wait_s=0.0):
+        return 0
+
+    def run_until_drained(self, max_ticks=0):
+        return 0
+
+
+def test_replay_fake_router_records_and_lag():
+    reqs = [TraceRequest(arrival_s=i * 1e-3, tenant="jet_tagger", rid=i)
+            for i in range(5)]
+    router = _FakeRouter()
+    report = workload.replay(router, reqs)
+    assert len(report.records) == 5
+    assert router.calls == ["jet_tagger"] * 5
+    for r in report.records:
+        assert r.status == "ok"
+        assert r.e2e_s is not None and r.e2e_s >= 0
+        assert r.lag_s >= 0                 # fired at-or-after schedule
+    s = report.summary()["jet_tagger"]
+    assert s["ok"] == 5 and s["shed"] == 0
+    assert math.isfinite(s["p99_s"]) and math.isfinite(s["lag_p95_s"])
+
+
+def test_replay_records_refusals_as_data():
+    """Open loop: back-pressure must be recorded, never raised."""
+    from repro.serve.router import TenantOverBudget, TenantQueueFull
+    reqs = [TraceRequest(arrival_s=0.0, tenant="jet_tagger", rid=0),
+            TraceRequest(arrival_s=0.0, tenant="tau_select", rid=1)]
+    router = _FakeRouter(refuse={
+        "jet_tagger": TenantOverBudget("jet_tagger shed"),
+        "tau_select": TenantQueueFull("tau_select full")})
+    report = workload.replay(router, reqs)
+    by = {r.tenant: r for r in report.records}
+    assert by["jet_tagger"].status == "shed"
+    assert by["tau_select"].status == "queue_full"
+    assert by["jet_tagger"].e2e_s is None
+    s = report.summary()
+    assert s["jet_tagger"]["shed"] == 1
+    assert s["tau_select"]["queue_full"] == 1
+    assert s["jet_tagger"]["p95_s"] == 0.0  # empty ok-window reads 0, not NaN
+
+
+def test_replay_speed_validation():
+    with pytest.raises(ValueError, match="speed"):
+        workload.replay(_FakeRouter(), [], speed=0.0)
+
+
+def test_replay_real_edge_fleet():
+    """The driver against a live router: every smoke request serves ok and
+    the router's own metrics agree with the replay record count."""
+    from repro import plan as plan_lib
+    from repro.models import edge
+    from repro.serve import Router
+    fleet = plan_lib.plan_fleet([edge.edge_config("jet_tagger")],
+                                target="tpu")
+    router = Router.from_fleet(fleet)
+    inputs = router.warmup()
+    trace = workload.smoke_trace({"jet_tagger": "edge"}, edge_iters=6)
+    report = workload.replay(router, trace, inputs=inputs)
+    assert [r.status for r in report.records] == ["ok"] * 6
+    assert router.report()["jet_tagger"]["count"] == 6
+
+
+def test_write_replay_snapshots_rows(tmp_path):
+    reqs = [TraceRequest(arrival_s=i * 1e-3, tenant="jet_tagger", rid=i)
+            for i in range(4)]
+    report = workload.replay(_FakeRouter(), reqs)
+    report.scenario = "steady"
+    slo = SloMonitor([SloBudget("jet_tagger", p95_s=0.5, p99_s=0.75)])
+    paths = workload.write_replay_snapshots(report, tmp_path, slo=slo)
+    assert [p.name for p in paths] == \
+        ["BENCH_serve_jet_tagger__steady.json"]
+    doc = json.loads(paths[0].read_text(), parse_constant=lambda c: 1 / 0)
+    rows = {r["name"]: r for r in doc["rows"]}
+    assert rows["serve/jet_tagger/steady/offered"]["us_per_call"] == 4.0
+    assert "src=model" in rows["serve/jet_tagger/steady/offered"]["derived"]
+    assert rows["serve/jet_tagger/steady/slo_p95_budget"]["us_per_call"] \
+        == pytest.approx(0.5e6)
+    for pct in ("p50", "p95", "p99", "max"):
+        r = rows[f"serve/jet_tagger/steady/{pct}"]
+        assert "src=measured" in r["derived"]
+        assert math.isfinite(r["us_per_call"])
+    assert "serve/jet_tagger/steady/lag/p95" in rows
+    # The human report renders without a monitor and with one.
+    assert "jet_tagger" in workload.format_replay(report)
+    assert "slo:" in workload.format_replay(report, slo=slo)
+
+
+# ---------------------------------------------------------------------------
+# SLO monitor
+# ---------------------------------------------------------------------------
+
+def _mon(**kw):
+    kw.setdefault("window", 32)
+    kw.setdefault("min_samples", 5)
+    kw.setdefault("fast_window", 8)
+    kw.setdefault("slow_window", 16)
+    return SloMonitor([SloBudget("a", p95_s=1e-3, p99_s=2e-3,
+                                 priority="critical"),
+                       SloBudget("b", p95_s=1.0, p99_s=2.0,
+                                 priority="batch")], **kw)
+
+
+def test_slo_violation_edge_triggered_and_rearm():
+    m = _mon()
+    for _ in range(10):
+        m.observe("a", 5e-3)                  # 5x over the p95 budget
+    counts = m.violation_counts()
+    assert counts["a"] >= 1 and counts["b"] == 0
+    n = len(m.violations)
+    for _ in range(5):
+        m.observe("a", 5e-3)                  # still violating: no new event
+    assert len(m.violations) == n
+    for _ in range(64):
+        m.observe("a", 1e-5)                  # back under budget: re-arm
+    assert not m.snapshot()["a"]["in_violation"]
+    for _ in range(64):
+        m.observe("a", 5e-3)                  # second violation episode
+    assert len(m.violations) > n
+
+
+def test_slo_burn_rate_and_pressure():
+    m = _mon()
+    for _ in range(20):
+        m.observe("a", 5e-3)
+    assert m.burn_rate("a", "fast") == pytest.approx(1 / 0.05)
+    assert m.at_risk("a")
+    assert not m.at_risk("b")
+    assert m.pressure_rank() == priority_rank("critical") == 0
+    m.reset()                                 # budgets survive a reset
+    assert m.pressure_rank() is None
+    assert m.budgets["a"].p95_s == 1e-3
+
+
+def test_slo_observe_ignores_unknown_and_nonfinite():
+    m = _mon()
+    m.observe("nobody", 1.0)
+    m.observe("a", float("nan"))
+    m.observe("a", float("inf"))
+    assert m.snapshot()["a"]["count"] == 0
+
+
+def test_slo_set_budget_and_validation():
+    m = _mon()
+    m.set_budget("b", p95_s=1e-9, p99_s=1e-9)
+    for _ in range(10):
+        m.observe("b", 1e-3)
+    assert m.violation_counts()["b"] >= 1
+    with pytest.raises(ValueError, match="> 0"):
+        SloBudget("x", p95_s=0.0)
+    with pytest.raises(ValueError, match="priority"):
+        SloBudget("x", priority="mega")
+    with pytest.raises(ValueError, match="duplicate"):
+        SloMonitor([SloBudget("x"), SloBudget("x")])
+
+
+def test_slo_budget_from_plan_fallback():
+    """Plans without a serve['slo'] section fall back to the mean-style
+    latency budget (p99 = 1.5x), so old cached artifacts keep a contract."""
+    class _Plan:
+        serve = {}
+        kind = "edge"
+    b = SloBudget.from_plan("t", _Plan(), latency_budget_s=2e-3)
+    assert b.p95_s == pytest.approx(2e-3)
+    assert b.p99_s == pytest.approx(3e-3)
+    assert b.priority == "critical"
+
+    class _LmPlan:
+        serve = {"slo": {"p95_s": 0.5, "p99_s": 0.9},
+                 "priority": "standard"}
+        kind = "lm"
+    b = SloBudget.from_plan("t", _LmPlan())
+    assert (b.p95_s, b.p99_s, b.priority) == (0.5, 0.9, "standard")
+
+
+def test_fleet_plans_carry_slo_section():
+    """The fleet planner writes serve['slo'] + serve['priority'] so the
+    monitor needs no side channel."""
+    from repro import configs
+    from repro import plan as plan_lib
+    from repro.models import edge
+    fleet = plan_lib.plan_fleet(
+        [edge.edge_config("jet_tagger"), configs.get("qwen2_5_3b").smoke],
+        target="tpu")
+    edge_t, lm_t = fleet.tenants
+    assert edge_t.plan.serve["priority"] == "critical"
+    assert lm_t.plan.serve["priority"] == "standard"
+    for t in fleet.tenants:
+        slo = t.plan.serve["slo"]
+        assert 0 < slo["p95_s"] < slo["p99_s"]
+        assert slo["p95_s"] == pytest.approx(t.latency_budget_s)
+    mon = SloMonitor.from_fleet(fleet)
+    assert mon.budgets[edge_t.net_id].priority == "critical"
+    assert mon.budgets[lm_t.net_id].rank == 1
+
+
+def test_slo_violation_audit_span():
+    tracer = Tracer(enabled=True)
+    m = SloMonitor([SloBudget("a", p95_s=1e-6, p99_s=2e-6)],
+                   min_samples=3, tracer=tracer)
+    for _ in range(5):
+        m.observe("a", 1e-3)
+    spans = [s for s in tracer.spans if s.name == "slo/violation"]
+    assert spans and spans[0].attrs["tenant"] == "a"
+    assert spans[0].dur_s == 0.0              # an event, not an interval
+
+
+# ---------------------------------------------------------------------------
+# Priority-aware deferral in the router
+# ---------------------------------------------------------------------------
+
+def _lm_router(tracer=None, slo=None, defer_limit=4):
+    import jax
+
+    from repro import configs
+    from repro import plan as plan_lib
+    from repro.models import api
+    from repro.serve import Router
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    fleet = plan_lib.plan_fleet([cfg], target="tpu", serve_slots_total=2,
+                                prefill_chunk=2)
+    nid = fleet.net_ids[0]
+    router = Router.from_fleet(fleet, lm={nid: (cfg, params)},
+                               tracer=tracer, slo=slo,
+                               defer_limit=defer_limit)
+    return router, nid
+
+
+def test_router_defers_lower_priority_under_pressure_but_never_starves():
+    """With a critical tenant at risk, a standard LM tenant's admissions
+    are deferred (sched/defer audit spans) — but aging admits it within
+    defer_limit ticks, so the queue still drains."""
+    from repro.serve import engine
+    tracer = Tracer(enabled=True)
+    slo = SloMonitor([SloBudget("edge0", p95_s=1e-6, p99_s=2e-6,
+                                priority="critical")],
+                     min_samples=5, fast_window=8, slow_window=16,
+                     tracer=tracer)
+    router, nid = _lm_router(tracer=tracer, slo=slo, defer_limit=3)
+    slo.budgets[nid] = SloBudget(nid, p95_s=1.0, p99_s=2.0,
+                                 priority="standard")
+    for _ in range(20):                       # critical tenant burning
+        slo.observe("edge0", 1e-3)
+    assert slo.pressure_rank() == 0
+    req = engine.Request(rid=0, prompt=__import__("numpy").array(
+        [3, 5, 7], "int32"), max_new=3)
+    router.submit(nid, req)
+    router.run_until_drained(max_ticks=300)
+    assert req.done                           # aging beat starvation
+    defers = [s for s in tracer.spans if s.name == "sched/defer"]
+    assert defers, "no sched/defer audit span under pressure"
+    assert defers[0].attrs["tenant"] == nid
+    assert defers[0].attrs["pressure_rank"] == 0
+
+
+def test_router_no_deferral_without_pressure():
+    from repro.serve import engine
+    tracer = Tracer(enabled=True)
+    router, nid = _lm_router(tracer=tracer)
+    req = engine.Request(rid=0, prompt=__import__("numpy").array(
+        [3, 5, 7], "int32"), max_new=3)
+    router.submit(nid, req)
+    router.run_until_drained(max_ticks=300)
+    assert req.done
+    assert not [s for s in tracer.spans if s.name == "sched/defer"]
+
+
+def test_router_slo_fed_by_edge_traffic():
+    """router.infer feeds the monitor; report() carries the slo block."""
+    import jax
+
+    from repro import plan as plan_lib
+    from repro.models import edge
+    from repro.serve import Router
+    fleet = plan_lib.plan_fleet([edge.edge_config("jet_tagger")],
+                                target="tpu")
+    slo = SloMonitor.from_fleet(fleet, min_samples=3)
+    router = Router.from_fleet(fleet, slo=slo)
+    cfg = edge.edge_config("jet_tagger")
+    x = jax.random.normal(jax.random.PRNGKey(1), (cfg.batch, cfg.dims[0]))
+    for _ in range(5):
+        router.infer("jet_tagger", x)
+    snap = slo.snapshot()["jet_tagger"]
+    assert snap["count"] == 5
+    rep = router.report()["jet_tagger"]
+    assert rep["priority"] == "critical"
+    assert rep["slo"]["count"] == 5
+    router.reset_metrics()                    # clears observations too
+    assert slo.snapshot()["jet_tagger"]["count"] == 0
+
+
+def test_router_rejects_bad_defer_limit():
+    from repro import plan as plan_lib
+    from repro.models import edge
+    from repro.serve import Router
+    fleet = plan_lib.plan_fleet([edge.edge_config("jet_tagger")],
+                                target="tpu")
+    with pytest.raises(ValueError, match="defer_limit"):
+        Router.from_fleet(fleet, defer_limit=0)
+
+
+# ---------------------------------------------------------------------------
+# Serve-metrics percentile edges + Prometheus families (satellites)
+# ---------------------------------------------------------------------------
+
+def test_tenant_metrics_percentile_edges():
+    m = TenantMetrics("x", latency_budget_s=1.0)
+    m.observe_latency(3e-3)                   # n=1: all quantiles collapse
+    assert m.p50_s == m.p95_s == m.p99_s == pytest.approx(3e-3)
+    for _ in range(9):
+        m.observe_latency(3e-3)               # all-equal window
+    assert m.p95_s == m.p99_s == pytest.approx(3e-3)
+    snap = m.snapshot()
+    assert snap["p99_s"] == pytest.approx(3e-3)
+
+
+def test_tenant_metrics_window_rollover():
+    m = TenantMetrics("x", latency_budget_s=1.0, window=8)
+    for _ in range(8):
+        m.observe_latency(1.0)
+    for _ in range(8):                        # rolls the slow epoch out
+        m.observe_latency(1e-3)
+    assert m.p99_s == pytest.approx(1e-3)
+    assert m.p50_s == pytest.approx(1e-3)
+
+
+def test_prometheus_tracer_dropped_and_slo_roundtrip():
+    from repro.obs import aggregate
+    tracer = Tracer(enabled=True, maxlen=4)
+    for i in range(9):                        # saturate the ring buffer
+        tracer.add(f"k{i % 2}", 0.0, 1e-3, tenant="t")
+    assert tracer.dropped == 5
+    m = _mon()
+    for _ in range(10):
+        m.observe("a", 5e-3)
+    text = prometheus_text(aggregate(tracer.spans), dropped=tracer.dropped,
+                           slo=m.snapshot())
+    samples = parse_prometheus(text)
+    by_name = {}
+    for s in samples:
+        by_name.setdefault(s["name"], []).append(s)
+    assert by_name["repro_tracer_dropped_total"][0]["value"] == 5.0
+    assert {s["labels"]["tenant"] for s in
+            by_name["repro_slo_budget_seconds"]} == {"a", "b"}
+    assert any(s["labels"] == {"tenant": "a", "window": "fast"}
+               for s in by_name["repro_slo_burn_rate"])
+    viol = {s["labels"]["tenant"]: s["value"]
+            for s in by_name["repro_slo_violations_total"]}
+    assert viol["a"] >= 1.0 and viol["b"] == 0.0
+    lat = [s for s in by_name["repro_slo_latency_seconds"]
+           if s["labels"]["tenant"] == "a"]
+    assert {s["labels"]["quantile"] for s in lat} == {"0.95", "0.99"}
