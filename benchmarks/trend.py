@@ -10,6 +10,8 @@ shows up in the run log instead of silently replacing the old numbers.
   PYTHONPATH=src python -m benchmarks.trend new.json --against old.json
   PYTHONPATH=src python -m benchmarks.trend bench/BENCH_fig8.json --gate
       # CI regression gate: exit 2 when a model-sourced metric regressed
+  PYTHONPATH=src python -m benchmarks.trend new.json --against old.json --explain
+      # forensics: name the span kind + roofline term that moved most
 
 ``run.py`` calls :func:`report` automatically whenever a previous snapshot
 exists at the output path.  ``--gate`` turns the diff into a CI check: any
@@ -36,8 +38,39 @@ import sys
 REGRESSION_PCT = 25.0
 
 
+class SnapshotError(Exception):
+    """A snapshot that cannot be read as BENCH JSON (malformed/truncated).
+
+    Raised instead of letting ``json.JSONDecodeError`` stack-trace out of
+    the CLI: a half-written snapshot is an input error the gate should
+    report in one line with a nonzero exit, not a crash."""
+
+
+def _parse_snapshot(text: str, origin: str) -> dict:
+    try:
+        payload = json.loads(text)
+    except json.JSONDecodeError as e:
+        raise SnapshotError(f"{origin}: malformed snapshot JSON "
+                            f"({e.msg} at line {e.lineno})") from None
+    if not isinstance(payload, dict):
+        raise SnapshotError(f"{origin}: snapshot must be a JSON object, "
+                            f"got {type(payload).__name__}")
+    rows = payload.get("rows", [])
+    if not isinstance(rows, list) or any(
+            not isinstance(r, dict) or "name" not in r
+            or "us_per_call" not in r for r in rows):
+        raise SnapshotError(f"{origin}: 'rows' must be a list of "
+                            f"{{name, us_per_call}} objects")
+    return payload
+
+
 def load(path: str | pathlib.Path) -> dict:
-    return json.loads(pathlib.Path(path).read_text())
+    p = pathlib.Path(path)
+    try:
+        text = p.read_text()
+    except OSError as e:
+        raise SnapshotError(f"{p}: {e.strerror or e}") from None
+    return _parse_snapshot(text, str(p))
 
 
 def load_committed(path: str | pathlib.Path) -> dict | None:
@@ -53,7 +86,7 @@ def load_committed(path: str | pathlib.Path) -> dict | None:
             cwd=root, text=True, stderr=subprocess.DEVNULL)
     except (subprocess.CalledProcessError, OSError, ValueError):
         return None
-    return json.loads(blob)
+    return _parse_snapshot(blob, f"HEAD:{p.name}")
 
 
 def compare(old_payload: dict, new_payload: dict) -> list[dict]:
@@ -120,6 +153,90 @@ def format_delta(d: dict) -> str:
             f"{d['new_us']:.3f}us ({d['delta_pct']:+.1f}%)")
 
 
+def _parse_derived(derived: str) -> dict:
+    """``k=v;k=v`` derived-field pairs as a dict (floats where they parse).
+
+    The profile snapshots embed their roofline-term breakdown here
+    (``t_compute_us=..;t_memory_us=..;t_launch_us=..``) precisely so this
+    forensics pass can attribute a regression to the term that moved."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, _, v = part.partition("=")
+        try:
+            out[k.strip()] = float(v)
+        except ValueError:
+            out[k.strip()] = v.strip()
+    return out
+
+
+def _span_kind_of(name: str) -> str:
+    """The span-kind component of a BENCH row name: row names follow
+    ``<family>/<net>/<kind...>/<metric>`` (``serve/jet/infer/p50``,
+    ``profile/jet/decode_step/ceiling``); two-component names have no
+    kind."""
+    parts = name.split("/")
+    return "/".join(parts[2:-1]) if len(parts) >= 4 else "-"
+
+
+def explain(old_payload: dict, new_payload: dict, *,
+            print_fn=print) -> dict | None:
+    """Regression forensics: name the row, span kind, and roofline term
+    that moved most between two snapshots.
+
+    Ranks changed rows by ``|delta_pct|`` with regressions first, then
+    diffs the term breakdown embedded in the ``derived`` strings
+    (``t_*_us`` keys) of the worst mover and reports the single term whose
+    change explains the most of it.  Returns the structured verdict (None
+    when nothing changed)."""
+    deltas = [d for d in compare(old_payload, new_payload)
+              if "old_us" in d and "new_us" in d and d["old_us"]]
+    movers = [d for d in deltas if abs(d.get("delta_pct", 0.0)) > 0]
+    if not movers:
+        print_fn("[explain] no changed rows between the two snapshots")
+        return None
+    movers.sort(key=lambda d: (d.get("delta_pct", 0.0) <= 0,
+                               -abs(d.get("delta_pct", 0.0))))
+    worst = movers[0]
+    tenant = (worst["name"].split("/") + ["-"])[1]
+    kind = _span_kind_of(worst["name"])
+    print_fn(f"[explain] worst mover: {worst['name']} "
+             f"{worst['old_us']:.3f} -> {worst['new_us']:.3f}us "
+             f"({worst['delta_pct']:+.1f}%)")
+    print_fn(f"[explain] tenant={tenant} span_kind={kind}")
+    old_rows = {r["name"]: r for r in old_payload.get("rows", [])}
+    old_terms = _parse_derived(old_rows.get(worst["name"], {})
+                               .get("derived", ""))
+    new_terms = _parse_derived(worst.get("derived", ""))
+    term_deltas = {
+        k: new_terms[k] - old_terms[k]
+        for k in new_terms
+        if k.startswith("t_") and k in old_terms
+        and isinstance(new_terms[k], float)
+        and isinstance(old_terms[k], float)
+    }
+    verdict = {"name": worst["name"], "tenant": tenant, "span_kind": kind,
+               "delta_pct": worst["delta_pct"], "term": None,
+               "term_delta_us": None}
+    if term_deltas:
+        term = max(term_deltas, key=lambda k: abs(term_deltas[k]))
+        verdict["term"] = term
+        verdict["term_delta_us"] = term_deltas[term]
+        bound_note = ""
+        ob, nb = old_terms.get("bound"), new_terms.get("bound")
+        if ob is not None and nb is not None and ob != nb:
+            bound_note = f"; bound {ob} -> {nb}"
+        print_fn(f"[explain] roofline term moved most: {term} "
+                 f"{old_terms[term]:.4f} -> {new_terms[term]:.4f}us "
+                 f"({term_deltas[term]:+.4f}us){bound_note}")
+    else:
+        print_fn("[explain] no roofline-term breakdown in the derived "
+                 "fields of the worst mover (measured row or pre-profile "
+                 "snapshot) — attribution stops at the span kind")
+    return verdict
+
+
 def report(old_payload: dict, new_payload: dict, *,
            print_fn=print) -> list[dict]:
     """Print per-metric deltas; returns the structured rows."""
@@ -151,6 +268,10 @@ def main(argv: list[str] | None = None) -> int:
                          f"than {REGRESSION_PCT:.0f}%% vs the baseline "
                          "(override: TREND_GATE_OVERRIDE=1 / the "
                          "perf-regression-ok PR label)")
+    ap.add_argument("--explain", action="store_true",
+                    help="regression forensics: name the row, span kind "
+                         "and roofline term that moved most between the "
+                         "two snapshots")
     args = ap.parse_args(argv)
     if args.against and len(args.snapshot) > 1:
         print("--against pairs with exactly one snapshot", file=sys.stderr)
@@ -159,9 +280,14 @@ def main(argv: list[str] | None = None) -> int:
     for snap in args.snapshot:
         if len(args.snapshot) > 1:
             print(f"== {snap}")
-        new_payload = load(snap)
-        old_payload = (load(args.against) if args.against
-                       else load_committed(snap))
+        try:
+            new_payload = load(snap)
+            old_payload = (load(args.against) if args.against
+                           else load_committed(snap))
+        except SnapshotError as e:
+            print(f"trend: {e}", file=sys.stderr)
+            rc = max(rc, 2)
+            continue
         if old_payload is None:
             if args.gate:   # a brand-new snapshot has nothing to regress
                 print(f"[gate] no committed baseline for {snap}; "
@@ -175,6 +301,8 @@ def main(argv: list[str] | None = None) -> int:
         for d in deltas:
             if d["status"] == "steady":
                 print(format_delta(d))
+        if args.explain:
+            explain(old_payload, new_payload)
         if args.gate:
             rc = max(rc, gate(deltas))
     return rc

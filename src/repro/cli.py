@@ -12,6 +12,7 @@ subsystems by hand:
   python -m repro bench jet_tagger tau_select --iters 10
   python -m repro trace jet_tagger --lm qwen2_5_3b      # spans + attribution
   python -m repro replay --scenario flash_crowd         # open-loop traffic
+  python -m repro profile jet_tagger --lm qwen2_5_3b    # roofline + LARE
 
 ``python -m repro.plan`` and ``python -m repro.characterize`` remain as
 deprecation shims over the matching subcommands.
@@ -368,6 +369,49 @@ def cmd_trace(argv: list[str] | None = None) -> int:
     return 0
 
 
+def cmd_profile(argv: list[str] | None = None) -> int:
+    ap = _deploy_parser(
+        "python -m repro profile",
+        "Roofline-attributed profiling: serve smoke traffic, then join the "
+        "measured span windows with plan-derived work (MACs, bytes, launch "
+        "counts) and the machine-model ceilings — achieved FLOP/s, a "
+        "compute/memory/launch bound classification, the roofline fraction "
+        "and the measured LARE per tenant, plus model-FLOPs vs "
+        "compiled-HLO-FLOPs overhead on the actual serving executables.")
+    ap.add_argument("--requests", type=int, default=3,
+                    help="LM smoke requests per LM tenant")
+    ap.add_argument("--json-dir", default=None, metavar="DIR",
+                    help="write trend-gateable BENCH_profile_<net>.json "
+                         "snapshots here")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip the compiled-executable HLO analysis "
+                         "(saves the extra lower+compile per engine)")
+    args = ap.parse_args(argv)
+    dep = _build_deployment(args, trace=True)
+    _serve_smoke(dep, iters=args.iters, requests=args.requests)
+    rows = dep.profile()
+    print(dep.format_profile())
+    if not rows:
+        print("no profiled windows — did the smoke traffic run?",
+              file=sys.stderr)
+        return 1
+    if not args.no_hlo:
+        print("\ncompiled-HLO overhead (plan model FLOPs vs executable):")
+        for nid, ov in sorted(dep.hlo_overhead().items()):
+            uf = ov["useful_fraction"]
+            useful = f"{uf:.2f}" if uf is not None else "-"
+            print(f"  {nid:<14} model={ov['model_flops']:.4g} "
+                  f"hlo={ov['hlo_flops']:.4g} useful={useful}")
+    if args.json_dir:
+        from repro.obs import write_profile_snapshots
+        paths = write_profile_snapshots(
+            rows, args.json_dir,
+            meta={"source": "python -m repro profile"})
+        for p in paths:
+            print(f"wrote {p}")
+    return 0
+
+
 def cmd_replay(argv: list[str] | None = None) -> int:
     from repro.obs import workload as wl
     ap = _deploy_parser(
@@ -449,6 +493,7 @@ _SUBCOMMANDS = {
     "bench": cmd_bench,
     "trace": cmd_trace,
     "replay": cmd_replay,
+    "profile": cmd_profile,
 }
 
 

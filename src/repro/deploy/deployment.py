@@ -337,7 +337,8 @@ class Deployment:
         return write_prometheus(
             aggregate(self.tracer.spans), path,
             dropped=self.tracer.dropped if self.tracer.enabled else None,
-            slo=slo.snapshot() if slo is not None else None)
+            slo=slo.snapshot() if slo is not None else None,
+            profile=self.profile() or None)
 
     def attribution(self):
         """Plan-vs-measured rows per (tenant, span kind) — see
@@ -347,7 +348,69 @@ class Deployment:
 
     def format_attribution(self) -> str:
         from repro.obs import format_attribution
-        return format_attribution(self.attribution(), slo=self.slo)
+        return format_attribution(self.attribution(), slo=self.slo,
+                                  profile=self.profile())
+
+    # -- roofline profiling -----------------------------------------------
+    def profile_hw(self):
+        """The roofline ceilings this deployment was planned under: the
+        fitted :class:`MachineModel`'s substituted TPU terms when one was
+        characterized, else the stock :data:`repro.hw.TPU_V5E` — the same
+        single source of truth the planner's cost model reads."""
+        from repro import hw as hwlib
+        model = self.ctx.model
+        if model is None:
+            return hwlib.TPU_V5E
+        tpu = getattr(model, "tpu", None)
+        return tpu() if callable(tpu) else model
+
+    def _profile_stats(self) -> dict:
+        """Measured ``(tenant, kind)`` windows: the tracer's span stream
+        when tracing is on, else the engines' always-on service-time
+        windows (``span_stats()``) — profiling must not require
+        ``trace=True``."""
+        from repro.obs import aggregate
+        if self.tracer.enabled and self.tracer.spans:
+            return aggregate(self.tracer.spans)
+        stats = {}
+        for nid, eng in self.ctx.engines.items():
+            for kind, agg in eng.span_stats().items():
+                stats[(nid, kind)] = agg
+        return stats
+
+    def profile(self, *, hw=None) -> list:
+        """Roofline-attributed profile rows (:func:`repro.obs.profile.
+        profile`): per measured (tenant, span-kind) window and per fusion
+        group — achieved FLOP/s and bytes/s, the roofline ceiling, a
+        compute/memory/launch bound classification, the roofline fraction
+        in (0, 1], and the per-tenant measured LARE.  Empty until traffic
+        has been served (or :meth:`bench` has run)."""
+        from repro.obs import profile as prof
+        return prof(self.plans, self._profile_stats(),
+                    hw=hw if hw is not None else self.profile_hw())
+
+    def format_profile(self) -> str:
+        from repro.obs import format_profile
+        return format_profile(self.profile())
+
+    def hlo_overhead(self) -> dict:
+        """Model-FLOPs vs compiled-HLO-FLOPs per tenant, on the ACTUAL
+        serving executables (:func:`repro.launch.hlo_analysis.
+        hlo_overhead`): the EdgeEngine's jitted planned forward and the
+        batcher's jitted decode step.  The batcher decodes all its slots
+        per step, so its model FLOPs scale by the slot count."""
+        from repro.launch.hlo_analysis import hlo_overhead as _overhead
+        out = {}
+        for nid, eng in self.engines.items():
+            plan = self.plans.get(nid)
+            if plan is None or not getattr(plan, "layers", None):
+                continue
+            model_flops = plan.work()["flops"]
+            slots = getattr(eng, "slots", None)
+            if slots:                    # ContinuousBatcher: vmapped slots
+                model_flops *= slots
+            out[nid] = _overhead(model_flops, eng)
+        return out
 
     # -- reporting --------------------------------------------------------
     def summary(self) -> str:
@@ -381,4 +444,16 @@ class Deployment:
                 lines.append(f"slo: {total} violation event(s) {per}")
             else:
                 lines.append("slo: ok (no violation events)")
+        prows = ([r for r in self.profile() if r.group is None]
+                 if self.ctx.fleet is not None else [])
+        if prows:
+            lines.append("profile:")
+            for r in prows:
+                frac = (f"{r.roofline_fraction:.3f}"
+                        if r.roofline_fraction is not None else "-")
+                mlare = (f" mLARE={r.measured_lare:.1f}"
+                         if r.measured_lare is not None else "")
+                lines.append(
+                    f"  {r.tenant:<14} {r.kind:<14} frac={frac} "
+                    f"bound={r.bound}{mlare}")
         return "\n".join(lines)

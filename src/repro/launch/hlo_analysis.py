@@ -21,6 +21,15 @@ inputs from the HLO text with loop multipliers:
 The traffic estimate is an op-level approximation of "bytes accessed" (it
 cannot see register/cache reuse inside a fused loop); EXPERIMENTS.md states
 the methodology wherever these numbers appear.
+
+Since PR 8 this module also analyzes the ACTUAL serving executables:
+:func:`jitted_hlo` / :func:`analyze_jitted` lower-and-compile any jitted
+callable at its serving arguments, and :func:`analyze_engine` does so for
+a serving engine (:class:`~repro.serve.engine.EdgeEngine` jitted forward,
+:class:`~repro.serve.engine.ContinuousBatcher` jitted decode step) via its
+``hlo_text()`` hook — the compiled-HLO FLOPs these return, divided into
+the plan's model FLOPs, is the useful-compute fraction the profiler
+reports (:func:`hlo_overhead`).
 """
 
 from __future__ import annotations
@@ -264,4 +273,50 @@ def analyze_hlo(text: str) -> dict:
                                         for s in coll.values()),
         "collective_wire_bytes": sum(s["wire_bytes"] for s in coll.values()),
         "n_computations": len(comps) - 1,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Serving-executable analysis (PR 8): the compiled step the engine runs
+# ---------------------------------------------------------------------------
+
+def jitted_hlo(fn, *args, **kwargs) -> str:
+    """Post-optimization HLO text of a jitted callable at the given args
+    (``fn.lower(...).compile().as_text()``) — what the runtime executes,
+    after fusion/SPMD, not the traced stableHLO."""
+    return fn.lower(*args, **kwargs).compile().as_text()
+
+
+def analyze_jitted(fn, *args, **kwargs) -> dict:
+    """:func:`analyze_hlo` over a jitted callable's compiled executable."""
+    return analyze_hlo(jitted_hlo(fn, *args, **kwargs))
+
+
+def analyze_engine(engine) -> dict:
+    """Loop-aware analysis of a serving engine's hot executable.
+
+    Any object with an ``hlo_text()`` hook works (both serving engines
+    grew one): :class:`~repro.serve.engine.EdgeEngine` hands over its
+    jitted planned forward, :class:`~repro.serve.engine.ContinuousBatcher`
+    its jitted vmapped decode step."""
+    return analyze_hlo(engine.hlo_text())
+
+
+def hlo_overhead(model_flops: float, engine) -> dict:
+    """Model-FLOPs vs compiled-HLO-FLOPs for one serving executable.
+
+    ``model_flops`` is the plan-derived arithmetic the model *needs* per
+    step (``DeploymentPlan.work()["flops"]``); the compiled executable
+    spends more (epilogues, masking, layout ops) or occasionally less
+    (algebraic simplification).  ``useful_fraction`` = model/HLO is the
+    roofline report's remat/redundancy figure — a fused-decode-step PR
+    should move it toward 1."""
+    hlo = analyze_engine(engine)
+    hlo_flops = hlo["flops"]
+    return {
+        "model_flops": model_flops,
+        "hlo_flops": hlo_flops,
+        "hlo_bytes_est": hlo["bytes_est"],
+        "useful_fraction": (model_flops / hlo_flops) if hlo_flops else None,
+        "collectives": hlo["collectives"],
     }

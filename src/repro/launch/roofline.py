@@ -6,8 +6,11 @@ Per (arch x shape) cell on the single-pod mesh, derive the three terms:
     memory     = HLO_bytes / HBM_bw               (per chip, loop-aware est.)
     collective = collective_operand_bytes / link_bw
 
-Hardware constants (assignment): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
-~50 GB/s/link ICI.  FLOPs and bytes come from the loop-aware HLO analyzer
+The term math is shared with the serving profiler
+(:func:`repro.obs.profile.roofline_terms`) and the ceilings come from
+:data:`repro.hw.TPU_V5E` or a fitted ``MachineModel`` (``--machine-model``)
+— one ceiling of truth; this module no longer carries its own copies of
+the peak constants.  FLOPs and bytes come from the loop-aware HLO analyzer
 (``hlo_analysis.py`` — ``cost_analysis()`` counts while bodies once, so raw
 numbers undercount scanned stacks; both are stored in the cell JSON).
 
@@ -32,9 +35,20 @@ import os
 
 from repro import configs
 from repro import hw as hwlib
+from repro.obs.profile import roofline_terms
 
 TPU = hwlib.TPU_V5E
 CHIPS_SINGLE = 256
+
+
+def resolve_hw(spec: str | None):
+    """Map a ``--machine-model`` flag onto roofline ceilings: ``None`` /
+    ``"stock"`` -> the stock :data:`repro.hw.TPU_V5E`; a path -> the fitted
+    :class:`repro.characterize.model.MachineModel`'s substituted TPU."""
+    if spec is None or spec in ("stock", "none"):
+        return TPU
+    from repro.characterize import MachineModel
+    return MachineModel.load(spec).tpu()
 
 
 def model_flops_for(arch_name: str, shape_name: str, *, phase: str) -> float:
@@ -67,36 +81,37 @@ def advice(dom: str, cell: dict) -> str:
             "overlap collectives with compute, compress cross-pod payloads")
 
 
-def analyze_cell(cell: dict) -> dict | None:
+def analyze_cell(cell: dict, *, hw=None) -> dict | None:
     if "skipped" in cell or "error" in cell:
         return None
-    flops = cell["flops"]
-    byts = cell["hlo_bytes"]
-    coll = cell["collective_operand_bytes"]
-    t_compute = flops / TPU.peak_bf16_flops
-    t_memory = byts / TPU.hbm_bw
-    t_coll = coll / TPU.ici_bw
-    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
-    dom = max(terms, key=terms.get)
+    hw = hw if hw is not None else TPU
+    # Shared term math (one ceiling of truth with the serving profiler);
+    # dry-run cells have no launch count, so the launch term stays zero and
+    # the dominant label is compute/memory/collective as before.
+    terms = roofline_terms(cell["flops"], cell["hlo_bytes"], 0, hw=hw,
+                           collective_bytes=cell["collective_operand_bytes"])
+    dom = terms["bound"]
     mf = model_flops_for(cell["arch"], cell["shape"], phase=cell["phase"])
     mf_dev = mf / CHIPS_SINGLE
-    t_bound = max(terms.values())
+    t_bound = terms["ceiling_s"]
+    flops = cell["flops"]
     return {
         **{k: cell[k] for k in ("arch", "shape", "phase", "mesh_kind")},
-        "t_compute_s": t_compute,
-        "t_memory_s": t_memory,
-        "t_collective_s": t_coll,
+        "t_compute_s": terms["t_compute_s"],
+        "t_memory_s": terms["t_memory_s"],
+        "t_collective_s": terms["t_collective_s"],
         "dominant": dom,
         "model_flops_per_dev": mf_dev,
         "useful_fraction": mf_dev / flops if flops else 0.0,
-        "roofline_fraction": t_compute / t_bound if t_bound else 0.0,
+        "roofline_fraction": (terms["t_compute_s"] / t_bound if t_bound
+                              else 0.0),
         "step_time_lower_bound_s": t_bound,
         "hbm_temp_gib": cell["temp_size_in_bytes"] / 2**30,
         "hbm_args_gib": cell["argument_size_in_bytes"] / 2**30,
         # donated buffers alias their outputs — count them once
         "fits_hbm": (cell["temp_size_in_bytes"]
                      + cell["argument_size_in_bytes"]
-                     - cell.get("alias_size_in_bytes", 0)) <= TPU.hbm_bytes,
+                     - cell.get("alias_size_in_bytes", 0)) <= hw.hbm_bytes,
         "advice": advice(dom, cell),
     }
 
@@ -122,7 +137,11 @@ def main():
     ap.add_argument("--inp", default="results/dryrun")
     ap.add_argument("--out", default="results/roofline.md")
     ap.add_argument("--mesh", default="single")
+    ap.add_argument("--machine-model", default=None, metavar="MODEL_JSON",
+                    help="fitted MachineModel artifact for the ceilings "
+                         "(default: stock TPU v5e constants)")
     args = ap.parse_args()
+    hw = resolve_hw(args.machine_model)
 
     rows, skips, errors = [], [], []
     for path in sorted(glob.glob(os.path.join(args.inp, "*.json"))):
@@ -137,7 +156,7 @@ def main():
         if "error" in cell:
             errors.append(cell)
             continue
-        r = analyze_cell(cell)
+        r = analyze_cell(cell, hw=hw)
         if r:
             rows.append(r)
     rows.sort(key=lambda r: (r["arch"], r["shape"]))

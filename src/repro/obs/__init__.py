@@ -6,9 +6,12 @@ pipeline: a lightweight host-side span/trace API (:mod:`repro.obs.trace`),
 Chrome/Perfetto + Prometheus exporters (:mod:`repro.obs.export`), a
 plan-attribution layer joining measured spans against planned costs per
 span kind (:mod:`repro.obs.attribution`), workload traces + scenario
-generators + the open-loop replay driver (:mod:`repro.obs.workload`), and
+generators + the open-loop replay driver (:mod:`repro.obs.workload`),
 the per-tenant SLO monitor with priority classes and burn-rate windows
-(:mod:`repro.obs.slo`).
+(:mod:`repro.obs.slo`), and the roofline-attributed profiler joining
+measured windows with plan-derived work and hardware ceilings —
+achieved FLOP/s, bound classification, measured LARE
+(:mod:`repro.obs.profile`).
 
 Quick start::
 
@@ -26,6 +29,9 @@ from repro.obs.attribution import (AttributionRow, aggregate, attribution,
                                    format_attribution, reconcile)
 from repro.obs.export import (parse_prometheus, prometheus_text, to_chrome,
                               write_chrome, write_prometheus)
+from repro.obs.profile import (PROFILE_KINDS, ProfileRow, format_profile,
+                               profile, roofline_terms,
+                               write_profile_snapshots)
 from repro.obs.slo import (PRIORITY_CLASSES, SloBudget, SloMonitor,
                            SloViolation, priority_rank)
 from repro.obs.trace import (NULL_TRACER, Span, Tracer, percentile,
@@ -36,12 +42,13 @@ from repro.obs.workload import (SCENARIOS, ReplayReport, RequestRecord,
                                 smoke_trace, write_replay_snapshots)
 
 __all__ = [
-    "NULL_TRACER", "PRIORITY_CLASSES", "AttributionRow", "ReplayReport",
-    "RequestRecord", "SCENARIOS", "SloBudget", "SloMonitor", "SloViolation",
-    "Span", "TraceRequest", "Tracer", "aggregate", "attribution",
-    "format_attribution", "format_replay", "load_trace", "make_scenario",
-    "parse_prometheus", "percentile", "priority_rank", "prometheus_text",
-    "reconcile", "replay", "save_trace", "smoke_trace", "summarize",
-    "to_chrome", "write_chrome", "write_prometheus",
-    "write_replay_snapshots",
+    "NULL_TRACER", "PRIORITY_CLASSES", "PROFILE_KINDS", "AttributionRow",
+    "ProfileRow", "ReplayReport", "RequestRecord", "SCENARIOS", "SloBudget",
+    "SloMonitor", "SloViolation", "Span", "TraceRequest", "Tracer",
+    "aggregate", "attribution", "format_attribution", "format_profile",
+    "format_replay", "load_trace", "make_scenario", "parse_prometheus",
+    "percentile", "priority_rank", "profile", "prometheus_text",
+    "reconcile", "replay", "roofline_terms", "save_trace", "smoke_trace",
+    "summarize", "to_chrome", "write_chrome", "write_profile_snapshots",
+    "write_prometheus", "write_replay_snapshots",
 ]

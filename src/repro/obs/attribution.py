@@ -121,14 +121,18 @@ def attribution(plans: dict, stats_or_spans) -> list[AttributionRow]:
     return rows
 
 
-def format_attribution(rows: list[AttributionRow], *, slo=None) -> str:
+def format_attribution(rows: list[AttributionRow], *, slo=None,
+                       profile=None) -> str:
     """Human-readable attribution table (the ``repro trace`` report).
 
     Pass ``slo=`` (a :class:`repro.obs.slo.SloMonitor`) to append the
     tail-contract verdict under the component table: per-tenant measured
     p95/p99 vs budget, burn rates, and the violation-event count — the
     span decomposition says *where* the time went, the SLO lines say
-    whether the tenant's contract survived it."""
+    whether the tenant's contract survived it.  Pass ``profile=`` (rows
+    from :func:`repro.obs.profile.profile`) to append the roofline
+    judgement under that: how far from the hardware ceiling each window
+    ran, and what bounds it."""
     tenant_w = max([18] + [len(r.tenant) + 1 for r in rows])
     kind_w = max([20] + [len(r.kind) + 1 for r in rows])
     lines = [f"{'tenant':<{tenant_w}}{'span kind':<{kind_w}}{'n':>6}"
@@ -158,6 +162,10 @@ def format_attribution(rows: list[AttributionRow], *, slo=None) -> str:
                 f"p99={st['p99_s'] * 1e6:9.1f}us "
                 f"burn={st['burn_fast']:.2f}/{st['burn_slow']:.2f}"
                 f"{verdict}")
+    if profile:
+        from repro.obs.profile import format_profile
+        lines.append("roofline:")
+        lines.extend("  " + ln for ln in format_profile(profile).splitlines())
     return "\n".join(lines)
 
 

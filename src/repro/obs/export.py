@@ -96,7 +96,8 @@ def _fmt(x: float) -> str:
 
 def prometheus_text(stats: dict, *, metric: str = _PROM_METRIC,
                     dropped: int | None = None,
-                    slo: dict | None = None) -> str:
+                    slo: dict | None = None,
+                    profile: list | None = None) -> str:
     """Render span aggregates as a Prometheus text-format snapshot.
 
     ``stats`` maps ``(tenant, kind)`` to a :func:`repro.obs.trace.summarize`
@@ -110,7 +111,10 @@ def prometheus_text(stats: dict, *, metric: str = _PROM_METRIC,
     truncates its own evidence is worse than none.  ``slo`` (a
     :meth:`repro.obs.slo.SloMonitor.snapshot` dict) adds the SLO families:
     per-tenant budget/latency quantile gauges, fast/slow burn rates, and
-    the violation-event counter."""
+    the violation-event counter.  ``profile`` (a list of
+    :class:`repro.obs.profile.ProfileRow`) adds the ``repro_profile_*``
+    families: achieved FLOP/s / bytes/s, roofline fraction, the bound
+    classification as an info-style gauge, and measured LARE."""
     lines = [
         f"# HELP {metric} Span-decomposed service time by tenant and kind.",
         f"# TYPE {metric} summary",
@@ -136,7 +140,57 @@ def prometheus_text(stats: dict, *, metric: str = _PROM_METRIC,
         ]
     if slo:
         lines += _slo_families(slo)
+    if profile:
+        lines += _profile_families(profile)
     return "\n".join(lines) + "\n"
+
+
+def _profile_families(rows: list) -> list[str]:
+    """The ``repro_profile_*`` families from :func:`repro.obs.profile.
+    profile` rows.  Non-finite/None values are skipped per sample (a
+    zero-duration window simply has no achieved-rate or fraction sample);
+    fusion-group rows carry an extra ``group`` label."""
+    def labels(r) -> str:
+        out = (f'tenant="{_prom_escape(str(r.tenant))}",'
+               f'kind="{_prom_escape(str(r.kind))}"')
+        if r.group is not None:
+            out += f',group="{int(r.group)}"'
+        return out
+
+    flops, byts, frac, bound, lare = [], [], [], [], []
+    for r in rows:
+        lab = labels(r)
+        for samples, v in ((flops, r.achieved_flops),
+                           (byts, r.achieved_bytes_per_s),
+                           (frac, r.roofline_fraction)):
+            if v is not None and math.isfinite(v):
+                samples.append((lab, v))
+        bound.append((f'{lab},bound="{_prom_escape(r.bound)}"', 1.0))
+        if r.group is None and r.measured_lare is not None \
+                and math.isfinite(r.measured_lare):
+            lare.append((f'tenant="{_prom_escape(str(r.tenant))}"',
+                         r.measured_lare))
+    lines = []
+    for name, help_txt, samples in (
+            ("repro_profile_achieved_flops",
+             "Achieved FLOP/s over the measured window (plan-derived "
+             "work / measured p50).", flops),
+            ("repro_profile_achieved_bytes_per_second",
+             "Achieved HBM bytes/s over the measured window.", byts),
+            ("repro_profile_roofline_fraction",
+             "Roofline ceiling time / measured p50, clamped to (0,1]; "
+             "1.0 = running at the model ceiling.", frac),
+            ("repro_profile_bound_info",
+             "Bound classification (compute/memory/launch) as an "
+             "info-style gauge.", bound),
+            ("repro_profile_measured_lare",
+             "Measured LARE (paper Alg. 1 with the measured interval "
+             "injected), in PL DSP-equivalents.", lare)):
+        if samples:
+            lines += [f"# HELP {name} {help_txt}",
+                      f"# TYPE {name} gauge",
+                      *(f"{name}{{{lab}}} {_fmt(v)}" for lab, v in samples)]
+    return lines
 
 
 def _slo_families(slo: dict) -> list[str]:
@@ -217,10 +271,11 @@ def parse_prometheus(text: str) -> list[dict]:
 
 
 def write_prometheus(stats: dict, path, *, metric: str = _PROM_METRIC,
-                     dropped: int | None = None, slo: dict | None = None):
+                     dropped: int | None = None, slo: dict | None = None,
+                     profile: list | None = None):
     """Write the Prometheus snapshot; returns the path."""
     p = pathlib.Path(path)
     p.parent.mkdir(parents=True, exist_ok=True)
     p.write_text(prometheus_text(stats, metric=metric, dropped=dropped,
-                                 slo=slo))
+                                 slo=slo, profile=profile))
     return p

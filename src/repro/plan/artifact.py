@@ -190,6 +190,64 @@ class DeploymentPlan:
         gs = self.fusion_groups or _derive_fusion_groups(self.layers)
         return [list(g.layers) for g in gs]
 
+    @property
+    def itemsize(self) -> int:
+        """Deployment weight-datatype bytes (mirrors the graph front-ends:
+        edge nets deploy int8, LM weights land bf16 unless quantized)."""
+        return 1 if self.kind == "edge" else 2
+
+    def work(self) -> dict:
+        """Plan-derived roofline work for ONE planned inference (edge: the
+        whole pipeline; lm: one decode step — an LM plan's graph IS a
+        decode step).
+
+        Per-layer MACs and weight/activation bytes follow the same
+        accounting as :mod:`repro.plan.graph` (activations hand off in f32
+        before requantization), multiplied out by each layer's ``repeat``.
+        ``launches`` counts dispatches: one per DR7' fusion group (times
+        the group's repeat), which is exactly what the boundary cost model
+        charges ``kernel_overhead_s`` for.  The profiler
+        (:mod:`repro.obs.profile`) divides these by measured span time to
+        get achieved FLOP/s and bytes/s."""
+        its = self.itemsize
+        by_index = {l.index: l for l in self.layers}
+
+        def layer_work(l) -> dict:
+            flops = 2.0 * self.batch * l.n_in * l.n_out * l.repeat
+            weight_bytes = l.n_in * l.n_out * its * l.repeat
+            act_bytes = (self.batch * l.n_in * its
+                         + self.batch * l.n_out * 4) * l.repeat
+            return {"flops": flops, "weight_bytes": weight_bytes,
+                    "act_bytes": act_bytes}
+
+        groups = self.fusion_groups or _derive_fusion_groups(self.layers)
+        per_group = []
+        totals = {"flops": 0.0, "weight_bytes": 0, "act_bytes": 0}
+        launches = 0
+        for g in groups:
+            members = [by_index[i] for i in g.layers if i in by_index]
+            gw = {"flops": 0.0, "weight_bytes": 0, "act_bytes": 0}
+            for l in members:
+                lw = layer_work(l)
+                for k in gw:
+                    gw[k] += lw[k]
+            g_launches = max((l.repeat for l in members), default=1)
+            launches += g_launches
+            per_group.append({
+                "id": g.id, "layers": list(g.layers),
+                "est_latency_s": g.est_latency_s, "launches": g_launches,
+                **gw,
+            })
+            for k in totals:
+                totals[k] += gw[k]
+        return {
+            **totals,
+            "bytes": totals["weight_bytes"] + totals["act_bytes"],
+            "launches": launches,
+            "itemsize": its,
+            "per_group": per_group,
+        }
+
     # -- serialization ----------------------------------------------------
     def to_dict(self) -> dict:
         return {

@@ -268,6 +268,22 @@ class ContinuousBatcher:
             jax.vmap(decode_one, in_axes=(None, 0, axes, 0, 0),
                      out_axes=(0, axes)))
         self._steps = 0
+        self._hlo_text: str | None = None
+
+    def hlo_text(self) -> str:
+        """Post-optimization HLO of the ACTUAL jitted decode step — the
+        executable every decode tick runs, at serving shapes (slots, live
+        masking, cache axes).  Feeds the loop-aware analyzer
+        (:func:`repro.launch.hlo_analysis.analyze_hlo`) so the profiler can
+        report model-FLOPs vs compiled-FLOPs overhead on the real
+        executable instead of a stand-in.  Compiled once and cached."""
+        if self._hlo_text is None:
+            tok = np.zeros((self.slots,), np.int32)
+            live = np.zeros((self.slots,), bool)
+            self._hlo_text = self._decode.lower(
+                self.params, tok, self.state, self.pos.copy(),
+                live).compile().as_text()
+        return self._hlo_text
 
     def submit(self, req: Request):
         req.t_submit = time.perf_counter()
@@ -514,7 +530,17 @@ class EdgeEngine:
         self.x_scale = x_scale
         self._fwd = jax.jit(lambda x: edge_lib.edge_forward_q8(
             self.qparams, cfg, x, x_scale=x_scale, plan=self.plan))
+        self._hlo_text: str | None = None
         self.reset_measurements()
+
+    def hlo_text(self) -> str:
+        """Post-optimization HLO of the jitted planned forward — the one
+        executable :meth:`infer` runs.  Cached after the first compile; the
+        profiler's HLO-overhead report analyzes this text."""
+        if self._hlo_text is None:
+            x = jnp.zeros((self.cfg.batch, self.cfg.dims[0]), F32)
+            self._hlo_text = self._fwd.lower(x).compile().as_text()
+        return self._hlo_text
 
     def infer(self, x) -> jax.Array:
         t0 = time.perf_counter()

@@ -1,0 +1,271 @@
+"""Roofline-attributed profiling: plan work accounting, profile math,
+snapshot determinism, Prometheus families, and trend forensics."""
+
+import dataclasses
+import json
+import math
+
+import pytest
+
+from benchmarks import trend
+from repro.models import edge
+from repro.obs import (format_attribution, format_profile, parse_prometheus,
+                       profile, prometheus_text, write_profile_snapshots)
+from repro.plan import get_or_plan
+
+
+@pytest.fixture(scope="module")
+def jet_plan():
+    return get_or_plan(edge.edge_config("jet_tagger"), target="tpu")
+
+
+def _stats(p50=1e-4, count=10, kind="infer", tenant="jet_tagger", tokens=0):
+    return {(tenant, kind): {"count": count, "total_s": p50 * count,
+                             "mean_s": p50, "p50_s": p50, "p95_s": p50 * 2,
+                             "tokens": tokens}}
+
+
+# ---------------------------------------------------------------------------
+# plan work accounting
+# ---------------------------------------------------------------------------
+
+def test_plan_work_matches_graph_accounting(jet_plan):
+    w = jet_plan.work()
+    assert w["itemsize"] == 1            # edge deploys int8
+    flops = sum(2.0 * jet_plan.batch * l.n_in * l.n_out * l.repeat
+                for l in jet_plan.layers)
+    assert w["flops"] == pytest.approx(flops)
+    assert w["weight_bytes"] == sum(l.n_in * l.n_out * l.repeat
+                                    for l in jet_plan.layers)
+    assert w["bytes"] == w["weight_bytes"] + w["act_bytes"]
+    assert w["launches"] == len(jet_plan.groups()) or w["launches"] >= 1
+    assert sum(g["flops"] for g in w["per_group"]) == pytest.approx(flops)
+
+
+def test_plan_work_without_fusion_groups(jet_plan):
+    """v1/v2 plans load with no fusion_groups section — work() must fall
+    back to the derived per-layer groups, same totals."""
+    legacy = dataclasses.replace(jet_plan, fusion_groups=())
+    w_new, w_old = jet_plan.work(), legacy.work()
+    assert w_old["flops"] == pytest.approx(w_new["flops"])
+    assert w_old["bytes"] == w_new["bytes"]
+    assert w_old["launches"] >= 1
+    rows = profile({"jet_tagger": legacy}, _stats())
+    assert rows and rows[0].bound in ("compute", "memory", "launch")
+
+
+# ---------------------------------------------------------------------------
+# profile math
+# ---------------------------------------------------------------------------
+
+def test_profile_row_fraction_in_unit_interval(jet_plan):
+    rows = profile({"jet_tagger": jet_plan}, _stats(p50=1e-4))
+    (r,) = [x for x in rows if x.group is None]
+    assert 0.0 < r.roofline_fraction <= 1.0
+    assert r.achieved_flops == pytest.approx(r.flops / 1e-4)
+    assert r.bound in ("compute", "memory", "launch")
+    assert r.measured_lare is not None and math.isfinite(r.measured_lare)
+    assert r.measured_lare > 0
+
+
+def test_profile_fraction_clamps_at_one(jet_plan):
+    """A measured window faster than the model ceiling clamps to 1.0
+    (timer jitter), never reads as >100% of roofline."""
+    rows = profile({"jet_tagger": jet_plan}, _stats(p50=1e-9))
+    (r,) = [x for x in rows if x.group is None]
+    assert r.roofline_fraction == 1.0
+
+
+def test_profile_zero_duration_window(jet_plan):
+    rows = profile({"jet_tagger": jet_plan}, _stats(p50=0.0))
+    (r,) = [x for x in rows if x.group is None]
+    assert r.roofline_fraction is None
+    assert r.achieved_flops is None
+    assert r.measured_lare is None
+    assert r.ceiling_s > 0               # the model side still prices it
+
+
+def test_profile_no_measured_spans(jet_plan):
+    assert profile({"jet_tagger": jet_plan}, {}) == []
+    # unprofiled kinds (queue/admit) produce no rows either
+    assert profile({"jet_tagger": jet_plan}, _stats(kind="queue")) == []
+
+
+def test_profile_skips_duck_typed_plans():
+    class _FakePlan:
+        est_latency_s = 1e-4
+    assert profile({"jet_tagger": _FakePlan()}, _stats()) == []
+
+
+def test_profile_prefill_scales_by_tokens(jet_plan):
+    lm_like = _stats(kind="prefill_chunk", tokens=40, count=10)
+    rows = profile({"jet_tagger": jet_plan}, lm_like)
+    (r,) = rows
+    assert r.flops == pytest.approx(jet_plan.work()["flops"] * 4.0)
+
+
+def test_format_profile_and_attribution_block(jet_plan):
+    rows = profile({"jet_tagger": jet_plan}, _stats())
+    txt = format_profile(rows)
+    assert "bound" in txt and "jet_tagger" in txt
+    assert format_profile([]).startswith("profile: no measured windows")
+    attr_txt = format_attribution([], profile=rows)
+    assert "roofline:" in attr_txt
+
+
+# ---------------------------------------------------------------------------
+# snapshots: determinism + trend gating shape
+# ---------------------------------------------------------------------------
+
+def test_profile_snapshot_model_rows_byte_identical(tmp_path, jet_plan):
+    outs = []
+    for sub in ("a", "b"):
+        rows = profile({"jet_tagger": jet_plan}, _stats())
+        (p,) = write_profile_snapshots(rows, tmp_path / sub)
+        outs.append(p.read_bytes())
+    assert outs[0] == outs[1]
+    payload = json.loads(outs[0])
+    names = {r["name"] for r in payload["rows"]}
+    assert "profile/jet_tagger/infer/ceiling" in names
+    model_rows = [r for r in payload["rows"] if "src=model" in r["derived"]]
+    assert model_rows and all("t_compute_us=" in r["derived"]
+                              for r in model_rows
+                              if "ceiling" in r["name"])
+
+
+def test_profile_snapshot_skips_zero_measured(tmp_path, jet_plan):
+    rows = profile({"jet_tagger": jet_plan}, _stats(p50=0.0))
+    (p,) = write_profile_snapshots(rows, tmp_path)
+    payload = json.loads(p.read_text())
+    names = [r["name"] for r in payload["rows"]]
+    assert "profile/jet_tagger/infer/ceiling" in names
+    assert not any(n.endswith("/p50") for n in names)
+
+
+# ---------------------------------------------------------------------------
+# Prometheus round-trip
+# ---------------------------------------------------------------------------
+
+def test_profile_prometheus_roundtrip(jet_plan):
+    rows = profile({"jet_tagger": jet_plan}, _stats())
+    text = prometheus_text(_stats(), profile=rows)
+    samples = parse_prometheus(text)     # strict: rejects non-finite
+    by_name = {}
+    for s in samples:
+        by_name.setdefault(s["name"], []).append(s)
+    assert "repro_profile_roofline_fraction" in by_name
+    assert "repro_profile_achieved_flops" in by_name
+    assert "repro_profile_bound_info" in by_name
+    assert "repro_profile_measured_lare" in by_name
+    (frac,) = [s for s in by_name["repro_profile_roofline_fraction"]
+               if s["labels"].get("group") is None]
+    assert 0.0 < frac["value"] <= 1.0
+    (bound,) = [s for s in by_name["repro_profile_bound_info"]
+                if "group" not in s["labels"]]
+    assert bound["labels"]["bound"] in ("compute", "memory", "launch")
+
+
+def test_profile_prometheus_skips_zero_windows(jet_plan):
+    rows = profile({"jet_tagger": jet_plan}, _stats(p50=0.0))
+    text = prometheus_text(_stats(p50=0.0), profile=rows)
+    samples = parse_prometheus(text)
+    names = {s["name"] for s in samples}
+    assert "repro_profile_roofline_fraction" not in names
+    assert "repro_profile_bound_info" in names
+
+
+# ---------------------------------------------------------------------------
+# trend forensics: --explain + malformed snapshots
+# ---------------------------------------------------------------------------
+
+def _payload(ceiling_us, compute_us, memory_us, launch_us):
+    return {"meta": {}, "rows": [{
+        "name": "profile/jet_tagger/infer/ceiling",
+        "us_per_call": ceiling_us,
+        "derived": (f"src=model;bound=launch;t_compute_us={compute_us};"
+                    f"t_memory_us={memory_us};t_launch_us={launch_us}"),
+    }]}
+
+
+def test_trend_explain_names_worst_moved_term(capsys):
+    old = _payload(2.2, 0.5, 0.4, 2.2)
+    new = _payload(4.4, 0.5, 4.4, 2.2)   # memory term blew up
+    verdict = trend.explain(old, new)
+    assert verdict["term"] == "t_memory_us"
+    assert verdict["span_kind"] == "infer"
+    assert verdict["tenant"] == "jet_tagger"
+    assert verdict["term_delta_us"] == pytest.approx(4.0)
+    out = capsys.readouterr().out
+    assert "t_memory_us" in out and "worst mover" in out
+
+
+def test_trend_explain_no_breakdown(capsys):
+    old = {"rows": [{"name": "serve/jet/p50", "us_per_call": 1.0,
+                     "derived": "src=measured"}]}
+    new = {"rows": [{"name": "serve/jet/p50", "us_per_call": 2.0,
+                     "derived": "src=measured"}]}
+    verdict = trend.explain(old, new)
+    assert verdict["term"] is None
+    assert "attribution stops" in capsys.readouterr().out
+
+
+def test_trend_explain_nothing_changed(capsys):
+    p = _payload(2.2, 0.5, 0.4, 2.2)
+    assert trend.explain(p, p) is None
+
+
+def test_trend_malformed_snapshot_one_line_error(tmp_path, capsys):
+    bad = tmp_path / "BENCH_truncated.json"
+    bad.write_text('{"rows": [{"name": "x", "us_per_c')   # truncated
+    rc = trend.main([str(bad)])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "malformed snapshot JSON" in err
+    assert len(err.strip().splitlines()) == 1
+
+
+def test_trend_malformed_rows_shape(tmp_path, capsys):
+    bad = tmp_path / "BENCH_shape.json"
+    bad.write_text(json.dumps({"rows": [{"nam": "x"}]}))
+    rc = trend.main([str(bad)])
+    assert rc == 2
+    assert "rows" in capsys.readouterr().err
+
+
+def test_trend_missing_snapshot_file(tmp_path, capsys):
+    rc = trend.main([str(tmp_path / "nope.json")])
+    assert rc == 2
+    assert capsys.readouterr().err.startswith("trend:")
+
+
+def test_trend_explain_cli_flag(tmp_path, capsys):
+    old_p, new_p = tmp_path / "old.json", tmp_path / "new.json"
+    old_p.write_text(json.dumps(_payload(2.2, 0.5, 0.4, 2.2)))
+    new_p.write_text(json.dumps(_payload(4.4, 0.5, 4.4, 2.2)))
+    rc = trend.main([str(new_p), "--against", str(old_p), "--explain"])
+    assert rc == 0
+    assert "[explain]" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# engine integration: always-on windows -> profile, real executables -> HLO
+# ---------------------------------------------------------------------------
+
+def test_edge_engine_profile_integration(jet_plan):
+    import jax.numpy as jnp
+    from repro.launch.hlo_analysis import analyze_engine
+    from repro.serve.engine import EdgeEngine
+
+    cfg = edge.edge_config("jet_tagger")
+    eng = EdgeEngine(cfg, plan=jet_plan)
+    x = jnp.ones((cfg.batch, cfg.dims[0]), jnp.float32)
+    for _ in range(3):
+        eng.infer(x)
+    stats = {("jet_tagger", k): agg for k, agg in eng.span_stats().items()}
+    rows = profile({"jet_tagger": jet_plan}, stats)
+    (r,) = [x for x in rows if x.group is None]
+    assert 0.0 < r.roofline_fraction <= 1.0
+    assert r.count == 3
+    hlo = analyze_engine(eng)            # the ACTUAL jitted forward
+    assert hlo["flops"] > 0
+    assert eng.hlo_text() is eng.hlo_text()   # compiled once, cached

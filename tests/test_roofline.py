@@ -1,0 +1,200 @@
+"""Loop-aware HLO analysis + shared roofline terms.
+
+The toy scanned HLO below exercises exactly what ``cost_analysis()`` gets
+wrong on scanned layer stacks: a while loop with a static trip count whose
+body holds a dot and a GSPMD-style collective — the analyzer must multiply
+both by the trip count.  Also covers the dtype byte table, the collective
+payload formulas, the serving-executable entry points, and the retired
+``launch/roofline.py`` path now running on the shared term math.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import hw as hwlib
+from repro.launch import hlo_analysis as ha
+from repro.launch import roofline as rl
+from repro.obs.profile import roofline_terms
+
+# A hand-written post-optimization-style module: ENTRY wraps a while loop
+# with trip count 4; the body runs one (8,16)x(16,16) dot and one
+# 4-way all-gather of the f32[8,16] activations.
+TOY_HLO = """\
+HloModule toy
+
+%cond (arg: (s32[], f32[8,16])) -> pred[] {
+  %arg = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %trip = s32[] constant(4)
+  ROOT %lt = pred[] compare(%i, %trip), direction=LT
+}
+
+%body (arg2: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %arg2 = (s32[], f32[8,16]) parameter(0)
+  %j = s32[] get-tuple-element(%arg2), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%arg2), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %y = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[32,16]{1,0} all-gather(%y), replica_groups=[1,4]<=[4], dimensions={0}
+  %one = s32[] constant(1)
+  %j1 = s32[] add(%j, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%j1, %y)
+}
+
+ENTRY %main (x: f32[8,16]) -> f32[8,16] {
+  %x0 = f32[8,16]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%c0, %x0)
+  %loop = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%loop), index=1
+}
+"""
+
+
+# ---------------------------------------------------------------------------
+# dtype byte table + shape parsing
+# ---------------------------------------------------------------------------
+
+def test_dtype_byte_table():
+    assert ha._DTYPE_BYTES["s8"] == 1
+    assert ha._DTYPE_BYTES["bf16"] == 2
+    assert ha._DTYPE_BYTES["f32"] == 4
+    assert ha._DTYPE_BYTES["f64"] == 8
+    assert ha._DTYPE_BYTES["f8e4m3fn"] == 1
+
+
+@pytest.mark.parametrize("text,expected", [
+    ("f32[8,16]", 8 * 16 * 4),
+    ("bf16[16,16]{1,0}", 16 * 16 * 2),
+    ("s8[128]", 128),
+    ("(s32[], f32[8,16])", 4 + 8 * 16 * 4),   # tuple: sum of members
+    ("pred[]", 1),                            # scalar: one element
+])
+def test_shape_bytes(text, expected):
+    assert ha._shape_bytes(text) == expected
+
+
+# ---------------------------------------------------------------------------
+# while-loop trip counts and multipliers
+# ---------------------------------------------------------------------------
+
+def test_while_trip_count_multiplies_body():
+    comps = ha.parse_computations(TOY_HLO)
+    assert set(comps) == {"cond", "body", "main", "__entry__"}
+    mult = ha._multipliers(comps)
+    assert mult["main"] == 1.0
+    assert mult["body"] == 4.0            # trip count from constant(4)
+    assert mult["cond"] == 5.0            # trip + 1 evaluations
+
+
+def test_dot_flops_scale_with_trip_count():
+    out = ha.analyze_hlo(TOY_HLO)
+    # one dot per iteration: 2 * (8*16 result) * 16 contracted = 4096
+    assert out["flops"] == pytest.approx(4 * 2 * 8 * 16 * 16)
+    assert out["n_computations"] == 3
+
+
+def test_collective_payload_accounting():
+    out = ha.analyze_hlo(TOY_HLO)
+    coll = out["collectives"]
+    assert set(coll) == {"all-gather"}
+    ag = coll["all-gather"]
+    rb = 32 * 16 * 4                      # f32[32,16] result bytes
+    g = 4                                 # replica_groups=[1,4]
+    assert ag["count"] == 4.0             # once per loop iteration
+    assert ag["operand_bytes"] == 4 * (rb // g)
+    assert ag["wire_bytes"] == 4 * (rb * (g - 1) // g)
+    assert out["collective_operand_bytes"] == ag["operand_bytes"]
+    assert out["collective_wire_bytes"] == ag["wire_bytes"]
+
+
+def test_loop_once_would_undercount():
+    """The failure mode the docstring warns about: dropping the loop
+    multiplier (what ``cost_analysis()`` does) undercounts by ~trip x."""
+    looped = ha.analyze_hlo(TOY_HLO)
+    unrolled_once = ha.analyze_hlo(TOY_HLO.replace("constant(4)",
+                                                   "constant(1)"))
+    assert looped["flops"] == 4 * unrolled_once["flops"]
+
+
+# ---------------------------------------------------------------------------
+# serving-executable entry points
+# ---------------------------------------------------------------------------
+
+def test_analyze_jitted_counts_matmul_flops():
+    w = jnp.ones((16, 32), jnp.float32)
+    fn = jax.jit(lambda x: x @ w)
+    x = jnp.ones((8, 16), jnp.float32)
+    out = ha.analyze_jitted(fn, x)
+    assert out["flops"] == pytest.approx(2 * 8 * 16 * 32)
+    assert out["bytes_est"] > 0
+
+
+class _FakeEngine:
+    def hlo_text(self):
+        return TOY_HLO
+
+
+def test_hlo_overhead_reports_useful_fraction():
+    ov = ha.hlo_overhead(2 * 8 * 16 * 16, _FakeEngine())
+    assert ov["hlo_flops"] == pytest.approx(4 * 2 * 8 * 16 * 16)
+    assert ov["useful_fraction"] == pytest.approx(0.25)
+    # no compiled FLOPs -> no fraction, not a ZeroDivisionError
+    class _Empty:
+        def hlo_text(self):
+            return "ENTRY %e (p: f32[2]) -> f32[2] {\n" \
+                   "  ROOT %p = f32[2]{0} parameter(0)\n}\n"
+    assert ha.hlo_overhead(1.0, _Empty())["useful_fraction"] is None
+
+
+# ---------------------------------------------------------------------------
+# launch/roofline.py on the shared term math
+# ---------------------------------------------------------------------------
+
+def _cell(**over):
+    cell = {
+        "arch": "qwen2_5_3b", "shape": "decode_32k", "phase": "decode",
+        "mesh_kind": "single", "flops": 1e12, "hlo_bytes": 1e9,
+        "collective_operand_bytes": 0.0, "temp_size_in_bytes": 0,
+        "argument_size_in_bytes": 0,
+    }
+    cell.update(over)
+    return cell
+
+
+def test_analyze_cell_uses_shared_ceilings():
+    r = rl.analyze_cell(_cell())
+    tpu = hwlib.TPU_V5E
+    assert r["t_compute_s"] == pytest.approx(1e12 / tpu.peak_bf16_flops)
+    assert r["t_memory_s"] == pytest.approx(1e9 / tpu.hbm_bw)
+    assert r["dominant"] in ("compute", "memory", "collective")
+    # one ceiling of truth: a substituted hw model moves the terms
+    import dataclasses
+    fast = dataclasses.replace(tpu, hbm_bw=tpu.hbm_bw * 2)
+    r2 = rl.analyze_cell(_cell(), hw=fast)
+    assert r2["t_memory_s"] == pytest.approx(r["t_memory_s"] / 2)
+
+
+def test_resolve_hw_stock_and_fitted(tmp_path):
+    assert rl.resolve_hw(None) is hwlib.TPU_V5E
+    assert rl.resolve_hw("stock") is hwlib.TPU_V5E
+
+
+def test_roofline_terms_bound_classification():
+    hw = hwlib.TPU_V5E
+    t = roofline_terms(1e15, 1.0, 0, hw=hw)
+    assert t["bound"] == "compute"
+    t = roofline_terms(1.0, 1e12, 0, hw=hw)
+    assert t["bound"] == "memory"
+    t = roofline_terms(1.0, 1.0, 100, hw=hw)
+    assert t["bound"] == "launch"
+    t = roofline_terms(1.0, 1.0, 0, hw=hw, collective_bytes=1e12)
+    assert t["bound"] == "collective"
+    # int8 work prices against the int8 peak
+    t8 = roofline_terms(1e12, 1.0, 0, itemsize=1, hw=hw)
+    t16 = roofline_terms(1e12, 1.0, 0, itemsize=2, hw=hw)
+    assert t8["t_compute_s"] < t16["t_compute_s"]
+    assert t8["peak_flops"] == hw.peak_int8_ops
