@@ -65,6 +65,23 @@ class BenchRow:
                 "derived": self.derived}
 
 
+def _fault_injector(faults):
+    """Coerce a ``faults=`` argument into a live ``FaultInjector``:
+    an injector passes through, a ``FaultPlan`` arms fresh counters, a
+    list/tuple of specs (or spec dicts) becomes an ad-hoc plan, and
+    anything else is treated as a path to a saved plan artifact."""
+    from repro.faults import FaultInjector, FaultPlan
+    if faults is None:
+        return None
+    if isinstance(faults, FaultInjector):
+        return faults
+    if isinstance(faults, FaultPlan):
+        return faults.injector()
+    if isinstance(faults, (list, tuple)):
+        return FaultPlan(faults=tuple(faults)).injector()
+    return FaultPlan.load(faults).injector()
+
+
 def _load_plan(plan) -> FleetPlan:
     """Accept a FleetPlan, a DeploymentPlan, or a path to either artifact."""
     if isinstance(plan, FleetPlan):
@@ -86,6 +103,7 @@ class Deployment:
         self.ctx = ctx
         self._router = None
         self._router_kw = None
+        self._injector = None
 
     # -- construction -----------------------------------------------------
     @classmethod
@@ -94,7 +112,7 @@ class Deployment:
               artifact_dir=None, lm_params: dict | None = None,
               stop_after: str | None = None, batch: int | None = None,
               x_scale: float = 0.05, seed: int = 0, trace=False,
-              **plan_kw) -> "Deployment":
+              faults=None, **plan_kw) -> "Deployment":
         """Run the pipeline end-to-end (or up to ``stop_after``).
 
         ``configs`` — one or many: edge net names, ``EdgeConfig``s,
@@ -112,6 +130,10 @@ class Deployment:
         span and the serving surface decomposes requests into
         queue/prefill/decode spans; export via :meth:`export_trace` /
         :meth:`export_prometheus`, judge via :meth:`attribution`.
+        ``faults`` — a :class:`repro.faults.FaultPlan` (or injector, spec
+        list, or saved-plan path): arms the plan cache's ``cache.read``
+        hook during the build and is re-armed on the router by
+        :meth:`replay`.
         Planner knobs (``pl_budget``, ``pipeline_core_budget``, ``tpu=``,
         fleet serve knobs…) pass through ``plan_kw``.
         """
@@ -129,6 +151,13 @@ class Deployment:
         if plan is not None:
             ctx.fleet = _load_plan(plan)
         dep = cls(ctx)
+        dep._injector = _fault_injector(faults)
+        if dep._injector is not None:
+            ctx.cache.injector = dep._injector
+            spec = dep._injector.fire("build")
+            if spec is not None:
+                from repro.faults import InjectedFault
+                raise InjectedFault("deployment build: injected failure")
         dep._run_until(stop_after or _STAGE_ORDER[-1])
         return dep
 
@@ -191,7 +220,8 @@ class Deployment:
     def serve(self, *, shed_after: int | None = None,
               drift_threshold: float | None = None,
               drift_min_samples: int = 5, slo: Any = True,
-              defer_limit: int = 4, fresh: bool = False):
+              defer_limit: int = 4, resilience: Any = True,
+              fresh: bool = False):
         """The fleet behind a :class:`repro.serve.Router`, wired from the
         plan's serve section and this deployment's engines.  Memoized —
         repeated calls with the same knobs return the same live router;
@@ -203,12 +233,18 @@ class Deployment:
         from each plan's serve section, enabling the router's SLO-aware
         priority scheduling; pass a ready monitor to customize windows and
         budgets, or ``False``/``None`` for the pre-SLO behavior.
+        ``resilience`` — ``True`` (default) attaches a
+        :class:`repro.serve.Supervisor` wired from each plan's
+        ``serve["resilience"]`` knobs (per-tenant circuit breakers,
+        bounded retries, deadline audit, the degradation ladder); pass a
+        ready supervisor to customize, or ``False``/``None`` for the
+        pre-supervisor behavior (fault isolation in the router remains).
         """
         from repro.obs.slo import SloMonitor
         from repro.serve import Router
         kw = {"shed_after": shed_after, "drift_threshold": drift_threshold,
               "drift_min_samples": drift_min_samples, "slo": slo,
-              "defer_limit": defer_limit}
+              "defer_limit": defer_limit, "resilience": resilience}
         if self._router is None or fresh or kw != self._router_kw:
             tracer = (self.ctx.tracer
                       if self.ctx.tracer is not NULL_TRACER else None)
@@ -219,7 +255,8 @@ class Deployment:
                 self.fleet, engines=self.engines, cache=self.ctx.cache,
                 tracer=tracer, slo=monitor, defer_limit=defer_limit,
                 shed_after=shed_after, drift_threshold=drift_threshold,
-                drift_min_samples=drift_min_samples)
+                drift_min_samples=drift_min_samples,
+                resilience=resilience or None)
             self._router_kw = kw
         return self._router
 
@@ -229,9 +266,16 @@ class Deployment:
         serving with ``slo=False``)."""
         return self._router.slo if self._router is not None else None
 
+    def health(self) -> dict:
+        """The served fleet's resilience health — ``Router.health()``:
+        per-tenant failure counters, breaker state, degradation-ladder
+        level, plus fleet replan-failure counts.  Empty before
+        :meth:`serve`."""
+        return self._router.health() if self._router is not None else {}
+
     def replay(self, scenario: str = "steady", *, duration_s: float = 0.25,
                seed: int = 0, speed: float = 1.0, requests=None,
-               json_dir=None, **scenario_kw):
+               json_dir=None, faults=None, **scenario_kw):
         """Open-loop traffic replay through the served fleet (see
         :mod:`repro.obs.workload`): generate (or take) a trace, warm the
         router, fire arrivals on the wall clock, and return the
@@ -239,10 +283,19 @@ class Deployment:
         + scheduling lag).  ``requests`` overrides the generator with an
         explicit trace (e.g. :func:`repro.obs.workload.load_trace`);
         ``json_dir`` additionally writes the per-tenant
-        ``BENCH_serve_<net>__<scenario>.json`` tail snapshots."""
+        ``BENCH_serve_<net>__<scenario>.json`` tail snapshots.
+
+        ``faults`` — a :class:`repro.faults.FaultPlan` (or injector, spec
+        list, or saved-plan path) armed on the router AFTER warmup, so
+        compile-time traffic never consumes scheduled fault indices: the
+        chaos replay.  Defaults to the plan given to :meth:`build`."""
         from repro.obs import workload
         router = self.serve()
         inputs = router.warmup()
+        injector = (_fault_injector(faults) if faults is not None
+                    else self._injector)
+        if injector is not None:
+            router.arm_faults(injector)
         if requests is None:
             tenants = {t.net_id: t.plan.kind for t in self.fleet.tenants}
             requests = workload.make_scenario(
@@ -290,7 +343,31 @@ class Deployment:
         """Feed measured latencies back and replan the fleet in place (the
         PR-3 drift loop): router metrics when the deployment is serving,
         engine measurements otherwise.  Costs and budgets move; tiles,
-        regimes and engines stay.  Returns (and adopts) the new fleet."""
+        regimes and engines stay.  Returns (and adopts) the new fleet.
+
+        Degradation rung for the planner: when recalibration fails while a
+        FITTED machine model is in play, the deployment drops to stock
+        constants (``degrade/machine_model`` audit span), keeps the current
+        fleet, and returns it — a sick calibration must not take down
+        serving.  With stock constants already in play the failure is
+        re-raised (there is no rung left)."""
+        import time as _time
+        try:
+            return self._recalibrate(budget_factor=budget_factor)
+        except Exception as exc:
+            # Usage guidance ("nothing measured yet") is not a rung; with
+            # stock constants already in play there is no rung left either.
+            if self.ctx.model is None or "nothing measured" in str(exc):
+                raise
+            t0 = _time.perf_counter()
+            self.ctx.model = None
+            if self.ctx.tracer.enabled:
+                self.ctx.tracer.add(
+                    "degrade/machine_model", t0, _time.perf_counter(),
+                    tenant="deploy", error=str(exc)[:160])
+            return self.ctx.fleet
+
+    def _recalibrate(self, *, budget_factor: float | None) -> FleetPlan:
         from repro.plan import calibrate
         if self._router is not None and any(
                 t.metrics.count for t in self._router._tenants.values()):
@@ -330,15 +407,16 @@ class Deployment:
     def export_prometheus(self, path="metrics.prom"):
         """Write per-(tenant, kind) span aggregates as a Prometheus
         text-exposition snapshot — including the tracer's dropped-span
-        counter and, once serving with an SLO monitor, the per-tenant
-        budget/latency/burn-rate/violation families; returns the path."""
+        counter and, once serving, the per-tenant SLO families and the
+        ``repro_resilience_*`` health families; returns the path."""
         from repro.obs import aggregate, write_prometheus
         slo = self.slo
         return write_prometheus(
             aggregate(self.tracer.spans), path,
             dropped=self.tracer.dropped if self.tracer.enabled else None,
             slo=slo.snapshot() if slo is not None else None,
-            profile=self.profile() or None)
+            profile=self.profile() or None,
+            resilience=self.health() or None)
 
     def attribution(self):
         """Plan-vs-measured rows per (tenant, span kind) — see
@@ -444,6 +522,30 @@ class Deployment:
                 lines.append(f"slo: {total} violation event(s) {per}")
             else:
                 lines.append("slo: ok (no violation events)")
+        health = self.health()
+        if health:
+            tenants = health.get("tenants", {})
+            sick = {t: st for t, st in tenants.items()
+                    if st.get("failures") or st.get("degrade_level")
+                    or st.get("state", "closed") != "closed"}
+            if sick:
+                lines.append("health:")
+                for t, st in sorted(sick.items()):
+                    bits = [f"failures={st.get('failures', 0)}",
+                            f"level={st.get('degrade_level', 0)}"]
+                    if "state" in st:
+                        bits.append(f"breaker={st['state']} "
+                                    f"opens={st.get('breaker_opens', 0)} "
+                                    f"recloses={st.get('breaker_recloses', 0)}")
+                    lines.append(f"  {t:<14} " + " ".join(bits))
+            else:
+                supervised = ("supervised" if health.get("supervised")
+                              else "unsupervised")
+                lines.append(f"health: ok ({supervised}; no failures, "
+                             f"all breakers closed, ladder at level 0)")
+            if health.get("replan_failures"):
+                lines.append(f"health: {health['replan_failures']} replan "
+                             f"failure(s) — serving on the current fleet")
         prows = ([r for r in self.profile() if r.group is None]
                  if self.ctx.fleet is not None else [])
         if prows:

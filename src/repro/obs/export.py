@@ -97,7 +97,8 @@ def _fmt(x: float) -> str:
 def prometheus_text(stats: dict, *, metric: str = _PROM_METRIC,
                     dropped: int | None = None,
                     slo: dict | None = None,
-                    profile: list | None = None) -> str:
+                    profile: list | None = None,
+                    resilience: dict | None = None) -> str:
     """Render span aggregates as a Prometheus text-format snapshot.
 
     ``stats`` maps ``(tenant, kind)`` to a :func:`repro.obs.trace.summarize`
@@ -114,7 +115,11 @@ def prometheus_text(stats: dict, *, metric: str = _PROM_METRIC,
     the violation-event counter.  ``profile`` (a list of
     :class:`repro.obs.profile.ProfileRow`) adds the ``repro_profile_*``
     families: achieved FLOP/s / bytes/s, roofline fraction, the bound
-    classification as an info-style gauge, and measured LARE."""
+    classification as an info-style gauge, and measured LARE.
+    ``resilience`` (a ``Router.health()`` dict) adds the
+    ``repro_resilience_*`` families: per-tenant failure counters, circuit
+    breaker state/opens/recloses, degradation-ladder level, retry and
+    deadline-overrun counters, and the fleet-level replan-failure count."""
     lines = [
         f"# HELP {metric} Span-decomposed service time by tenant and kind.",
         f"# TYPE {metric} summary",
@@ -142,6 +147,8 @@ def prometheus_text(stats: dict, *, metric: str = _PROM_METRIC,
         lines += _slo_families(slo)
     if profile:
         lines += _profile_families(profile)
+    if resilience:
+        lines += _resilience_families(resilience)
     return "\n".join(lines) + "\n"
 
 
@@ -190,6 +197,71 @@ def _profile_families(rows: list) -> list[str]:
             lines += [f"# HELP {name} {help_txt}",
                       f"# TYPE {name} gauge",
                       *(f"{name}{{{lab}}} {_fmt(v)}" for lab, v in samples)]
+    return lines
+
+
+def _resilience_families(health: dict) -> list[str]:
+    """The ``repro_resilience_*`` families from a ``Router.health()`` dict.
+
+    Breaker state is exported info-style (one ``{tenant, state}`` sample at
+    1.0 per tenant — alert rules match on the label, not a magic number);
+    every counter defaults to 0 so unsupervised tenants still expose the
+    family with a stable label set."""
+    tenants = health.get("tenants", {})
+    fail, state, opens, recloses, level, retries, deadline = (
+        [], [], [], [], [], [], [])
+    for tenant, st in sorted(tenants.items()):
+        t = f'tenant="{_prom_escape(str(tenant))}"'
+        fail.append(f"repro_resilience_failures_total{{{t}}} "
+                    f"{int(st.get('failures', 0))}")
+        br_state = st.get("state")
+        if br_state:
+            state.append(f'repro_resilience_breaker_state{{{t},'
+                         f'state="{_prom_escape(str(br_state))}"}} 1.0')
+            opens.append(f"repro_resilience_breaker_opens_total{{{t}}} "
+                         f"{int(st.get('breaker_opens', 0))}")
+            recloses.append(
+                f"repro_resilience_breaker_recloses_total{{{t}}} "
+                f"{int(st.get('breaker_recloses', 0))}")
+            retries.append(f"repro_resilience_retries_total{{{t}}} "
+                           f"{int(st.get('retries', 0))}")
+            deadline.append(
+                f"repro_resilience_deadline_exceeded_total{{{t}}} "
+                f"{int(st.get('deadline_exceeded', 0))}")
+        level.append(f"repro_resilience_degrade_level{{{t}}} "
+                     f"{int(st.get('degrade_level', 0))}")
+    lines = []
+    for name, kind, help_txt, samples in (
+            ("repro_resilience_failures_total", "counter",
+             "Failed requests per tenant (engine exceptions, non-finite "
+             "outputs, batcher faults); never counted as latency.", fail),
+            ("repro_resilience_breaker_state", "gauge",
+             "Circuit breaker state as an info-style gauge "
+             "(closed/open/half_open).", state),
+            ("repro_resilience_breaker_opens_total", "counter",
+             "Circuit breaker open transitions per tenant.", opens),
+            ("repro_resilience_breaker_recloses_total", "counter",
+             "Circuit breaker re-close (recovery) transitions per tenant.",
+             recloses),
+            ("repro_resilience_degrade_level", "gauge",
+             "Degradation-ladder rung: 0=fused, 1=per-layer fallback, "
+             "2=shedding (breaker open).", level),
+            ("repro_resilience_retries_total", "counter",
+             "Supervisor retry attempts per tenant.", retries),
+            ("repro_resilience_deadline_exceeded_total", "counter",
+             "Requests whose wall-clock service time exceeded the "
+             "plan-derived deadline (audited, not breaker-fed).", deadline)):
+        if samples:
+            lines += [f"# HELP {name} {help_txt}", f"# TYPE {name} {kind}",
+                      *samples]
+    if "replan_failures" in health:
+        lines += [
+            "# HELP repro_resilience_replan_failures_total Drift-triggered "
+            "replans that failed and fell back to the current fleet.",
+            "# TYPE repro_resilience_replan_failures_total counter",
+            f"repro_resilience_replan_failures_total "
+            f"{int(health.get('replan_failures', 0))}",
+        ]
     return lines
 
 
@@ -272,10 +344,12 @@ def parse_prometheus(text: str) -> list[dict]:
 
 def write_prometheus(stats: dict, path, *, metric: str = _PROM_METRIC,
                      dropped: int | None = None, slo: dict | None = None,
-                     profile: list | None = None):
+                     profile: list | None = None,
+                     resilience: dict | None = None):
     """Write the Prometheus snapshot; returns the path."""
     p = pathlib.Path(path)
     p.parent.mkdir(parents=True, exist_ok=True)
     p.write_text(prometheus_text(stats, metric=metric, dropped=dropped,
-                                 slo=slo, profile=profile))
+                                 slo=slo, profile=profile,
+                                 resilience=resilience))
     return p

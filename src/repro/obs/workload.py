@@ -281,7 +281,8 @@ class RequestRecord:
     arrival_s: float              # scheduled (trace) arrival
     lag_s: float                  # how late the driver fired it
     e2e_s: float | None           # end-to-end latency; None if not completed
-    status: str                   # "ok" | "shed" | "queue_full" | "stuck"
+    status: str                   # "ok" | "shed" | "queue_full" | "fault"
+                                  # | "breaker" | "stuck"
 
 
 @dataclasses.dataclass
@@ -311,6 +312,8 @@ class ReplayReport:
                 "shed": sum(1 for r in recs if r.status == "shed"),
                 "queue_full": sum(1 for r in recs
                                   if r.status == "queue_full"),
+                "fault": sum(1 for r in recs if r.status == "fault"),
+                "breaker": sum(1 for r in recs if r.status == "breaker"),
                 "stuck": sum(1 for r in recs if r.status == "stuck"),
                 "p50_s": percentile(ok, 0.50),
                 "p95_s": percentile(ok, 0.95),
@@ -354,10 +357,14 @@ def replay(router, requests: Iterable[TraceRequest], *,
     LM requests become ``engine.Request``s via ``router.submit``; their
     e2e latency is submit-to-``t_done`` on the request object.  Refusals
     (shedding, queue-depth bound) are recorded, not raised: under open
-    loop, back-pressure is data.
+    loop, back-pressure is data — and so are faults: a request the engine
+    failed records ``"fault"``, one refused by an open circuit breaker
+    records ``"breaker"`` (most-specific exception first, since the serve
+    exceptions form a hierarchy under ``TenantOverBudget``).
     """
     from repro.serve.engine import Request
-    from repro.serve.router import TenantOverBudget, TenantQueueFull
+    from repro.serve.router import (TenantBreakerOpen, TenantFaulted,
+                                    TenantOverBudget, TenantQueueFull)
     if speed <= 0:
         raise ValueError(f"speed must be > 0, got {speed}")
     requests = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
@@ -383,10 +390,20 @@ def replay(router, requests: Iterable[TraceRequest], *,
             t0 = time.perf_counter()
             try:
                 router.infer(tr.tenant, inputs[tr.tenant])
+            except TenantBreakerOpen:
+                records.append(RequestRecord(tr.rid, tr.tenant, tr.kind,
+                                             tr.arrival_s, lag, None,
+                                             "breaker"))
+                continue
             except TenantQueueFull:
                 records.append(RequestRecord(tr.rid, tr.tenant, tr.kind,
                                              tr.arrival_s, lag, None,
                                              "queue_full"))
+                continue
+            except TenantFaulted:
+                records.append(RequestRecord(tr.rid, tr.tenant, tr.kind,
+                                             tr.arrival_s, lag, None,
+                                             "fault"))
                 continue
             except TenantOverBudget:
                 records.append(RequestRecord(tr.rid, tr.tenant, tr.kind,
@@ -404,10 +421,20 @@ def replay(router, requests: Iterable[TraceRequest], *,
             t0 = time.perf_counter()
             try:
                 router.submit(tr.tenant, req)
+            except TenantBreakerOpen:
+                records.append(RequestRecord(tr.rid, tr.tenant, tr.kind,
+                                             tr.arrival_s, lag, None,
+                                             "breaker"))
+                continue
             except TenantQueueFull:
                 records.append(RequestRecord(tr.rid, tr.tenant, tr.kind,
                                              tr.arrival_s, lag, None,
                                              "queue_full"))
+                continue
+            except TenantFaulted:
+                records.append(RequestRecord(tr.rid, tr.tenant, tr.kind,
+                                             tr.arrival_s, lag, None,
+                                             "fault"))
                 continue
             except TenantOverBudget:
                 records.append(RequestRecord(tr.rid, tr.tenant, tr.kind,
@@ -417,7 +444,10 @@ def replay(router, requests: Iterable[TraceRequest], *,
             inflight.append((tr, lag, t0, req))
     router.run_until_drained(max_ticks=max_drain_ticks)
     for tr, lag, t0, req in inflight:
-        if req.done and req.t_done is not None:
+        if req.done and getattr(req, "error", None):
+            records.append(RequestRecord(tr.rid, tr.tenant, tr.kind,
+                                         tr.arrival_s, lag, None, "fault"))
+        elif req.done and req.t_done is not None:
             records.append(RequestRecord(tr.rid, tr.tenant, tr.kind,
                                          tr.arrival_s, lag,
                                          req.t_done - t0, "ok"))
@@ -457,7 +487,9 @@ def write_replay_snapshots(report: ReplayReport, json_dir, *,
         violations = slo_snap.get(nid, {}).get("violations", 0)
         derived = (f"src=measured;scenario={scenario};count={s['count']};"
                    f"ok={s['ok']};shed={s['shed']};"
-                   f"queue_full={s['queue_full']};stuck={s['stuck']};"
+                   f"queue_full={s['queue_full']};"
+                   f"fault={s.get('fault', 0)};"
+                   f"breaker={s.get('breaker', 0)};stuck={s['stuck']};"
                    f"violations={violations};kind={s['kind']}")
         rows = []
         if s["ok"]:
@@ -499,13 +531,15 @@ def format_replay(report: ReplayReport, *, slo=None) -> str:
              + (f" (speed={report.speed:g}x)" if report.speed != 1.0
                 else "")]
     hdr = (f"  {'tenant':<14}{'kind':<5}{'n':>5}{'ok':>5}{'shed':>5}"
-           f"{'full':>5}  {'p50':>9}{'p95':>9}{'p99':>9}{'max':>9}")
+           f"{'full':>5}{'flt':>5}{'brk':>5}  "
+           f"{'p50':>9}{'p95':>9}{'p99':>9}{'max':>9}")
     lines.append(hdr)
     summary = report.summary()
     for nid, s in summary.items():
         lines.append(
             f"  {nid:<14}{s['kind']:<5}{s['count']:>5}{s['ok']:>5}"
-            f"{s['shed']:>5}{s['queue_full']:>5}  "
+            f"{s['shed']:>5}{s['queue_full']:>5}"
+            f"{s.get('fault', 0):>5}{s.get('breaker', 0):>5}  "
             f"{s['p50_s'] * 1e6:>7.1f}us{s['p95_s'] * 1e6:>7.1f}us"
             f"{s['p99_s'] * 1e6:>7.1f}us{s['max_s'] * 1e6:>7.1f}us")
     lines.append("scheduling lag (how late arrivals fired — open-loop "

@@ -63,9 +63,30 @@ import hashlib
 import json
 import os
 import pathlib
+import warnings
 
 PLAN_SCHEMA_VERSION = 3
-PLANNER_VERSION = "plan-5"      # bump on any search/cost-model change
+PLANNER_VERSION = "plan-6"      # bump on any search/cost-model change
+# plan-6: serve sections gained the "resilience" knobs (breaker/retry/
+# deadline — repro.faults.RESILIENCE_DEFAULTS); bumped so cached artifacts
+# from earlier planners self-invalidate and pick the knobs up on re-plan.
+
+
+def atomic_write_text(path: str | os.PathLike, text: str) -> pathlib.Path:
+    """Crash-safe artifact write: tmp file in the same directory, then
+    ``os.replace`` (atomic on POSIX and Windows).  A process killed
+    mid-write leaves the OLD artifact intact instead of a truncated JSON
+    that poisons every later cache read."""
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    tmp = p.with_name(f"{p.name}.tmp.{os.getpid()}")
+    try:
+        tmp.write_text(text)
+        os.replace(tmp, p)
+    except BaseException:
+        tmp.unlink(missing_ok=True)
+        raise
+    return p
 
 
 @dataclasses.dataclass(frozen=True)
@@ -303,10 +324,7 @@ class DeploymentPlan:
         return cls.from_dict(json.loads(s))
 
     def save(self, path: str | os.PathLike) -> pathlib.Path:
-        p = pathlib.Path(path)
-        p.parent.mkdir(parents=True, exist_ok=True)
-        p.write_text(self.to_json() + "\n")
-        return p
+        return atomic_write_text(path, self.to_json() + "\n")
 
     @classmethod
     def load(cls, path: str | os.PathLike) -> "DeploymentPlan":
@@ -358,6 +376,35 @@ class PlanCache:
         self._mem: dict[str, DeploymentPlan] = {}
         self._fleets: dict[str, object] = {}
         self.directory = pathlib.Path(directory) if directory else None
+        # Chaos hook (repro.faults): when a FaultInjector is armed here,
+        # "cache.read" faults make a cached artifact read corrupt — the
+        # same path a real truncated file takes.
+        self.injector = None
+        self.corrupt_reads = 0
+
+    def _read_artifact(self, path: pathlib.Path, loader, what: str):
+        """Load one cached artifact; corrupt/truncated JSON is a cache MISS
+        (warn + re-plan), never an exception — a half-written file from a
+        crashed process must not wedge every later deployment."""
+        if self.injector is not None:
+            spec = self.injector.fire("cache.read", tenant=what)
+            if spec is not None and spec.kind == "cache_corruption":
+                self.corrupt_reads += 1
+                warnings.warn(
+                    f"injected corrupt {what} artifact {path.name}; "
+                    f"treating as cache miss", RuntimeWarning,
+                    stacklevel=3)
+                return None
+        try:
+            return loader(path)
+        except (json.JSONDecodeError, KeyError, ValueError, TypeError,
+                OSError) as exc:
+            self.corrupt_reads += 1
+            warnings.warn(
+                f"corrupt {what} artifact {path} ({exc.__class__.__name__}: "
+                f"{exc}); treating as cache miss", RuntimeWarning,
+                stacklevel=3)
+            return None
 
     def get(self, key: str) -> DeploymentPlan | None:
         if key in self._mem:
@@ -365,7 +412,9 @@ class PlanCache:
         if self.directory is not None:
             p = self.directory / f"{key}.json"
             if p.exists():
-                plan = DeploymentPlan.load(p)
+                plan = self._read_artifact(p, DeploymentPlan.load, "plan")
+                if plan is None:
+                    return None
                 self._mem[key] = plan
                 return plan
         return None
@@ -384,7 +433,9 @@ class PlanCache:
             p = self.directory / f"{key}.fleet.json"
             if p.exists():
                 from repro.plan.multinet import FleetPlan
-                fleet = FleetPlan.load(p)
+                fleet = self._read_artifact(p, FleetPlan.load, "fleet")
+                if fleet is None:
+                    return None
                 self._fleets[key] = fleet
                 return fleet
         return None

@@ -38,9 +38,11 @@ import os
 import pathlib
 
 from repro.core import boundary
+from repro.faults import RESILIENCE_DEFAULTS
 from repro.plan import planner
 from repro.plan.artifact import (PLAN_SCHEMA_VERSION, PLANNER_VERSION,
-                                 DeploymentPlan, default_cache)
+                                 DeploymentPlan, atomic_write_text,
+                                 default_cache)
 
 # Default headroom between planned and enforced latency: the router flags a
 # tenant when measured latency exceeds budget_factor x planned (matching the
@@ -172,10 +174,7 @@ class FleetPlan:
                    est_latency_s=plan.est_latency_s)
 
     def save(self, path: str | os.PathLike) -> pathlib.Path:
-        p = pathlib.Path(path)
-        p.parent.mkdir(parents=True, exist_ok=True)
-        p.write_text(self.to_json() + "\n")
-        return p
+        return atomic_write_text(path, self.to_json() + "\n")
 
     @classmethod
     def load(cls, path: str | os.PathLike) -> "FleetPlan":
@@ -287,11 +286,17 @@ def _with_slo(serve: dict, kind: str, budget_s: float) -> dict:
     p99 at 1.5x that — the headroom a nearest-rank p99 needs over p95 under
     the planner's own jitter model.  Edge tenants default ``critical`` (the
     trigger path the paper's fixed-latency budgets are about), LM tenants
-    ``standard``."""
+    ``standard``.
+
+    The ``resilience`` block (plan-6) carries the supervisor's per-tenant
+    knobs — circuit-breaker K/cooldown, retry budget, deadline factor
+    (:data:`repro.faults.RESILIENCE_DEFAULTS`) — so fault-tolerance policy
+    ships IN the plan artifact like every other serve policy."""
     return {
         **serve,
         "priority": "standard" if kind == "lm" else "critical",
         "slo": {"p95_s": budget_s, "p99_s": 1.5 * budget_s},
+        "resilience": dict(RESILIENCE_DEFAULTS),
     }
 
 

@@ -4,12 +4,18 @@
 and the :class:`EdgeEngine` plan executor; ``router``/``tenant``/``metrics``
 form the multi-tenant runtime over a :class:`repro.plan.FleetPlan` —
 co-resident networks dispatched by net id under per-tenant latency budgets.
+``resilience`` supervises it all: per-tenant circuit breakers, bounded
+retries, deadlines and the fused → per-layer → shed degradation ladder
+(fault taxonomy + deterministic injection live in :mod:`repro.faults`).
 """
 
 from repro.serve.metrics import TenantMetrics, write_serve_snapshots
-from repro.serve.router import Router, TenantOverBudget, TenantQueueFull
+from repro.serve.resilience import CircuitBreaker, Supervisor
+from repro.serve.router import (Router, TenantBreakerOpen, TenantFaulted,
+                                TenantOverBudget, TenantQueueFull)
 from repro.serve.tenant import Tenant, edge_tenant, lm_tenant, plan_priority
 
-__all__ = ["Router", "Tenant", "TenantMetrics", "TenantOverBudget",
-           "TenantQueueFull", "edge_tenant", "lm_tenant", "plan_priority",
-           "write_serve_snapshots"]
+__all__ = ["CircuitBreaker", "Router", "Supervisor", "Tenant",
+           "TenantMetrics", "TenantBreakerOpen", "TenantFaulted",
+           "TenantOverBudget", "TenantQueueFull", "edge_tenant", "lm_tenant",
+           "plan_priority", "write_serve_snapshots"]

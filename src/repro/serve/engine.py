@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import partition, runtime
+from repro.faults import InjectedFault, NonFiniteOutput
 from repro.models import api
 from repro.models.config import ModelConfig
 from repro.obs import NULL_TRACER, summarize
@@ -152,6 +153,11 @@ class Request:
     t_submit: float | None = None    # stamped by ContinuousBatcher.submit
     t_admit: float | None = None     # stamped when a slot is assigned
     t_done: float | None = None      # stamped when the request completes
+    # Fault disposition: set (e.g. "non_finite_output") when the request
+    # FAILED rather than completed — done=True with error set means the
+    # slot was freed and no further tokens are coming, but ``out`` must
+    # not be trusted.  The router counts these as per-tenant failures.
+    error: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -269,6 +275,13 @@ class ContinuousBatcher:
                      out_axes=(0, axes)))
         self._steps = 0
         self._hlo_text: str | None = None
+        self._reset_fn = None            # jitted slot reset, built on demand
+        # Fault hooks (repro.faults): ``injector`` is armed by
+        # Router.arm_faults for chaos runs; unarmed it costs one ``is not
+        # None`` per tick.  ``faults`` counts failed requests/ticks
+        # (injected or organic, e.g. non-finite logits).
+        self.injector = None
+        self.faults = 0
 
     def hlo_text(self) -> str:
         """Post-optimization HLO of the ACTUAL jitted decode step — the
@@ -340,10 +353,16 @@ class ContinuousBatcher:
         return logits
 
     def _reset_slot(self, i: int):
-        """Fresh cache + position for a re-used slot (no stale KV)."""
-        self.state = jax.tree.map(
-            lambda v, ax: v.at[(slice(None),) * ax + (i,)].set(0),
-            self.state, self._axes)
+        """Fresh cache + position for a re-used slot (no stale KV).  One
+        jitted executable (slot index traced, so every slot shares it)
+        instead of 2x-layers eager ``.at[].set`` dispatches — admission
+        runs before any span opens, so its cost must stay in the noise."""
+        if self._reset_fn is None:
+            self._reset_fn = jax.jit(
+                lambda state, j: jax.tree.map(
+                    lambda v, ax: v.at[(slice(None),) * ax + (j,)].set(0),
+                    state, self._axes))
+        self.state = self._reset_fn(self.state, jnp.int32(i))
         self.pos[i] = 0
 
     @property
@@ -377,7 +396,11 @@ class ContinuousBatcher:
             self.pos[i] += 1
         req.filled = limit
         if req.filled == len(req.prompt):
-            req.out.append(int(jnp.argmax(logits[i, -1])))
+            row = np.asarray(logits[i, -1])
+            if not np.isfinite(row).all():
+                self._fail_request(i, req, "non_finite_output")
+            else:
+                req.out.append(int(row.argmax()))
         self._record("prefill_chunk", t0, time.perf_counter(), trace=req.rid,
                      tokens=limit - first, slot=i)
 
@@ -426,9 +449,26 @@ class ContinuousBatcher:
         """Close out a completed (or evicted) request's trace: the request
         span covers submit -> done, whatever path ended it."""
         if self.tracer.enabled and req.t_submit is not None:
+            extra = {"error": req.error} if req.error else {}
             self.tracer.add("request", req.t_submit, req.t_done,
                             trace=req.rid, tenant=self.trace_label,
-                            tokens_out=len(req.out))
+                            tokens_out=len(req.out), **extra)
+
+    def _fail_request(self, i: int, req: Request, kind: str):
+        """A poisoned output FAILS the request instead of emitting garbage:
+        the slot is freed, the fault counted (``fault/non_finite`` span),
+        and the request span still closes so traces reconcile.  The router
+        reads ``req.error`` and books a per-tenant failure."""
+        now = time.perf_counter()
+        self.faults += 1
+        req.error = kind
+        req.done = True
+        req.t_done = now
+        self.active[i] = None
+        if self.tracer.enabled:
+            self.tracer.add("fault/non_finite", now, now, trace=req.rid,
+                            tenant=self.trace_label, slot=i)
+        self._finish(req)
 
     def step(self, wait_s: float = 0.0, *,
              admit_cap: int | None = None) -> int:
@@ -437,6 +477,19 @@ class ContinuousBatcher:
         only when EVERY slot is empty, so a busy batcher never stalls its
         live decodes waiting for new arrivals.  ``admit_cap`` tightens this
         tick's admissions (0 = defer the queue, keep decoding)."""
+        if self.injector is not None:
+            spec = self.injector.fire("batcher.tick", tenant=self.trace_label)
+            if spec is not None:
+                if spec.kind == "batcher_stall":
+                    if spec.magnitude_s > 0:
+                        time.sleep(spec.magnitude_s)
+                    return self.n_active   # tick skipped: no admit, no decode
+                if spec.kind == "engine_exception":
+                    self.faults += 1
+                    raise InjectedFault(
+                        f"injected batcher fault on {self.trace_label}")
+                if spec.kind == "latency_spike" and spec.magnitude_s > 0:
+                    time.sleep(spec.magnitude_s)
         self._admit(wait_s=wait_s if not any(self.active) else 0.0,
                     admit_cap=admit_cap)
         # Slots mid-prefill (including just-admitted ones) advance by one
@@ -456,15 +509,24 @@ class ContinuousBatcher:
         if live.any():
             t0 = time.perf_counter()
             logits = self._decode_masked(tok, live)
+            if self.injector is not None:
+                spec = self.injector.fire("batcher.decode",
+                                          tenant=self.trace_label)
+                if spec is not None and spec.kind == "non_finite_output":
+                    logits = jnp.full_like(logits, jnp.nan)
             self._steps += 1
             stepped = []                 # (slot, request) pairs that decoded
             done_reqs = []
             for i, req in enumerate(self.active):
                 if req is None or not live[i]:
                     continue
-                stepped.append((i, req))
                 self.pos[i] += 1
-                req.out.append(int(jnp.argmax(logits[i, -1])))
+                row = np.asarray(logits[i, -1])
+                if not np.isfinite(row).all():
+                    self._fail_request(i, req, "non_finite_output")
+                    continue
+                stepped.append((i, req))
+                req.out.append(int(row.argmax()))
                 if len(req.out) >= self._max_new(req):
                     req.done = True      # completion OR max_new_cap eviction
                     done_reqs.append(req)
@@ -531,7 +593,42 @@ class EdgeEngine:
         self._fwd = jax.jit(lambda x: edge_lib.edge_forward_q8(
             self.qparams, cfg, x, x_scale=x_scale, plan=self.plan))
         self._hlo_text: str | None = None
+        # Degradation ladder state (repro.serve.resilience): level 0 runs
+        # the planned fused megakernel; level 1 the per-layer gemm_int8
+        # path (``fused=False`` — bit-exact vs fused, so degrading never
+        # changes answers).  The fallback jit is built lazily on first
+        # demotion; ``injector``/``faults`` mirror the batcher's hooks.
+        self.degrade_level = 0
+        self._fwd_fallback = None
+        self.injector = None
+        self.faults = 0
         self.reset_measurements()
+
+    def _fallback(self):
+        """The per-layer (``fused=False``) jit, compiled on first use."""
+        if self._fwd_fallback is None:
+            from repro.models import edge as edge_lib
+            self._fwd_fallback = jax.jit(
+                lambda x: edge_lib.edge_forward_q8(
+                    self.qparams, self.cfg, x, x_scale=self.x_scale,
+                    plan=self.plan, fused=False))
+        return self._fwd_fallback
+
+    def degrade(self) -> bool:
+        """Step down the ladder (fused -> per-layer).  Returns True if a
+        demotion happened; False when already at the bottom rung this
+        engine owns (the breaker's open state IS the shed rung)."""
+        if self.degrade_level == 0:
+            self.degrade_level = 1
+            return True
+        return False
+
+    def restore(self) -> bool:
+        """Re-promote to the fused fast path.  Returns True on change."""
+        if self.degrade_level > 0:
+            self.degrade_level = 0
+            return True
+        return False
 
     def hlo_text(self) -> str:
         """Post-optimization HLO of the jitted planned forward — the one
@@ -544,7 +641,31 @@ class EdgeEngine:
 
     def infer(self, x) -> jax.Array:
         t0 = time.perf_counter()
-        y = jax.block_until_ready(self._fwd(x))
+        spec = None
+        if self.injector is not None:
+            spec = self.injector.fire("engine.infer", tenant=self.trace_label)
+        if spec is not None:
+            if spec.kind == "engine_exception":
+                self.faults += 1
+                raise InjectedFault(
+                    f"injected engine fault on {self.trace_label}")
+            if spec.kind == "latency_spike" and spec.magnitude_s > 0:
+                time.sleep(spec.magnitude_s)   # inside [t0, t1]: visible
+        fwd = self._fwd if self.degrade_level == 0 else self._fallback()
+        y = jax.block_until_ready(fwd(x))
+        if spec is not None and spec.kind == "non_finite_output":
+            y = jnp.full_like(y, jnp.nan)      # poison; caught just below
+        # Host-side finiteness guard: np.asarray on a ready CPU array is
+        # zero-copy, and the reduction is microseconds next to the forward.
+        # A poisoned output FAILS the call rather than returning garbage.
+        if not bool(np.isfinite(np.asarray(y)).all()):
+            t1 = time.perf_counter()
+            self.faults += 1
+            if self.tracer.enabled:
+                self.tracer.add("fault/non_finite", t0, t1,
+                                tenant=self.trace_label)
+            raise NonFiniteOutput(
+                f"{self.trace_label}: non-finite model output")
         t1 = time.perf_counter()
         dt = t1 - t0
         self.total_s += dt

@@ -48,6 +48,7 @@ class TenantMetrics:
         self.budget_violations = 0
         self.consecutive_violations = 0
         self.invalid_observations = 0
+        self.failures = 0
         self._latencies = collections.deque(maxlen=self.window)
         self._occ_sum = 0.0
         self._occ_n = 0
@@ -71,6 +72,13 @@ class TenantMetrics:
             self.budget_violations += 1
             self.consecutive_violations += 1
         return within
+
+    def observe_failure(self):
+        """Record one FAILED request (engine exception, non-finite output,
+        batcher fault).  Failures never enter the latency window — a dead
+        request has no honest latency — they are their own counter, exported
+        as the ``repro_resilience_failures_total`` Prometheus family."""
+        self.failures += 1
 
     def observe_occupancy(self, active: int, capacity: int):
         """Record one scheduling tick's slot occupancy."""
@@ -121,6 +129,7 @@ class TenantMetrics:
             "latency_budget_s": _finite(self.latency_budget_s),
             "budget_violations": self.budget_violations,
             "invalid_observations": self.invalid_observations,
+            "failures": self.failures,
             "occupancy": _finite(self.occupancy, 0.0),
         }
 
@@ -167,6 +176,7 @@ def write_serve_snapshots(report: dict, json_dir, *,
     for nid, snap in report.items():
         derived = (f"src=measured;count={snap['count']};"
                    f"violations={snap['budget_violations']};"
+                   f"failures={snap.get('failures', 0)};"
                    f"kind={snap.get('kind', '?')}")
         rows = []
         if snap["count"]:

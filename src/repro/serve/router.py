@@ -61,6 +61,22 @@ Two further plan-driven controls:
   so a backlog is slowed, never starved; shedding remains the last resort.
   Every deferral lands as a ``sched/defer`` audit span.
 
+* **Fault isolation & the supervisor** — engine exceptions during
+  :meth:`infer` or an LM tick are CAUGHT: the failure is booked against
+  that tenant (``TenantMetrics.failures``, a ``fault/<kind>`` audit span)
+  and surfaced as :class:`TenantFaulted`, while every co-resident tenant
+  keeps draining.  With ``resilience=True`` (what ``Deployment.serve``
+  passes) a :class:`~repro.serve.resilience.Supervisor` additionally gives
+  each tenant bounded retry-with-backoff, per-request deadlines from the
+  plan's ``serve["slo"]`` budget, a circuit breaker
+  (:class:`TenantBreakerOpen` while open; deterministic half-open probe),
+  and the fused → per-layer → shed degradation ladder.  A drift-watcher
+  replan that FAILS falls back to the current fleet plan with a
+  ``degrade/replan`` audit span instead of propagating; explicit
+  :meth:`replan_fleet` calls still raise.  :meth:`arm_faults` threads a
+  deterministic :class:`repro.faults.FaultInjector` through every engine
+  hook for chaos testing.
+
 Pass ``tracer=`` (a :class:`repro.obs.Tracer`) to thread request-grain
 spans through every tenant engine: edge requests emit ``infer`` +
 ``request`` spans, LM requests decompose into ``queue`` / ``prefill_chunk``
@@ -74,8 +90,10 @@ from __future__ import annotations
 import time
 from typing import Iterable
 
+from repro.faults import InjectedFault, fault_kind
 from repro.obs import NULL_TRACER
 from repro.obs.slo import priority_rank
+from repro.serve.resilience import Supervisor
 from repro.serve.tenant import Tenant, edge_tenant, lm_tenant
 
 
@@ -87,12 +105,23 @@ class TenantQueueFull(TenantOverBudget):
     """Raised when a tenant's backlog hits its plan's queue-depth bound."""
 
 
+class TenantFaulted(TenantOverBudget):
+    """Raised when a tenant's request FAILED (engine exception, non-finite
+    output) rather than ran late.  The failure is already booked against
+    the tenant; co-resident tenants are unaffected."""
+
+
+class TenantBreakerOpen(TenantFaulted):
+    """Raised while a tenant's circuit breaker refuses traffic (open state,
+    between half-open probes)."""
+
+
 class Router:
     def __init__(self, tenants: Iterable[Tenant], *,
                  shed_after: int | None = None, fleet=None,
                  drift_threshold: float | None = None,
                  drift_min_samples: int = 5, cache=None, tracer=None,
-                 slo=None, defer_limit: int = 4):
+                 slo=None, defer_limit: int = 4, resilience=None):
         self._tenants: dict[str, Tenant] = {}
         for t in tenants:
             if t.net_id in self._tenants:
@@ -126,6 +155,19 @@ class Router:
         self.defer_limit = defer_limit
         self._defer_streak: dict[str, int] = {
             nid: 0 for nid in self._tenants}
+        # Supervised dispatch (repro.serve.resilience): True builds a
+        # Supervisor from each tenant's plan knobs; a Supervisor instance
+        # is adopted as-is; None/False keeps raw dispatch (failures are
+        # still isolated and counted — only breaker/retry/deadline/ladder
+        # need the supervisor).
+        if resilience is True:
+            sup = Supervisor(tracer=self.tracer)
+            for t in self._tenants.values():
+                sup.register(t.net_id, t.plan)
+        else:
+            sup = resilience or None
+        self.supervisor = sup
+        self.replan_failures = 0
 
     # -- construction -----------------------------------------------------
     @classmethod
@@ -133,7 +175,7 @@ class Router:
                    lm: dict | None = None, shed_after: int | None = None,
                    drift_threshold: float | None = None,
                    drift_min_samples: int = 5, cache=None, tracer=None,
-                   slo=None, defer_limit: int = 4,
+                   slo=None, defer_limit: int = 4, resilience=None,
                    x_scale: float = 0.05, seed: int = 0) -> "Router":
         """Build a router from a :class:`FleetPlan`.
 
@@ -164,7 +206,26 @@ class Router:
         return cls(tenants, shed_after=shed_after, fleet=fleet,
                    drift_threshold=drift_threshold,
                    drift_min_samples=drift_min_samples, cache=cache,
-                   tracer=tracer, slo=slo, defer_limit=defer_limit)
+                   tracer=tracer, slo=slo, defer_limit=defer_limit,
+                   resilience=resilience)
+
+    def arm_faults(self, injector) -> "Router":
+        """Thread a :class:`repro.faults.FaultInjector` through every hook
+        this router owns (each tenant engine + the supervisor's replan
+        hook).  Arm AFTER warmup, so compile-time traffic doesn't consume
+        scheduled fault indices.  Builds a default supervisor if none is
+        attached — injected faults without a breaker would just be noise.
+        Returns self for chaining."""
+        if self.supervisor is None:
+            sup = Supervisor(tracer=self.tracer)
+            for t in self._tenants.values():
+                sup.register(t.net_id, t.plan)
+            self.supervisor = sup
+        self.supervisor.injector = injector
+        for t in self._tenants.values():
+            if hasattr(t.engine, "injector"):
+                t.engine.injector = injector
+        return self
 
     # -- lookup -----------------------------------------------------------
     def tenant(self, net_id: str) -> Tenant:
@@ -265,15 +326,53 @@ class Router:
                 self.infer(nid, x)
         return self.report()
 
+    def _breaker_gate(self, t: Tenant):
+        """Refuse while the tenant's circuit is open (half-open probes are
+        admitted by the breaker itself)."""
+        sup = self.supervisor
+        if sup is not None and not sup.admit(t.net_id):
+            br = sup.breaker(t.net_id)
+            raise TenantBreakerOpen(
+                f"tenant {t.net_id!r} circuit open after "
+                f"{br.consecutive_failures} consecutive failures; a probe "
+                f"is admitted after {br.cooldown} refusals")
+
+    def _record_failure(self, t: Tenant, exc: BaseException,
+                        t0: float | None = None):
+        """Book one failed request/tick against its tenant: the failure
+        counter, the breaker (when supervised), and a ``fault/<kind>``
+        audit span.  Non-finite faults already emitted their span at the
+        engine that detected them — don't double-report those."""
+        t.metrics.observe_failure()
+        if self.tracer.enabled and fault_kind(exc) != "non_finite":
+            now = time.perf_counter()
+            self.tracer.add(f"fault/{fault_kind(exc)}",
+                            t0 if t0 is not None else now, now,
+                            tenant=t.net_id, error=str(exc)[:160])
+        if self.supervisor is not None:
+            self.supervisor.record_failure(t)
+
     # -- edge path (synchronous) ------------------------------------------
     def infer(self, net_id: str, x):
-        """Route one edge inference; measured against the tenant's budget."""
+        """Route one edge inference; measured against the tenant's budget.
+        A failing engine raises :class:`TenantFaulted` (after the
+        supervisor's bounded retries, when one is attached) — the fault is
+        booked against THIS tenant and co-residents are untouched."""
         t = self.tenant(net_id)
         self._admission_check(t)
+        self._breaker_gate(t)
+        sup = self.supervisor
         t0 = time.perf_counter()
-        y = t.engine.infer(x)
+        try:
+            y = sup.call_edge(t, x) if sup is not None else t.engine.infer(x)
+        except Exception as exc:
+            self._record_failure(t, exc, t0)
+            raise TenantFaulted(
+                f"tenant {net_id!r} request failed: {exc}") from exc
         t1 = time.perf_counter()
         t.metrics.observe_latency(t1 - t0)
+        if sup is not None:
+            sup.record_success(t, t1 - t0)
         if self.slo is not None:
             self.slo.observe(net_id, t1 - t0)
         if self.tracer.enabled:
@@ -291,6 +390,7 @@ class Router:
         """Enqueue an LM request on its tenant's batcher."""
         t = self.tenant(net_id)
         self._admission_check(t)
+        self._breaker_gate(t)
         self._inflight[net_id].append((request, time.perf_counter()))
         t.engine.submit(request)
         return request
@@ -362,19 +462,35 @@ class Router:
         for t in lm:
             nid = t.net_id
             steps_before = getattr(t.engine, "decode_steps_observed", 0)
-            n = t.engine.step(wait_s=remaining_wait,
-                              admit_cap=0 if nid in deferred else None)
+            try:
+                n = t.engine.step(wait_s=remaining_wait,
+                                  admit_cap=0 if nid in deferred else None)
+            except Exception as exc:
+                # Isolation: one tenant's tick failure is booked against
+                # that tenant; every co-resident keeps draining.
+                n = t.engine.n_active
+                self._record_failure(t, exc)
             remaining_wait = 0.0
             t.metrics.observe_occupancy(t.engine.n_active, t.slots)
             total += n
-            # Complete latencies for drained requests.
+            # Complete latencies for drained requests; a request the
+            # batcher FAILED (req.error, e.g. non-finite logits) books a
+            # failure instead of a latency — garbage never enters the
+            # window or the SLO monitor.
             now = time.perf_counter()
             still = []
             for req, t0 in self._inflight[nid]:
                 if req.done:
-                    t.metrics.observe_latency(now - t0)
-                    if self.slo is not None:
-                        self.slo.observe(nid, now - t0)
+                    if getattr(req, "error", None):
+                        t.metrics.observe_failure()
+                        if self.supervisor is not None:
+                            self.supervisor.record_failure(t)
+                    else:
+                        t.metrics.observe_latency(now - t0)
+                        if self.slo is not None:
+                            self.slo.observe(nid, now - t0)
+                        if self.supervisor is not None:
+                            self.supervisor.record_success(t, now - t0)
                 else:
                     still.append((req, t0))
             self._inflight[nid] = still
@@ -436,11 +552,32 @@ class Router:
     def _maybe_replan(self, t: Tenant):
         """Fire the fleet replan when the tenant that just reported a
         latency has drifted past the threshold.  Checking only that tenant
-        keeps the per-request cost at one percentile computation."""
+        keeps the per-request cost at one percentile computation.
+
+        A drift-triggered replan that FAILS degrades instead of
+        propagating: the router keeps serving under the CURRENT fleet plan,
+        counts the failure, and emits a ``degrade/replan`` audit span — the
+        request that happened to trip the drift check must not die because
+        the planner did.  Explicit :meth:`replan_fleet` calls still raise.
+        """
         if self.drift_threshold is None or self.fleet is None \
                 or not self._tenant_drifted(t):
             return None
-        return self.replan_fleet()
+        try:
+            sup = self.supervisor
+            if sup is not None and sup.injector is not None:
+                spec = sup.injector.fire("replan", tenant=t.net_id)
+                if spec is not None and spec.kind == "replan_failure":
+                    raise InjectedFault(
+                        f"injected replan failure ({t.net_id})")
+            return self.replan_fleet()
+        except Exception as exc:
+            self.replan_failures += 1
+            if self.tracer.enabled:
+                now = time.perf_counter()
+                self.tracer.add("degrade/replan", now, now, tenant=t.net_id,
+                                error=str(exc)[:160])
+            return None
 
     def replan_fleet(self, *, budget_factor: float | None = None):
         """Fleet-wide recalibration: feed every measured tenant's
@@ -482,6 +619,27 @@ class Router:
         self.fleet = new_fleet
 
     # -- reporting --------------------------------------------------------
+    def health(self) -> dict:
+        """Per-tenant resilience state + fleet-level counters — what
+        ``Deployment.summary()`` prints as its health block and the
+        ``repro_resilience_*`` Prometheus families export.  Breaker fields
+        appear only when a supervisor is attached."""
+        tenants = {}
+        for nid, t in self._tenants.items():
+            h = {"failures": t.metrics.failures,
+                 "engine_faults": getattr(t.engine, "faults", 0),
+                 "degrade_level": getattr(t.engine, "degrade_level", 0)}
+            if self.supervisor is not None:
+                h.update(self.supervisor.snapshot(nid))
+                # The ladder's bottom rung is the open breaker itself:
+                # while open, even the per-layer path only runs as probes.
+                if h["state"] != "closed":
+                    h["degrade_level"] = 2
+            tenants[nid] = h
+        return {"tenants": tenants, "replans": self.replans,
+                "replan_failures": self.replan_failures,
+                "supervised": self.supervisor is not None}
+
     def report(self) -> dict:
         """Per-tenant metrics + planned-vs-budget context."""
         out = {}

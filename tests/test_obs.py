@@ -507,10 +507,14 @@ def test_untraced_build_uses_null_tracer():
 # ---------------------------------------------------------------------------
 
 def test_tracing_disabled_adds_under_2pct_to_edge_dispatch():
-    """EdgeEngine.infer with the (disabled) tracer branch vs the raw jitted
-    forward: the median must agree within 2%.  Retries absorb scheduler
-    noise — the guard is against a systematic regression (e.g. span
-    allocation on the disabled path), not against a noisy host."""
+    """EdgeEngine.infer with the (disabled) tracer branch vs the raw guarded
+    dispatch: the median must agree within 2%.  The baseline includes the
+    always-on non-finite output guard — that check is part of infer's
+    contract (a poisoned output fails the call instead of returning
+    garbage), so the 2% bound isolates exactly what this test is about:
+    the cost of the disabled tracer/injector branches.  Retries absorb
+    scheduler noise — the guard is against a systematic regression (e.g.
+    span allocation on the disabled path), not against a noisy host."""
     cfg = edge.edge_config("jet_tagger")
     eng = engine.EdgeEngine(cfg)
     assert eng.tracer is NULL_TRACER
@@ -519,13 +523,16 @@ def test_tracing_disabled_adds_under_2pct_to_edge_dispatch():
         eng.infer(x)                               # jit + cache warm
     n = 50
     for _ in range(3):
+        # Interleave the two populations so scheduler/load noise hits both
+        # equally — back-to-back phases would bias whichever ran during a
+        # background spike.
         raw = []
-        for _ in range(n):
-            t0 = time.perf_counter()
-            jax.block_until_ready(eng._fwd(x))
-            raw.append(time.perf_counter() - t0)
         eng.reset_measurements()
         for _ in range(n):
+            t0 = time.perf_counter()
+            y = jax.block_until_ready(eng._fwd(x))
+            assert bool(np.isfinite(np.asarray(y)).all())
+            raw.append(time.perf_counter() - t0)
             eng.infer(x)
         if eng.measured_p50_s <= percentile(raw, 0.5) * 1.02:
             return

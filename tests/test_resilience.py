@@ -1,0 +1,459 @@
+"""Resilience tests: fault taxonomy + injection, circuit breaker FSM,
+degradation-ladder bit-exactness, router isolation, crash-safe plan cache,
+and recovery under a chaos replay."""
+
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, faults
+from repro import plan as plan_lib
+from repro.models import api, edge
+from repro.serve import engine
+from repro.serve.resilience import CircuitBreaker, Supervisor
+from repro.serve.router import (Router, TenantBreakerOpen, TenantFaulted,
+                                TenantOverBudget)
+
+
+# ---------------------------------------------------------------------------
+# Fault plans + injector
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_generate_deterministic():
+    a = faults.FaultPlan.generate(["x", "y"], seed=7)
+    b = faults.FaultPlan.generate(["x", "y"], seed=7)
+    assert a == b and a.faults
+    assert a != faults.FaultPlan.generate(["x", "y"], seed=8)
+
+
+def test_fault_plan_json_roundtrip(tmp_path):
+    plan = faults.FaultPlan.generate(["jet_tagger"], seed=3)
+    assert faults.FaultPlan.from_json(plan.to_json()) == plan
+    p = plan.save(tmp_path / "faults.json")
+    assert faults.FaultPlan.load(p) == plan
+    # strict JSON on disk
+    json.loads(p.read_text())
+
+
+def test_fault_spec_validation_and_default_site():
+    with pytest.raises(ValueError):
+        faults.FaultSpec(kind="nope")
+    with pytest.raises(ValueError):
+        faults.FaultSpec(kind="latency_spike", site="nowhere")
+    with pytest.raises(ValueError):
+        faults.FaultSpec(kind="latency_spike", count=0)
+    for kind, site in faults.DEFAULT_SITE.items():
+        assert faults.FaultSpec(kind=kind).site == site
+
+
+def test_injector_fires_by_invocation_count():
+    plan = faults.FaultPlan(faults=(
+        faults.FaultSpec(kind="engine_exception", tenant="a",
+                         after=2, count=2),))
+    inj = plan.injector()
+    hits = [inj.fire("engine.infer", tenant="a") is not None
+            for _ in range(6)]
+    assert hits == [False, False, True, True, False, False]
+    assert inj.fired(tenant="a") == 2 == plan.scheduled("a")
+    # a co-resident tenant's hook counts independently and never fires
+    assert all(inj.fire("engine.infer", tenant="b") is None
+               for _ in range(6))
+    assert inj.fired(tenant="b") == 0
+    assert [e["call"] for e in inj.log] == [2, 3]
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker FSM
+# ---------------------------------------------------------------------------
+
+def test_breaker_full_cycle_closed_open_halfopen_closed():
+    br = CircuitBreaker(k=2, cooldown=3)
+    br.record_failure()
+    assert br.state == "closed"
+    br.record_failure()                   # k-th consecutive failure
+    assert br.state == "open" and br.opens == 1
+    assert not br.allow() and not br.allow() and not br.allow()
+    assert br.allow()                     # after 3 refusals: the probe
+    assert br.state == "half_open"
+    br.record_success()
+    assert br.state == "closed" and br.recloses == 1
+    assert br.time_to_recovery_s is not None
+
+
+def test_breaker_probe_failure_reopens():
+    br = CircuitBreaker(k=1, cooldown=2)
+    br.record_failure()
+    assert br.state == "open"
+    assert not br.allow() and not br.allow()
+    assert br.allow()                     # probe after 2 refusals
+    br.record_failure()                   # probe failed
+    assert br.state == "open" and br.opens == 2
+    assert not br.allow() and not br.allow()   # cooldown restarted
+    assert br.allow()
+    br.record_success()
+    assert br.state == "closed" and br.recloses == 1
+
+
+def test_breaker_success_resets_streak():
+    br = CircuitBreaker(k=3)
+    br.record_failure()
+    br.record_failure()
+    br.record_success()
+    br.record_failure()
+    br.record_failure()
+    assert br.state == "closed"           # streak never reached k
+
+
+# ---------------------------------------------------------------------------
+# Degradation ladder: per-layer fallback is bit-exact vs fused
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("net", sorted(edge.EDGE_NETS))
+def test_degraded_engine_matches_fused(net):
+    cfg = edge.edge_config(net)
+    plan = plan_lib.get_or_plan(cfg, target="tpu")
+    eng = engine.EdgeEngine(cfg, plan=plan, x_scale=0.02, seed=0)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (cfg.batch, cfg.dims[0])) * 0.5
+    fused = np.asarray(eng.infer(x))
+    assert eng.degrade() and eng.degrade_level == 1
+    assert not eng.degrade()              # one rung only
+    degraded = np.asarray(eng.infer(x))
+    np.testing.assert_allclose(degraded, fused, rtol=1e-5, atol=1e-6)
+    assert eng.restore() and eng.degrade_level == 0
+    np.testing.assert_allclose(np.asarray(eng.infer(x)), fused,
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Non-finite output guards
+# ---------------------------------------------------------------------------
+
+def test_edge_engine_nonfinite_guard():
+    cfg = edge.edge_config("jet_tagger")
+    plan = plan_lib.get_or_plan(cfg, target="tpu")
+    eng = engine.EdgeEngine(cfg, plan=plan, x_scale=0.02)
+    x = jnp.ones((cfg.batch, cfg.dims[0]), jnp.float32)
+    eng.infer(x)                          # warm (indices not consumed yet)
+    eng.injector = faults.FaultPlan(faults=(
+        faults.FaultSpec(kind="non_finite_output",
+                         tenant=eng.trace_label, after=0),)).injector()
+    with pytest.raises(faults.NonFiniteOutput):
+        eng.infer(x)
+    assert eng.faults == 1
+    eng.infer(x)                          # next call is clean again
+
+
+def test_batcher_nonfinite_fails_request_not_batch():
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    fleet = plan_lib.plan_fleet([cfg], target="tpu", serve_slots_total=2)
+    nid = fleet.net_ids[0]
+    router = Router.from_fleet(fleet, lm={nid: (cfg, params)},
+                               resilience=True)
+    t = router.tenant(nid)
+    good = engine.Request(rid=0, prompt=np.array([3, 5, 7], np.int32),
+                          max_new=3)
+    router.submit(nid, good)
+    router.run_until_drained(max_ticks=300)   # warm the decode path
+    router.arm_faults(faults.FaultPlan(faults=(
+        faults.FaultSpec(kind="non_finite_output", site="batcher.decode",
+                         tenant=nid, after=0),)).injector())
+    bad = engine.Request(rid=1, prompt=np.array([4, 6, 8], np.int32),
+                         max_new=3)
+    router.submit(nid, bad)
+    router.run_until_drained(max_ticks=300)
+    assert bad.done and bad.error == "non_finite_output"
+    assert t.metrics.failures == 1
+    assert t.engine.faults >= 1
+    # the slot was freed: a later request still completes
+    again = engine.Request(rid=2, prompt=np.array([3, 5, 7], np.int32),
+                           max_new=3)
+    router.submit(nid, again)
+    router.run_until_drained(max_ticks=300)
+    assert again.done and again.error is None and len(again.out) == 3
+
+
+def test_batcher_stall_and_exception_isolated():
+    cfg = configs.get("qwen2_5_3b").smoke
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    fleet = plan_lib.plan_fleet([cfg], target="tpu", serve_slots_total=2)
+    nid = fleet.net_ids[0]
+    router = Router.from_fleet(fleet, lm={nid: (cfg, params)},
+                               resilience=True)
+    req = engine.Request(rid=0, prompt=np.array([3, 5, 7], np.int32),
+                         max_new=3)
+    router.submit(nid, req)
+    router.arm_faults(faults.FaultPlan(faults=(
+        faults.FaultSpec(kind="batcher_stall", tenant=nid, after=0),
+        faults.FaultSpec(kind="engine_exception", site="batcher.tick",
+                         tenant=nid, after=1),)).injector())
+    router.step()                         # stalled: tick skipped
+    assert not req.done
+    router.step()                         # injected engine exception
+    assert router.tenant(nid).metrics.failures == 1
+    router.run_until_drained(max_ticks=300)   # batch survives the fault
+    assert req.done and req.error is None and len(req.out) == 3
+
+
+# ---------------------------------------------------------------------------
+# Router isolation + breaker integration
+# ---------------------------------------------------------------------------
+
+def _served_router(**kw):
+    fleet = plan_lib.plan_fleet(
+        [edge.edge_config(n) for n in ("jet_tagger", "tau_select")],
+        target="tpu")
+    router = Router.from_fleet(fleet, resilience=True, **kw)
+    xs = {nid: jax.random.normal(jax.random.PRNGKey(1),
+                                 (edge.edge_config(nid).batch,
+                                  edge.edge_config(nid).dims[0])) * 0.5
+          for nid in router.net_ids}
+    for nid, x in xs.items():
+        router.infer(nid, x)              # warm before arming faults
+    return router, xs
+
+
+def test_router_isolates_faulted_tenant():
+    router, xs = _served_router()
+    router.arm_faults(faults.FaultPlan.burst(
+        "jet_tagger", after=0, count=2).injector())
+    # retries=1 consumes both scheduled faults in ONE request: the retry
+    # hits the next scheduled index, then the burst is exhausted.
+    with pytest.raises(TenantFaulted):
+        router.infer("jet_tagger", xs["jet_tagger"])
+    t = router.tenant("jet_tagger")
+    assert t.metrics.failures == 1
+    assert router.supervisor.retries["jet_tagger"] == 1
+    # co-resident keeps serving; victim recovers once the burst is over
+    router.infer("tau_select", xs["tau_select"])
+    router.infer("jet_tagger", xs["jet_tagger"])
+    assert t.metrics.failures == 1        # no new failures
+
+
+def test_breaker_opens_and_recloses_through_router():
+    router, xs = _served_router()
+    sup = router.supervisor
+    cfg = sup.cfg("jet_tagger")
+    k, cooldown, retries = (cfg["breaker_k"], cfg["breaker_cooldown"],
+                            cfg["retries"])
+    burst = k * (retries + 1)             # each failed request burns 1+retries
+    router.arm_faults(faults.FaultPlan.burst(
+        "jet_tagger", after=0, count=burst).injector())
+    for _ in range(k):
+        with pytest.raises(TenantFaulted):
+            router.infer("jet_tagger", xs["jet_tagger"])
+    br = sup.breaker("jet_tagger")
+    assert br.state == "open" and br.opens == 1
+    # the ladder stepped down when the breaker opened
+    assert router.tenant("jet_tagger").engine.degrade_level == 1
+    health = router.health()
+    assert health["tenants"]["jet_tagger"]["state"] == "open"
+    assert health["tenants"]["jet_tagger"]["degrade_level"] == 2  # shedding
+    for _ in range(cooldown):
+        with pytest.raises(TenantBreakerOpen):
+            router.infer("jet_tagger", xs["jet_tagger"])
+    # co-resident tenant was never gated
+    router.infer("tau_select", xs["tau_select"])
+    # burst exhausted: the half-open probe succeeds and re-closes
+    router.infer("jet_tagger", xs["jet_tagger"])
+    assert br.state == "closed" and br.recloses == 1
+    assert br.time_to_recovery_s is not None
+    # a clean streak one cooldown long restores the fused path
+    for _ in range(cooldown + 1):
+        router.infer("jet_tagger", xs["jet_tagger"])
+    assert router.tenant("jet_tagger").engine.degrade_level == 0
+    assert sup.restores["jet_tagger"] == 1
+
+
+def test_breaker_exception_ordering():
+    assert issubclass(TenantBreakerOpen, TenantFaulted)
+    assert issubclass(TenantFaulted, TenantOverBudget)
+
+
+def test_replan_failure_falls_back_to_current_fleet():
+    # No warmup here: the compile-heavy first call plus drift_min_samples=1
+    # guarantees the drift watcher trips while the replan fault is armed.
+    fleet = plan_lib.plan_fleet([edge.edge_config("jet_tagger")],
+                                target="tpu")
+    router = Router.from_fleet(fleet, resilience=True, drift_threshold=1.5,
+                               drift_min_samples=1,
+                               cache=plan_lib.PlanCache())
+    router.arm_faults(faults.FaultPlan(faults=(
+        faults.FaultSpec(kind="replan_failure", tenant="jet_tagger",
+                         after=0, count=99),)).injector())
+    cfg = edge.edge_config("jet_tagger")
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (cfg.batch, cfg.dims[0])) * 0.5
+    # CPU wall-clock vs modeled accelerator latency trips the drift watcher;
+    # the injected replan failure must not take down serving.
+    for _ in range(4):
+        router.infer("jet_tagger", x)
+    assert router.replan_failures >= 1
+    assert router.fleet is fleet
+    router.infer("jet_tagger", x)                  # still serving
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe plan cache
+# ---------------------------------------------------------------------------
+
+def test_plan_save_is_atomic(tmp_path):
+    cfg = edge.edge_config("jet_tagger")
+    plan = plan_lib.get_or_plan(cfg, target="tpu")
+    p = plan.save(tmp_path / "plan.json")
+    assert json.loads(p.read_text())["network"] == "jet_tagger"
+    assert not list(tmp_path.glob("*.tmp.*"))     # no tmp droppings
+
+
+def test_corrupt_cached_plan_is_a_miss_with_warning(tmp_path):
+    cfg = edge.edge_config("tau_select")
+    cache = plan_lib.PlanCache(tmp_path)
+    plan = plan_lib.get_or_plan(cfg, target="tpu", cache=cache)
+    disk = tmp_path / f"{plan.key}.json"
+    assert disk.exists()
+    disk.write_text(disk.read_text()[:40])        # truncate mid-artifact
+    cold = plan_lib.PlanCache(tmp_path)           # fresh memory, bad disk
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        assert cold.get(plan.key) is None
+    assert cold.corrupt_reads == 1
+    # planning again through the cold cache self-heals the artifact
+    again = plan_lib.get_or_plan(cfg, target="tpu", cache=cold)
+    assert again.key == plan.key
+    assert plan_lib.DeploymentPlan.load(disk).key == plan.key
+
+
+def test_injected_cache_corruption_is_a_miss(tmp_path):
+    cfg = edge.edge_config("tau_select")
+    cache = plan_lib.PlanCache(tmp_path)
+    plan = plan_lib.get_or_plan(cfg, target="tpu", cache=cache)
+    cold = plan_lib.PlanCache(tmp_path)
+    cold.injector = faults.FaultPlan(faults=(
+        faults.FaultSpec(kind="cache_corruption", after=0),)).injector()
+    with pytest.warns(RuntimeWarning, match="injected"):
+        assert cold.get(plan.key) is None
+    assert cold.corrupt_reads == 1
+    assert cold.get(plan.key) is not None         # next read is clean
+
+
+# ---------------------------------------------------------------------------
+# Plan artifacts carry the resilience knobs (plan-6)
+# ---------------------------------------------------------------------------
+
+def test_fleet_serve_section_has_resilience_knobs():
+    fleet = plan_lib.plan_fleet(
+        [edge.edge_config(n) for n in ("jet_tagger", "tau_select")],
+        target="tpu")
+    for tp in fleet.tenants:
+        res = tp.plan.serve["resilience"]
+        assert res == faults.RESILIENCE_DEFAULTS
+    from repro.plan.artifact import PLANNER_VERSION
+    assert PLANNER_VERSION == "plan-6"
+    # and they survive the artifact round-trip
+    again = plan_lib.multinet.FleetPlan.from_json(fleet.to_json())
+    assert again.tenants[0].plan.serve["resilience"] == \
+        faults.RESILIENCE_DEFAULTS
+
+
+def test_supervisor_reads_plan_knobs():
+    fleet = plan_lib.plan_fleet([edge.edge_config("jet_tagger")],
+                                target="tpu")
+    sup = Supervisor.from_fleet(fleet)
+    cfg = sup.cfg("jet_tagger")
+    assert cfg["breaker_k"] == faults.RESILIENCE_DEFAULTS["breaker_k"]
+    # deadline derives from the serve-section SLO budget
+    p95 = fleet.tenants[0].plan.serve["slo"]["p95_s"]
+    assert sup._deadline_s["jet_tagger"] == pytest.approx(
+        cfg["deadline_factor"] * p95)
+
+
+# ---------------------------------------------------------------------------
+# Prometheus resilience families
+# ---------------------------------------------------------------------------
+
+def test_prometheus_resilience_families_parse():
+    from repro.obs.export import parse_prometheus, prometheus_text
+    health = {"tenants": {
+        "jet_tagger": {"failures": 3, "state": "open", "breaker_opens": 1,
+                       "breaker_recloses": 0, "degrade_level": 2,
+                       "retries": 2, "deadline_exceeded": 1},
+        "tau_select": {"failures": 0, "degrade_level": 0}},
+        "replan_failures": 1, "supervised": True}
+    text = prometheus_text({}, resilience=health)
+    samples = parse_prometheus(text)
+    by_name = {}
+    for s in samples:
+        by_name.setdefault(s["name"], []).append(s)
+    fails = {s["labels"]["tenant"]: s["value"]
+             for s in by_name["repro_resilience_failures_total"]}
+    assert fails == {"jet_tagger": 3.0, "tau_select": 0.0}
+    st = by_name["repro_resilience_breaker_state"][0]
+    assert st["labels"] == {"tenant": "jet_tagger", "state": "open"}
+    levels = {s["labels"]["tenant"]: s["value"]
+              for s in by_name["repro_resilience_degrade_level"]}
+    assert levels == {"jet_tagger": 2.0, "tau_select": 0.0}
+    assert by_name["repro_resilience_replan_failures_total"][0]["value"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Replay under faults: isolation + recovery, end to end
+# ---------------------------------------------------------------------------
+
+def test_replay_under_faults_recovers(tmp_path):
+    from repro.deploy import Deployment
+    dep = Deployment.build(["jet_tagger", "tau_select"], target="tpu",
+                           machine_model=None,
+                           cache=plan_lib.PlanCache())
+    router = dep.serve()
+    cfg = router.supervisor.cfg("jet_tagger")
+    burst = cfg["breaker_k"] * (cfg["retries"] + 1)
+    plan = faults.FaultPlan.burst("jet_tagger", after=4, count=burst)
+    inj = plan.injector()
+    report = dep.replay("flash_crowd", duration_s=0.15, seed=0,
+                        faults=inj, json_dir=tmp_path)
+    s = report.summary()
+    # the victim faulted and was breaker-gated...
+    assert inj.fired(tenant="jet_tagger") == burst
+    assert s["jet_tagger"]["fault"] == cfg["breaker_k"]
+    assert s["jet_tagger"]["breaker"] >= cfg["breaker_cooldown"]
+    # ...but recovered: breaker re-closed and requests completed after it
+    vh = router.health()["tenants"]["jet_tagger"]
+    assert vh["breaker_opens"] == 1 and vh["breaker_recloses"] == 1
+    assert vh["state"] == "closed"
+    assert vh["time_to_recovery_s"] is not None
+    assert s["jet_tagger"]["ok"] > 0
+    # co-resident isolation: tau_select served finite latencies throughout
+    assert s["tau_select"]["fault"] == 0 == s["tau_select"]["breaker"]
+    assert s["tau_select"]["ok"] == s["tau_select"]["count"]
+    assert np.isfinite(s["tau_select"]["p95_s"])
+    # snapshots carry the fault/breaker counters, strict-JSON
+    snap = json.loads(
+        (tmp_path / "BENCH_serve_jet_tagger__flash_crowd.json").read_text())
+    derived = snap["rows"][0]["derived"]
+    assert f"fault={cfg['breaker_k']}" in derived
+    assert "breaker=" in derived
+
+
+def test_deployment_summary_and_prometheus_health(tmp_path):
+    from repro.deploy import Deployment
+    dep = Deployment.build(["jet_tagger"], target="tpu", machine_model=None,
+                           cache=plan_lib.PlanCache())
+    router = dep.serve()
+    x = jnp.ones((edge.edge_config("jet_tagger").batch,
+                  edge.edge_config("jet_tagger").dims[0]), jnp.float32)
+    router.infer("jet_tagger", x)
+    router.arm_faults(faults.FaultPlan.burst(
+        "jet_tagger", after=0, count=2).injector())
+    with pytest.raises(TenantFaulted):
+        router.infer("jet_tagger", x)
+    assert "health:" in dep.summary()
+    p = dep.export_prometheus(tmp_path / "metrics.prom")
+    from repro.obs.export import parse_prometheus
+    samples = parse_prometheus(p.read_text())
+    fails = [s for s in samples
+             if s["name"] == "repro_resilience_failures_total"]
+    assert fails and fails[0]["value"] == 1.0
