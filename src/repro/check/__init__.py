@@ -1,0 +1,238 @@
+"""``repro.check`` — the static design-rule verifier.
+
+The paper's contribution is a set of *design rules*; until this package the
+repo only enforced them dynamically (an over-budget fusion group was found
+when an engine crashed mid-deploy).  ``repro.check`` proves plans and code
+against the rules with ZERO execution, in three layers:
+
+* **plan rules** (:mod:`repro.check.plan_rules`) — decode any
+  DeploymentPlan/FleetPlan artifact and verify every invariant the planner
+  is supposed to respect: tile legality, column/band budgets, fusion-group
+  VMEM fit, the parts+overhead latency decomposition, serve-section knobs,
+  DR7 boundary structure.
+* **kernel contracts** (:mod:`repro.check.kernel_contracts`) — abstract-
+  evaluate the repo's Pallas entry points via ``jax.eval_shape`` against
+  the shapes a plan implies: block divisibility, dtype contracts, scratch
+  accounting vs the plan's ``fusion_groups[].vmem_bytes`` estimate.
+* **jax-hazard lint** (:mod:`repro.check.lint`) — stdlib-``ast`` rules over
+  ``src/repro`` catching the bug classes earlier PRs fixed by hand: host
+  syncs in serving hot paths, Python ``if`` on traced values,
+  ``time``/RNG inside jitted functions, shared state mutated outside the
+  lock, dict-order-dependent hashing near cache keys.
+
+Every violation is a structured :class:`Finding`; the CLI surface is
+``python -m repro check`` and the deploy gate is
+:class:`repro.deploy.stages.VerifyStage` (fail-closed before engines).
+
+Exit-code contract (matching ``benchmarks/trend.py``):
+
+* ``0`` — clean (warnings and info findings do not fail the check);
+* ``1`` — at least one error-severity finding;
+* ``2`` — an artifact that cannot be decoded at all
+  (:class:`ArtifactError`, reported as one line on stderr).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+SEVERITIES = ("error", "warning", "info")
+
+#: Exit codes, trend.py style.
+EXIT_CLEAN = 0
+EXIT_FINDINGS = 1
+EXIT_UNDECODABLE = 2
+
+
+class ArtifactError(Exception):
+    """An artifact that cannot be decoded as a plan/snapshot at all
+    (malformed JSON, unsupported schema, missing required sections).
+
+    Raised instead of letting ``json.JSONDecodeError`` stack-trace out of
+    the CLI — the check reports it in one line with exit code 2, exactly
+    like ``benchmarks.trend.SnapshotError``."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation (or advisory), machine-readable.
+
+    ``rule`` is the stable dotted rule id (``plan.vmem-budget``,
+    ``lint.host-sync``, …); ``tenant`` the fleet tenant (or file path for
+    lint findings); ``layer`` the layer index / line number when the
+    finding is that specific."""
+
+    rule: str
+    severity: str                       # "error" | "warning" | "info"
+    detail: str
+    tenant: str | None = None
+    layer: int | None = None
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"severity must be one of {SEVERITIES}, "
+                             f"got {self.severity!r}")
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "severity": self.severity,
+                "tenant": self.tenant, "layer": self.layer,
+                "detail": self.detail}
+
+    def __str__(self) -> str:
+        where = self.tenant or "-"
+        if self.layer is not None:
+            where += f":{self.layer}"
+        return f"[{self.severity:<7}] {self.rule:<24} {where:<28} {self.detail}"
+
+
+@dataclasses.dataclass
+class CheckReport:
+    """All findings from one check run, plus the exit-code logic."""
+
+    findings: list = dataclasses.field(default_factory=list)
+    checked: list = dataclasses.field(default_factory=list)  # what was seen
+
+    def extend(self, findings) -> "CheckReport":
+        self.findings.extend(findings)
+        return self
+
+    def errors(self) -> list:
+        return [f for f in self.findings if f.severity == "error"]
+
+    def counts(self) -> dict:
+        out = {s: 0 for s in SEVERITIES}
+        for f in self.findings:
+            out[f.severity] += 1
+        return out
+
+    @property
+    def exit_code(self) -> int:
+        return EXIT_FINDINGS if self.errors() else EXIT_CLEAN
+
+    def to_dict(self) -> dict:
+        return {"version": 1,
+                "checked": list(self.checked),
+                "counts": self.counts(),
+                "findings": [f.to_dict() for f in self.findings]}
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+    def __str__(self) -> str:
+        if not self.findings:
+            return "check: clean (no findings)"
+        lines = [str(f) for f in self.findings]
+        c = self.counts()
+        lines.append(f"check: {len(self.findings)} finding(s) "
+                     f"({c['error']} error, {c['warning']} warning, "
+                     f"{c['info']} info)")
+        return "\n".join(lines)
+
+
+class PlanVerificationError(Exception):
+    """A plan failed verification at deploy time (the fail-closed gate in
+    :class:`repro.deploy.stages.VerifyStage`).  Carries the findings."""
+
+    def __init__(self, findings):
+        self.findings = list(findings)
+        errs = [f for f in self.findings if f.severity == "error"]
+        super().__init__(
+            f"{len(errs)} design-rule violation(s): "
+            + "; ".join(f"{f.rule} ({f.tenant or '-'})" for f in errs[:4])
+            + ("; ..." if len(errs) > 4 else ""))
+
+
+# ---------------------------------------------------------------------------
+# Aggregation entry points
+# ---------------------------------------------------------------------------
+
+def check_fleet(fleet, *, tpu=None, aie=None, kernels: bool = True) -> list:
+    """All plan-layer + kernel-layer findings for one FleetPlan (or a bare
+    DeploymentPlan, wrapped as a single-tenant fleet)."""
+    from repro.check import kernel_contracts, plan_rules
+    from repro.plan.multinet import FleetPlan
+    if not isinstance(fleet, FleetPlan):
+        fleet = FleetPlan.from_plan(fleet)
+    findings = plan_rules.verify_fleet(fleet, tpu=tpu, aie=aie)
+    if kernels:
+        for t in fleet.tenants:
+            findings.extend(kernel_contracts.verify_plan_kernels(
+                t.plan, tenant=t.net_id, tpu=tpu))
+    return findings
+
+
+def check_artifact(path, *, tpu=None, aie=None, kernels: bool = True) -> list:
+    """Decode one committed plan artifact (any supported schema) and verify
+    it.  Undecodable input raises :class:`ArtifactError` (exit code 2)."""
+    from repro.check import plan_rules
+    fleet, load_findings = plan_rules.load_artifact(path)
+    return load_findings + check_fleet(fleet, tpu=tpu, aie=aie,
+                                       kernels=kernels)
+
+
+def check_snapshot(path) -> list:
+    """Validate one committed BENCH snapshot through the same strict shape
+    ``benchmarks.trend`` enforces.  Undecodable -> :class:`ArtifactError`."""
+    p = pathlib.Path(path)
+    try:
+        text = p.read_text()
+    except OSError as e:
+        raise ArtifactError(f"{p}: {e.strerror or e}") from None
+    try:
+        payload = json.loads(text)
+    except json.JSONDecodeError as e:
+        raise ArtifactError(f"{p}: malformed snapshot JSON "
+                            f"({e.msg} at line {e.lineno})") from None
+    if not isinstance(payload, dict):
+        raise ArtifactError(f"{p}: snapshot must be a JSON object, "
+                            f"got {type(payload).__name__}")
+    rows = payload.get("rows", [])
+    if not isinstance(rows, list) or any(
+            not isinstance(r, dict) or "name" not in r
+            or "us_per_call" not in r for r in rows):
+        raise ArtifactError(f"{p}: 'rows' must be a list of "
+                            f"{{name, us_per_call}} objects")
+    findings = []
+    if not rows:
+        findings.append(Finding(
+            rule="snapshot.empty", severity="warning", tenant=str(p),
+            detail="snapshot has no rows - nothing to trend-gate"))
+    for i, r in enumerate(rows):
+        v = r["us_per_call"]
+        if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                or v != v or v < 0:
+            findings.append(Finding(
+                rule="snapshot.row-value", severity="error", tenant=str(p),
+                layer=i,
+                detail=f"row {r['name']!r}: us_per_call must be a "
+                       f"non-negative number, got {v!r}"))
+    return findings
+
+
+def check_tree(root=".", *, kernels: bool = True,
+               lint: bool = True) -> CheckReport:
+    """The full repo check: lint ``src/repro``, verify every committed
+    artifact under ``deployments/``, validate every BENCH snapshot under
+    ``bench/``.  This is what ``python -m repro check`` and CI run."""
+    from repro.check import lint as lint_mod
+    root = pathlib.Path(root)
+    report = CheckReport()
+    if lint:
+        src = root / "src" / "repro"
+        if src.is_dir():
+            files = sorted(src.rglob("*.py"))
+            report.extend(lint_mod.lint_paths(files))
+            report.checked.append(f"lint:{len(files)} files")
+    plans = sorted((root / "deployments").glob("*.json")) \
+        if (root / "deployments").is_dir() else []
+    for p in plans:
+        report.extend(check_artifact(p, kernels=kernels))
+        report.checked.append(f"plan:{p.name}")
+    snaps = sorted((root / "bench").rglob("BENCH_*.json")) \
+        if (root / "bench").is_dir() else []
+    for p in snaps:
+        report.extend(check_snapshot(p))
+        report.checked.append(f"snapshot:{p.name}")
+    return report

@@ -1,0 +1,260 @@
+"""Layer 2: kernel contract checking via ``jax.eval_shape``.
+
+A plan that passes every layer-1 rule can still die inside a device launch:
+the Pallas entry points carry their own contracts (dtype asserts, block
+divisibility Mosaic enforces at compile time, VMEM working sets the
+megakernel actually allocates).  This module abstract-evaluates the repo's
+``pallas_call`` entry points against the shapes a plan implies — tracing
+only, zero compilation, zero device work — so those failures surface at
+check time as structured findings.
+
+Rules:
+
+* ``kernel.block-divisibility`` — the plan's block shapes are Mosaic-legal
+  tile multiples for the kernel's operand dtypes.
+* ``kernel.eval-shape`` — the entry point abstract-evaluates on the
+  plan-implied shapes and returns the shape/dtype the engine will consume.
+* ``kernel.dtype-contract`` — int8 in / int32 accumulate / float
+  requantized out: the quantized path rejects non-int8 operands and emits
+  the requested float dtype.
+* ``kernel.vmem-scratch`` — re-derive the fused megakernel's actual VMEM
+  working set (padded operands + int8 activation scratch) and compare it
+  against both the hardware budget (error) and the plan's
+  ``fusion_groups[].vmem_bytes`` estimate (warning when the plan
+  under-states what the launch will allocate).
+"""
+
+from __future__ import annotations
+
+import functools
+
+from repro import hw as hwlib
+from repro.check import Finding
+
+# Must match core/tiling.plan_api's search budget and fused_mlp's padding.
+_VMEM_BUDGET_FRACTION = 0.75
+_INT8_SUBLANE = 32
+_LANE = 128
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return ((x + q - 1) // q) * q
+
+
+def _jax():
+    """Import jax lazily so `repro check` still lints and verifies plans on
+    a host without the accelerator toolchain (kernel layer degrades to an
+    info finding instead of an ImportError)."""
+    try:
+        import jax
+        import jax.numpy as jnp
+        return jax, jnp
+    except Exception:                                    # pragma: no cover
+        return None, None
+
+
+def group_vmem_bytes(widths, batch: int) -> int:
+    """The fused megakernel's real VMEM working set for a group whose
+    activation widths (input first) are ``widths`` at batch ``batch``.
+
+    Mirrors :func:`repro.kernels.fused_mlp.fused_mlp_q8` exactly: f32 input
+    and output buffers, int8 weights, one f32 scale row + one f32 bias row
+    per layer, and the shared int8 activation scratch."""
+    pm = _ceil_to(batch, _INT8_SUBLANE)
+    pads = [_ceil_to(d, _LANE) for d in widths]
+    total = pm * pads[0] * 4                             # x, f32
+    for kin, kout in zip(pads, pads[1:]):
+        total += kin * kout                              # int8 weight
+        total += 2 * kout * 4                            # scale + bias rows
+    total += pm * pads[-1] * 4                           # out, f32
+    total += pm * max(pads[:-1])                         # int8 act scratch
+    return total
+
+
+def verify_plan_kernels(plan, *, tenant: str | None = None,
+                        tpu=None) -> list:
+    """Abstract-evaluate the kernels a TPU plan will launch, with the
+    plan's own block shapes and fusion groups."""
+    tenant = tenant if tenant is not None else plan.network
+    tpu = tpu if tpu is not None else hwlib.TPU_V5E
+    if plan.target != "tpu" or plan.kind != "edge":
+        # LM plans drive the attention/scan kernels with runtime-dependent
+        # sequence shapes; those entry points are covered by the canonical
+        # library self-check instead.
+        return []
+    jax, jnp = _jax()
+    if jax is None:                                      # pragma: no cover
+        return [Finding(rule="kernel.eval-shape", severity="info",
+                        tenant=tenant,
+                        detail="jax unavailable; kernel contracts skipped")]
+    from repro.kernels.gemm_int8 import gemm_int8
+
+    fs: list = []
+    sub = tpu.sublanes_for(1)            # quantized path: int8 operands
+    for l in plan.layers:
+        bm, bk, bn = l.api_tile
+        if bm % sub or bk % _LANE or bn % _LANE:
+            fs.append(Finding(
+                rule="kernel.block-divisibility", severity="error",
+                tenant=tenant, layer=l.index,
+                detail=f"block {l.api_tile} on {l.name!r} is not a "
+                       f"({sub}, {_LANE}, {_LANE}) multiple - Mosaic "
+                       f"rejects the int8 BlockSpec at compile time"))
+            continue                     # eval_shape would fail for the same
+        x = jax.ShapeDtypeStruct((plan.batch, l.n_in), jnp.int8)
+        w = jax.ShapeDtypeStruct((l.n_in, l.n_out), jnp.int8)
+        ws = jax.ShapeDtypeStruct((l.n_out,), jnp.float32)
+        fn = functools.partial(gemm_int8, block_m=bm, block_k=bk,
+                               block_n=bn, out_dtype=jnp.float32)
+        try:
+            out = jax.eval_shape(fn, x, w, ws)
+        except Exception as e:
+            fs.append(Finding(
+                rule="kernel.eval-shape", severity="error", tenant=tenant,
+                layer=l.index,
+                detail=f"gemm_int8 fails to trace {l.name!r} "
+                       f"(M={plan.batch}, K={l.n_in}, N={l.n_out}, "
+                       f"blocks={l.api_tile}): {e.__class__.__name__}: "
+                       f"{str(e).splitlines()[0][:160]}"))
+            continue
+        if tuple(out.shape) != (plan.batch, l.n_out) \
+                or out.dtype != jnp.float32:
+            fs.append(Finding(
+                rule="kernel.dtype-contract", severity="error",
+                tenant=tenant, layer=l.index,
+                detail=f"gemm_int8 on {l.name!r} returns "
+                       f"{out.shape}/{out.dtype}, engine expects "
+                       f"({plan.batch}, {l.n_out})/float32"))
+    fs += _verify_fused_groups(plan, tenant, tpu, jax, jnp)
+    fs += _verify_int8_rejects_float(tenant, jax, jnp)
+    return fs
+
+
+def _verify_fused_groups(plan, tenant, tpu, jax, jnp) -> list:
+    """Fusion groups launch as ONE megakernel: re-derive the working set it
+    allocates and abstract-evaluate the fused entry point."""
+    from repro.kernels.fused_mlp import fused_mlp_q8
+    fs = []
+    by_index = {l.index: l for l in plan.layers}
+    budget = int(tpu.vmem_bytes * _VMEM_BUDGET_FRACTION)
+    for g in plan.fusion_groups:
+        ls = [by_index[i] for i in g.layers if i in by_index]
+        if len(ls) < 2 or len(ls) != len(g.layers):
+            continue                     # single-layer: the gemm path above
+        widths = [ls[0].n_in] + [l.n_out for l in ls]
+        actual = group_vmem_bytes(widths, plan.batch)
+        if actual > budget:
+            fs.append(Finding(
+                rule="kernel.vmem-scratch", severity="error", tenant=tenant,
+                layer=g.layers[0],
+                detail=f"group {g.id} megakernel allocates {actual} B of "
+                       f"VMEM (widths {widths}, batch {plan.batch}) - over "
+                       f"the {budget} B budget; the launch OOMs"))
+        elif actual > max(g.vmem_bytes, 1) * 4:
+            fs.append(Finding(
+                rule="kernel.vmem-scratch", severity="warning",
+                tenant=tenant, layer=g.layers[0],
+                detail=f"group {g.id} megakernel allocates {actual} B but "
+                       f"the plan budgeted vmem_bytes={g.vmem_bytes} B - "
+                       f"the fusion DP is charging far too little"))
+        x = jax.ShapeDtypeStruct((plan.batch, ls[0].n_in), jnp.float32)
+        weights = tuple(jax.ShapeDtypeStruct((a, b), jnp.int8)
+                        for a, b in zip(widths, widths[1:]))
+        w_scales = tuple(jax.ShapeDtypeStruct((n,), jnp.float32)
+                         for n in widths[1:])
+        biases = w_scales
+        xs = jax.ShapeDtypeStruct((len(ls),), jnp.float32)
+        try:
+            out = jax.eval_shape(fused_mlp_q8, x, weights, w_scales,
+                                 biases, xs)
+        except Exception as e:
+            fs.append(Finding(
+                rule="kernel.eval-shape", severity="error", tenant=tenant,
+                layer=g.layers[0],
+                detail=f"fused_mlp_q8 fails to trace group {g.id} "
+                       f"(widths {widths}): {e.__class__.__name__}: "
+                       f"{str(e).splitlines()[0][:160]}"))
+            continue
+        if tuple(out.shape) != (plan.batch, widths[-1]):
+            fs.append(Finding(
+                rule="kernel.eval-shape", severity="error", tenant=tenant,
+                layer=g.layers[0],
+                detail=f"fused_mlp_q8 group {g.id} returns {out.shape}, "
+                       f"engine expects ({plan.batch}, {widths[-1]})"))
+    return fs
+
+
+def _verify_int8_rejects_float(tenant, jax, jnp) -> list:
+    """The quantized path's input contract: non-int8 operands must be
+    rejected at trace time, not silently up-cast (which would run the f32
+    MXU path at half the int8 peak and skip requantization)."""
+    from repro.kernels.gemm_int8 import gemm_int8
+    x = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.int8)
+    ws = jax.ShapeDtypeStruct((128,), jnp.float32)
+    try:
+        jax.eval_shape(functools.partial(gemm_int8, block_m=32,
+                                         block_k=128, block_n=128), x, w, ws)
+    except AssertionError:
+        return []
+    except Exception:
+        return []                        # rejected, just not via assert
+    return [Finding(
+        rule="kernel.dtype-contract", severity="error", tenant=tenant,
+        detail="gemm_int8 accepted a float32 activation operand - the "
+               "int8-in contract is no longer enforced at trace time")]
+
+
+# Canonical shapes exercising every library entry point the LM engine uses.
+_LIBRARY_CASES = (
+    ("tiled_gemm", "repro.kernels.tiled_gemm", "tiled_gemm",
+     lambda jax, jnp: ((jax.ShapeDtypeStruct((64, 256), jnp.bfloat16),
+                        jax.ShapeDtypeStruct((256, 512), jnp.bfloat16)),
+                       {}, (64, 512))),
+    ("flash_attention", "repro.kernels.flash_attention", "flash_attention",
+     lambda jax, jnp: ((jax.ShapeDtypeStruct((1, 8, 256, 64), jnp.bfloat16),
+                        jax.ShapeDtypeStruct((1, 2, 256, 64), jnp.bfloat16),
+                        jax.ShapeDtypeStruct((1, 2, 256, 64), jnp.bfloat16)),
+                       {"causal": True}, (1, 8, 256, 64))),
+    ("rwkv6_scan", "repro.kernels.rwkv6", "rwkv6_scan",
+     lambda jax, jnp: (tuple(
+         [jax.ShapeDtypeStruct((4, 128, 64), jnp.float32)] * 4
+         + [jax.ShapeDtypeStruct((64,), jnp.float32)]),
+                       {}, (4, 128, 64))),
+    ("linear_scan", "repro.kernels.rglru", "linear_scan",
+     lambda jax, jnp: ((jax.ShapeDtypeStruct((2, 256, 128), jnp.float32),
+                        jax.ShapeDtypeStruct((2, 256, 128), jnp.float32)),
+                       {}, (2, 256, 128))),
+)
+
+
+def verify_kernel_library() -> list:
+    """Self-check: every library entry point abstract-evaluates on a
+    canonical shape and returns what its docstring promises.  Run by
+    ``repro check`` so a contract-breaking kernel edit fails CI even when
+    no committed plan exercises that kernel."""
+    jax, jnp = _jax()
+    if jax is None:                                      # pragma: no cover
+        return [Finding(rule="kernel.eval-shape", severity="info",
+                        tenant="library",
+                        detail="jax unavailable; kernel self-check skipped")]
+    import importlib
+    fs = []
+    for name, mod_name, attr, build in _LIBRARY_CASES:
+        fn = getattr(importlib.import_module(mod_name), attr)
+        argses, kwargs, want = build(jax, jnp)
+        try:
+            out = jax.eval_shape(functools.partial(fn, **kwargs), *argses)
+        except Exception as e:
+            fs.append(Finding(
+                rule="kernel.eval-shape", severity="error", tenant="library",
+                detail=f"{name} fails to trace its canonical shape: "
+                       f"{e.__class__.__name__}: "
+                       f"{str(e).splitlines()[0][:160]}"))
+            continue
+        if tuple(out.shape) != want:
+            fs.append(Finding(
+                rule="kernel.eval-shape", severity="error", tenant="library",
+                detail=f"{name} returns shape {tuple(out.shape)} on its "
+                       f"canonical case, contract says {want}"))
+    return fs

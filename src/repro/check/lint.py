@@ -1,0 +1,333 @@
+"""Layer 3: the jax-hazard lint — stdlib-``ast`` rules over ``src/repro``.
+
+Each rule encodes a bug class an earlier PR fixed by hand; the lint keeps
+it fixed.  Findings reuse :class:`repro.check.Finding` with ``tenant`` set
+to the file path and ``layer`` to the line number.
+
+Rules:
+
+* ``lint.host-sync`` — ``.item()``, ``np.asarray``/``np.array``, and
+  ``block_until_ready`` inside the serving hot paths (the intra-module
+  call graphs rooted at ``ContinuousBatcher.step``/``.tick`` and
+  ``EdgeEngine.infer``).  Each of these blocks the host on the device and
+  serializes the dispatch pipeline mid-request.
+* ``lint.traced-if`` — a Python ``if`` on a non-static parameter of a
+  ``jax.jit``-decorated function: the branch runs on a tracer and raises
+  ``TracerBoolConversionError`` at the first real call.
+* ``lint.time-in-jit`` — ``time.time()``/``perf_counter()`` or host RNG
+  (``random.*``, ``np.random.*``) inside a jitted function: the value is
+  baked in at trace time and never changes again.
+* ``lint.unlocked-shared-state`` — a class that guards itself with
+  ``self._lock`` (``Tracer``-style) mutating an attribute outside a
+  ``with self._lock:`` block in a non-``__init__`` method.
+* ``lint.dict-order-hash`` — feeding ``json.dumps`` without
+  ``sort_keys=True`` into a function that also hashes (``hashlib``):
+  plan-cache keys must not depend on dict insertion order.
+
+Per-line suppression::
+
+    y = np.asarray(logits)  # repro: check-ok(lint.host-sync)
+
+A bare ``# repro: check-ok`` suppresses every rule on that line.  The
+suppression must name the finding's rule (or be bare) and sit on the
+flagged line itself.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+
+from repro.check import Finding
+
+#: (class name, method name) roots of the serving hot paths.
+HOT_PATH_ROOTS = (("ContinuousBatcher", "step"),
+                  ("ContinuousBatcher", "tick"),
+                  ("EdgeEngine", "infer"))
+
+_SUPPRESS_RE = re.compile(r"#\s*repro:\s*check-ok(?:\(([^)]*)\))?")
+_NP_NAMES = {"np", "numpy", "onp"}
+_CLOCK_ATTRS = {"time", "perf_counter", "perf_counter_ns", "monotonic",
+                "monotonic_ns"}
+
+
+def _suppressions(source: str) -> dict:
+    """line number -> set of suppressed rules (empty set == all rules)."""
+    out = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(line)
+        if m:
+            rules = m.group(1)
+            out[i] = {r.strip() for r in rules.split(",")} if rules else set()
+    return out
+
+
+def _dotted(node) -> str | None:
+    """'np.random.default_rng' for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit_decorated(fn) -> tuple[bool, set]:
+    """(jitted?, static parameter names) from the decorator list."""
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = _dotted(target) or ""
+        statics = set()
+        call = dec if isinstance(dec, ast.Call) else None
+        if name.endswith("partial") and call and call.args:
+            inner = _dotted(call.args[0]) or ""
+            if inner in ("jax.jit", "jit"):
+                for kw in call.keywords:
+                    if kw.arg == "static_argnames":
+                        statics |= {e.value
+                                    for e in ast.walk(kw.value)
+                                    if isinstance(e, ast.Constant)
+                                    and isinstance(e.value, str)}
+                return True, statics
+        elif name in ("jax.jit", "jit"):
+            if call:
+                for kw in call.keywords:
+                    if kw.arg == "static_argnames":
+                        statics |= {e.value
+                                    for e in ast.walk(kw.value)
+                                    if isinstance(e, ast.Constant)
+                                    and isinstance(e.value, str)}
+            return True, statics
+    return False, set()
+
+
+def lint_source(source: str, path: str) -> list:
+    """All lint findings for one module's source text."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(rule="lint.syntax", severity="error", tenant=path,
+                        layer=e.lineno,
+                        detail=f"file does not parse: {e.msg}")]
+    suppress = _suppressions(source)
+    findings = []
+
+    def emit(rule, lineno, detail, severity="error"):
+        rules = suppress.get(lineno)
+        if rules is not None and (not rules or rule in rules):
+            return
+        findings.append(Finding(rule=rule, severity=severity, tenant=path,
+                                layer=lineno, detail=detail))
+
+    _lint_host_sync(tree, emit)
+    _lint_jit_bodies(tree, emit)
+    _lint_unlocked_state(tree, emit)
+    _lint_dict_order_hash(tree, emit)
+    return findings
+
+
+def lint_paths(paths) -> list:
+    findings = []
+    for p in paths:
+        p = pathlib.Path(p)
+        findings += lint_source(p.read_text(), p.as_posix())
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# lint.host-sync
+# ---------------------------------------------------------------------------
+
+def _lint_host_sync(tree, emit) -> None:
+    """Walk the intra-module call graph from the hot-path roots and flag
+    host-synchronizing calls anywhere reachable."""
+    module_funcs = {}                    # name -> FunctionDef (module level)
+    methods = {}                         # (class, method) -> FunctionDef
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            module_funcs[node.name] = node
+        elif isinstance(node, ast.ClassDef):
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    methods[(node.name, item.name)] = item
+
+    def callees(owner_class, fn):
+        out = []
+        for call in ast.walk(fn):
+            if not isinstance(call, ast.Call):
+                continue
+            f = call.func
+            if isinstance(f, ast.Attribute) and \
+                    isinstance(f.value, ast.Name) and f.value.id == "self" \
+                    and (owner_class, f.attr) in methods:
+                out.append((owner_class, f.attr))
+            elif isinstance(f, ast.Name) and f.id in module_funcs:
+                out.append((None, f.id))
+        return out
+
+    roots = [(c, m) for (c, m) in HOT_PATH_ROOTS if (c, m) in methods]
+    seen, queue = set(), list(roots)
+    while queue:
+        key = queue.pop()
+        if key in seen:
+            continue
+        seen.add(key)
+        fn = methods[key] if key[0] else module_funcs[key[1]]
+        for nxt in callees(key[0], fn):
+            if nxt not in seen:
+                queue.append(nxt)
+
+    for cls, name in seen:
+        fn = methods[(cls, name)] if cls else module_funcs[name]
+        where = f"{cls}.{name}" if cls else name
+        for call in ast.walk(fn):
+            if not isinstance(call, ast.Call):
+                continue
+            f = call.func
+            sync = None
+            if isinstance(f, ast.Attribute):
+                dotted = _dotted(f) or ""
+                if f.attr == "item" and not call.args:
+                    sync = ".item()"
+                elif f.attr == "block_until_ready" \
+                        or dotted == "jax.block_until_ready":
+                    sync = "block_until_ready"
+                elif dotted.split(".")[0] in _NP_NAMES \
+                        and f.attr in ("asarray", "array"):
+                    sync = dotted
+            if sync:
+                emit("lint.host-sync", call.lineno,
+                     f"{sync} in serving hot path (reachable from "
+                     f"{where}, rooted at "
+                     f"{'/'.join(f'{c}.{m}' for c, m in roots)}): blocks "
+                     f"the host on the device mid-request")
+
+
+# ---------------------------------------------------------------------------
+# lint.traced-if / lint.time-in-jit
+# ---------------------------------------------------------------------------
+
+def _lint_jit_bodies(tree, emit) -> None:
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        jitted, statics = _is_jit_decorated(fn)
+        if not jitted:
+            continue
+        params = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                  + fn.args.kwonlyargs)} - statics - {"self"}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.If):
+                names = {n.id for n in ast.walk(node.test)
+                         if isinstance(n, ast.Name)}
+                traced = sorted(names & params)
+                if traced:
+                    emit("lint.traced-if", node.lineno,
+                         f"Python `if` on traced parameter(s) "
+                         f"{', '.join(traced)} inside jitted "
+                         f"{fn.name!r}: raises TracerBoolConversionError "
+                         f"at call time (use lax.cond / mark static)")
+            elif isinstance(node, ast.Call):
+                dotted = _dotted(node.func) or ""
+                parts = dotted.split(".")
+                if dotted.startswith("time.") and parts[-1] in _CLOCK_ATTRS:
+                    emit("lint.time-in-jit", node.lineno,
+                         f"{dotted}() inside jitted {fn.name!r}: the clock "
+                         f"reads once at trace time and is constant "
+                         f"thereafter")
+                elif parts[0] == "random" or (len(parts) >= 2
+                                              and parts[0] in _NP_NAMES
+                                              and parts[1] == "random"):
+                    emit("lint.time-in-jit", node.lineno,
+                         f"host RNG {dotted}() inside jitted {fn.name!r}: "
+                         f"the draw is baked in at trace time (thread a "
+                         f"jax.random key instead)")
+
+
+# ---------------------------------------------------------------------------
+# lint.unlocked-shared-state
+# ---------------------------------------------------------------------------
+
+def _under_lock(node, parents) -> bool:
+    n = parents.get(id(node))
+    while n is not None:
+        if isinstance(n, ast.With):
+            for item in n.items:
+                for sub in ast.walk(item.context_expr):
+                    if isinstance(sub, ast.Attribute) and \
+                            sub.attr.endswith("_lock"):
+                        return True
+        n = parents.get(id(n))
+    return False
+
+
+def _lint_unlocked_state(tree, emit) -> None:
+    """Classes that allocate ``self._lock`` in ``__init__`` have declared
+    their mutable state shared; every other method must mutate it under
+    the lock."""
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        init = next((m for m in cls.body
+                     if isinstance(m, ast.FunctionDef)
+                     and m.name == "__init__"), None)
+        if init is None or not any(
+                isinstance(t, ast.Attribute) and t.attr == "_lock"
+                for a in ast.walk(init) if isinstance(a, ast.Assign)
+                for t in a.targets):
+            continue
+        for m in cls.body:
+            if not isinstance(m, ast.FunctionDef) or m.name == "__init__":
+                continue
+            parents = {id(child): parent
+                       for parent in ast.walk(m)
+                       for child in ast.iter_child_nodes(parent)}
+            for node in ast.walk(m):
+                if isinstance(node, (ast.Assign, ast.AugAssign)):
+                    targets = node.targets if isinstance(node, ast.Assign) \
+                        else [node.target]
+                    for t in targets:
+                        if isinstance(t, ast.Attribute) and \
+                                isinstance(t.value, ast.Name) and \
+                                t.value.id == "self" and \
+                                not _under_lock(node, parents):
+                            emit("lint.unlocked-shared-state", node.lineno,
+                                 f"{cls.name}.{m.name} mutates "
+                                 f"self.{t.attr} outside `with "
+                                 f"self._lock:` - {cls.name} declared its "
+                                 f"state shared by allocating the lock")
+
+
+# ---------------------------------------------------------------------------
+# lint.dict-order-hash
+# ---------------------------------------------------------------------------
+
+def _lint_dict_order_hash(tree, emit) -> None:
+    """A function that both hashes and serializes must serialize
+    deterministically: ``json.dumps`` without ``sort_keys=True`` next to a
+    ``hashlib`` call makes cache keys depend on dict insertion order."""
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        hashes = any(
+            (_dotted(c.func) or "").startswith("hashlib.")
+            for c in ast.walk(fn) if isinstance(c, ast.Call))
+        if not hashes:
+            continue
+        for c in ast.walk(fn):
+            if not isinstance(c, ast.Call):
+                continue
+            if (_dotted(c.func) or "") != "json.dumps":
+                continue
+            sorted_kw = any(
+                kw.arg == "sort_keys" and
+                isinstance(kw.value, ast.Constant) and kw.value.value is True
+                for kw in c.keywords)
+            if not sorted_kw:
+                emit("lint.dict-order-hash", c.lineno,
+                     f"json.dumps without sort_keys=True inside hashing "
+                     f"function {fn.name!r}: the digest depends on dict "
+                     f"insertion order")

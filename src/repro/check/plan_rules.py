@@ -1,0 +1,541 @@
+"""Layer 1: the plan verifier — every design rule a committed artifact must
+prove, with zero execution.
+
+Rules (stable ids; DR references per PAPER.md / EXPERIMENTS.md):
+
+=======================  ==========================================  ========
+rule                     invariant                                   paper
+=======================  ==========================================  ========
+plan.schema              known schema version, required sections     —
+plan.unknown-key         no unrecognized top-level artifact keys     —
+plan.layer-chain         edge graphs chain n_out -> n_in, indices    —
+plan.tile-legal          api tiles legal for the target (DR1/DR1')   DR1
+plan.tile-divides        blocks divide the padded layer shapes       DR1'
+plan.spatial-budget      P_K*P_N cap, DR5 floors, band legality      DR3/DR5
+plan.column-budget       fleet-wide band-1 columns fit usable_cols   DR6
+plan.vmem-budget         fusion-group scratch fits the VMEM budget   DR7'
+plan.latency-invariant   est == sum(parts) + crossings + overhead    DR7
+plan.fusion-groups       groups consecutive, uniform, exhaustive     DR7'
+plan.boundary-structure  boundaries exactly at group/regime changes  DR7
+plan.serve-keys          slo/priority/resilience/batch policy legal  —
+fleet.columns-overlap    tenant column ranges disjoint, in budget    DR6
+fleet.budget             budgets cover planned latency + crossing    —
+=======================  ==========================================  ========
+
+``load_artifact`` decodes any supported artifact schema (v1..v6 planner
+lineage — artifact schema versions 1/2/3 under planner versions plan-1..
+plan-6) WITHOUT executing it; undecodable input raises
+:class:`repro.check.ArtifactError` so the CLI exits 2 in one line.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+
+from repro import hw as hwlib
+from repro.check import ArtifactError, Finding
+
+# Relative slack for float identities that calibration rescales under.
+_REL_TOL = 5e-3
+# Fraction of VMEM the planner budgets for kernel working sets (the same
+# constant core/tiling.plan_api searches under).
+_VMEM_BUDGET_FRACTION = 0.75
+
+_PLAN_KEYS = {"schema", "kind", "network", "target", "batch", "key",
+              "layers", "boundaries", "fusion_groups", "totals", "serve"}
+_FLEET_KEYS = {"schema", "kind", "name", "target", "key", "tenants",
+               "totals"}
+_TENANT_KEYS = {"net_id", "col_offset", "cols", "crossing_s",
+                "latency_budget_s", "plan"}
+
+_PRIORITIES = ("critical", "standard", "batch")
+_RESILIENCE_KEYS = {"breaker_k", "breaker_cooldown", "retries", "backoff_s",
+                    "deadline_factor"}
+_DECODE_REGIMES = ("pipeline", "tiled")
+
+
+def _close(a: float, b: float, *, rel: float = _REL_TOL,
+           abs_tol: float = 1e-9) -> bool:
+    return math.isclose(a, b, rel_tol=rel, abs_tol=abs_tol)
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return ((x + q - 1) // q) * q
+
+
+# ---------------------------------------------------------------------------
+# Artifact decoding (schema-tolerant, execution-free)
+# ---------------------------------------------------------------------------
+
+def unknown_key_findings(d: dict, known: set, *, what: str,
+                         tenant: str | None = None) -> list:
+    """Info findings for top-level keys the current schema does not define.
+
+    Forward-compat is preserved (the loaders keep accepting them); the
+    verifier surfaces them so a typo'd section (``"serv"``) is seen before
+    it silently does nothing."""
+    return [Finding(rule="plan.unknown-key", severity="info", tenant=tenant,
+                    detail=f"{what} artifact carries unknown top-level key "
+                           f"{k!r} (ignored by the loader)")
+            for k in sorted(set(d) - known)]
+
+
+def load_artifact(path):
+    """Decode a committed plan artifact (DeploymentPlan or FleetPlan, any
+    supported schema) into a FleetPlan + the load-time findings.
+
+    Never executes the plan.  Undecodable/unsupported input raises
+    :class:`ArtifactError` (the exit-2 path)."""
+    from repro.plan.artifact import DeploymentPlan
+    from repro.plan.multinet import FleetPlan
+    p = pathlib.Path(path)
+    try:
+        text = p.read_text()
+    except OSError as e:
+        raise ArtifactError(f"{p}: {e.strerror or e}") from None
+    try:
+        d = json.loads(text)
+    except json.JSONDecodeError as e:
+        raise ArtifactError(f"{p}: malformed plan JSON "
+                            f"({e.msg} at line {e.lineno})") from None
+    if not isinstance(d, dict):
+        raise ArtifactError(f"{p}: plan artifact must be a JSON object, "
+                            f"got {type(d).__name__}")
+    findings = []
+    try:
+        if "tenants" in d:
+            findings += unknown_key_findings(d, _FLEET_KEYS, what="fleet",
+                                             tenant=d.get("name"))
+            for t in d.get("tenants", ()):
+                if isinstance(t, dict):
+                    findings += unknown_key_findings(
+                        t, _TENANT_KEYS, what="tenant",
+                        tenant=t.get("net_id"))
+                    if isinstance(t.get("plan"), dict):
+                        findings += unknown_key_findings(
+                            t["plan"], _PLAN_KEYS, what="plan",
+                            tenant=t.get("net_id"))
+            fleet = FleetPlan.from_dict(d)
+        else:
+            findings += unknown_key_findings(d, _PLAN_KEYS, what="plan",
+                                             tenant=d.get("network"))
+            fleet = FleetPlan.from_plan(DeploymentPlan.from_dict(d))
+    except (KeyError, TypeError, ValueError) as e:
+        raise ArtifactError(
+            f"{p}: undecodable plan artifact "
+            f"({e.__class__.__name__}: {e})") from None
+    return fleet, findings
+
+
+# ---------------------------------------------------------------------------
+# Single-plan rules
+# ---------------------------------------------------------------------------
+
+def verify_plan(plan, *, tenant: str | None = None, tpu=None,
+                aie=None) -> list:
+    """All layer-1 findings for one DeploymentPlan."""
+    tpu = tpu if tpu is not None else hwlib.TPU_V5E
+    aie = aie if aie is not None else hwlib.AIE_ML
+    tenant = tenant if tenant is not None else plan.network
+    fs: list = []
+    fs += _rule_layer_chain(plan, tenant)
+    if plan.target == "tpu":
+        fs += _rule_tiles_tpu(plan, tenant, tpu)
+    elif plan.target == "aie":
+        fs += _rule_tiles_aie(plan, tenant, aie)
+    fs += _rule_fusion_groups(plan, tenant, tpu)
+    fs += _rule_boundaries(plan, tenant)
+    fs += _rule_latency_invariant(plan, tenant)
+    fs += _rule_serve_section(plan, tenant)
+    return fs
+
+
+def _rule_layer_chain(plan, tenant) -> list:
+    fs = []
+    idx = [l.index for l in plan.layers]
+    if idx != sorted(set(idx)):
+        fs.append(Finding(
+            rule="plan.layer-chain", severity="error", tenant=tenant,
+            detail=f"layer indices must be unique and ascending, got {idx}"))
+    # Shape chaining only holds for edge graphs (LM attention fans one
+    # activation into wq/wk/wv, all with the same n_in).
+    if plan.kind == "edge":
+        for prev, nxt in zip(plan.layers, plan.layers[1:]):
+            if prev.n_out != nxt.n_in:
+                fs.append(Finding(
+                    rule="plan.layer-chain", severity="error", tenant=tenant,
+                    layer=nxt.index,
+                    detail=f"layer {nxt.name!r} consumes n_in={nxt.n_in} but "
+                           f"{prev.name!r} produces n_out={prev.n_out}"))
+    return fs
+
+
+def _rule_tiles_tpu(plan, tenant, tpu) -> list:
+    """DR1' legality: Pallas block shapes must be lane/sublane multiples
+    and divide the padded layer extents the kernels run on."""
+    fs = []
+    lane = tpu.vreg_lane
+    sub = tpu.sublanes_for(plan.itemsize)
+    for l in plan.layers:
+        bm, bk, bn = l.api_tile
+        if bm <= 0 or bk <= 0 or bn <= 0:
+            fs.append(Finding(
+                rule="plan.tile-legal", severity="error", tenant=tenant,
+                layer=l.index,
+                detail=f"non-positive block {l.api_tile} on {l.name!r}"))
+            continue
+        if bm % sub or bk % lane or bn % lane:
+            fs.append(Finding(
+                rule="plan.tile-legal", severity="error", tenant=tenant,
+                layer=l.index,
+                detail=f"block {l.api_tile} on {l.name!r} is not a "
+                       f"({sub}, {lane}, {lane}) multiple (itemsize "
+                       f"{plan.itemsize})"))
+        for extent, block, dim in ((plan.batch, bm, "M"),
+                                   (l.n_in, bk, "K"), (l.n_out, bn, "N")):
+            mult = sub if dim == "M" else lane
+            if _ceil_to(extent, mult) % block:
+                fs.append(Finding(
+                    rule="plan.tile-divides", severity="error", tenant=tenant,
+                    layer=l.index,
+                    detail=f"{dim}-block {block} does not divide padded "
+                           f"extent {_ceil_to(extent, mult)} "
+                           f"({dim}={extent}) on {l.name!r}"))
+    return fs
+
+
+def _rule_tiles_aie(plan, tenant, aie) -> list:
+    """DR1 (legal aie::mmul shapes), DR3/DR5 (split caps and floors),
+    band legality for the paper-faithful target."""
+    fs = []
+    max_tiles = 12                       # planner._AIE_MAX_TILES_PER_LAYER
+    for l in plan.layers:
+        if l.regime == "pl":
+            continue
+        if tuple(l.api_tile) not in aie.legal_api_tiles_i8:
+            fs.append(Finding(
+                rule="plan.tile-legal", severity="error", tenant=tenant,
+                layer=l.index,
+                detail=f"api tile {tuple(l.api_tile)} on {l.name!r} is not "
+                       f"a legal aie::mmul i8 shape"))
+        if l.p_k * l.p_n > max_tiles or l.p_n > aie.rows \
+                or l.p_k > aie.usable_cols:
+            fs.append(Finding(
+                rule="plan.spatial-budget", severity="error", tenant=tenant,
+                layer=l.index,
+                detail=f"split {l.p_k}x{l.p_n} on {l.name!r} exceeds the "
+                       f"per-layer tile cap ({max_tiles}) or array dims"))
+        q_k = math.ceil(l.n_in / max(l.p_k, 1))
+        q_n = math.ceil(l.n_out / max(l.p_n, 1))
+        if (l.p_k > 1 and q_k < 16) or (l.p_n > 1 and q_n < 32):
+            fs.append(Finding(
+                rule="plan.spatial-budget", severity="error", tenant=tenant,
+                layer=l.index,
+                detail=f"DR5 floor violated on {l.name!r}: split "
+                       f"{l.p_k}x{l.p_n} leaves q_k={q_k}, q_n={q_n} "
+                       f"(need q_k>=16 when P_K>1, q_n>=32 when P_N>1)"))
+        if l.band not in (1, 2):
+            fs.append(Finding(
+                rule="plan.spatial-budget", severity="error", tenant=tenant,
+                layer=l.index,
+                detail=f"band {l.band} on {l.name!r} (AIE layers sit in "
+                       f"band 1 or the spill band 2)"))
+    return fs
+
+
+def _rule_fusion_groups(plan, tenant, tpu) -> list:
+    """DR7' structure: groups partition the layers into consecutive runs,
+    each repeat- and regime-uniform, matching per-layer fuse_group ids;
+    multi-layer group working sets fit the VMEM budget."""
+    fs = []
+    by_index = {l.index: l for l in plan.layers}
+    seen: list = []
+    for g in plan.fusion_groups:
+        members = list(g.layers)
+        if members != sorted(members) or \
+                members != list(range(members[0], members[-1] + 1)):
+            fs.append(Finding(
+                rule="plan.fusion-groups", severity="error", tenant=tenant,
+                layer=members[0] if members else None,
+                detail=f"group {g.id} layers {members} are not consecutive"))
+        missing = [i for i in members if i not in by_index]
+        if missing:
+            fs.append(Finding(
+                rule="plan.fusion-groups", severity="error", tenant=tenant,
+                detail=f"group {g.id} names layer indices {missing} the "
+                       f"plan does not have"))
+            continue
+        ls = [by_index[i] for i in members]
+        if len({l.repeat for l in ls}) > 1 or len({l.regime for l in ls}) > 1:
+            fs.append(Finding(
+                rule="plan.fusion-groups", severity="error", tenant=tenant,
+                layer=members[0],
+                detail=f"group {g.id} mixes repeats/regimes "
+                       f"({[(l.repeat, l.regime) for l in ls]}) - a fused "
+                       f"launch executes all members together"))
+        bad_ids = [l.index for l in ls if l.fuse_group != g.id]
+        if bad_ids:
+            fs.append(Finding(
+                rule="plan.fusion-groups", severity="error", tenant=tenant,
+                layer=bad_ids[0],
+                detail=f"layers {bad_ids} carry fuse_group != group id "
+                       f"{g.id}"))
+        seen += members
+    if plan.fusion_groups and sorted(seen) != sorted(by_index):
+        fs.append(Finding(
+            rule="plan.fusion-groups", severity="error", tenant=tenant,
+            detail=f"fusion groups cover layers {sorted(seen)} but the plan "
+                   f"has {sorted(by_index)} (must partition exactly)"))
+    budget = int(tpu.vmem_bytes * _VMEM_BUDGET_FRACTION)
+    if plan.target == "tpu":
+        for g in plan.fusion_groups:
+            if g.vmem_bytes > budget:
+                fs.append(Finding(
+                    rule="plan.vmem-budget", severity="error", tenant=tenant,
+                    layer=g.layers[0] if g.layers else None,
+                    detail=f"group {g.id} working set {g.vmem_bytes} B "
+                           f"exceeds the VMEM budget {budget} B "
+                           f"({_VMEM_BUDGET_FRACTION:.0%} of "
+                           f"{tpu.vmem_bytes} B)"))
+    return fs
+
+
+def _rule_boundaries(plan, tenant) -> list:
+    """DR7 structure: a boundary charge exists exactly where the graph
+    says one is crossed — after every fuse-group or regime change (TPU) /
+    regime change (AIE) — and its regimes match the adjacent layers."""
+    fs = []
+    by_after = {b.after_layer: b for b in plan.boundaries}
+    if len(by_after) != len(plan.boundaries):
+        fs.append(Finding(
+            rule="plan.boundary-structure", severity="error", tenant=tenant,
+            detail="duplicate boundary after_layer entries"))
+    expected = {}
+    for prev, nxt in zip(plan.layers, plan.layers[1:]):
+        crossed = (prev.regime != nxt.regime if plan.target == "aie"
+                   else prev.fuse_group != nxt.fuse_group
+                   or prev.regime != nxt.regime)
+        if crossed:
+            expected[prev.index] = (prev, nxt)
+    for after, (prev, nxt) in expected.items():
+        b = by_after.get(after)
+        if b is None:
+            fs.append(Finding(
+                rule="plan.boundary-structure", severity="error",
+                tenant=tenant, layer=after,
+                detail=f"missing boundary after layer {after} "
+                       f"({prev.name!r} -> {nxt.name!r} crosses a "
+                       f"group/regime edge but charges nothing)"))
+            continue
+        if b.from_regime != prev.regime or b.to_regime != nxt.regime:
+            fs.append(Finding(
+                rule="plan.boundary-structure", severity="error",
+                tenant=tenant, layer=after,
+                detail=f"boundary after layer {after} says "
+                       f"{b.from_regime}->{b.to_regime} but the layers are "
+                       f"{prev.regime}->{nxt.regime}"))
+        if b.crossing_s < 0:
+            fs.append(Finding(
+                rule="plan.boundary-structure", severity="error",
+                tenant=tenant, layer=after,
+                detail=f"negative crossing charge {b.crossing_s} after "
+                       f"layer {after}"))
+    for after in set(by_after) - set(expected):
+        fs.append(Finding(
+            rule="plan.boundary-structure", severity="error", tenant=tenant,
+            layer=after,
+            detail=f"boundary after layer {after} charges a crossing no "
+                   f"group/regime change justifies"))
+    return fs
+
+
+def _rule_latency_invariant(plan, tenant) -> list:
+    """The parts+overhead decomposition calibration rescales under:
+    ``est_latency == sum(layer est x repeat) + sum(crossings) + overhead``
+    with ``overhead >= 0``; and the fusion-group estimates must sum to the
+    per-layer parts (the amortized shares, TPU plans)."""
+    fs = []
+    # The AIE totals sum un-repeated layer estimates (edge pipelines are
+    # repeat-1; the spatial path has no per-launch dispatch to amortize).
+    parts = sum(l.est_latency_s * (l.repeat if plan.target == "tpu" else 1)
+                for l in plan.layers)
+    crossings = sum(b.crossing_s for b in plan.boundaries)
+    overhead = plan.est_latency_s - parts - crossings
+    tol = _REL_TOL * max(plan.est_latency_s, 1e-12)
+    if overhead < -tol:
+        fs.append(Finding(
+            rule="plan.latency-invariant", severity="error", tenant=tenant,
+            detail=f"est_latency_s={plan.est_latency_s:.3e} is less than "
+                   f"its parts (layers {parts:.3e} + crossings "
+                   f"{crossings:.3e}): overhead {overhead:.3e} < 0"))
+    if plan.est_latency_s <= 0 or plan.est_interval_s <= 0:
+        fs.append(Finding(
+            rule="plan.latency-invariant", severity="error", tenant=tenant,
+            detail=f"totals must be positive (est_latency_s="
+                   f"{plan.est_latency_s}, est_interval_s="
+                   f"{plan.est_interval_s})"))
+    if plan.target == "tpu" and plan.fusion_groups:
+        group_sum = sum(g.est_latency_s for g in plan.fusion_groups)
+        if not _close(group_sum, parts, abs_tol=tol):
+            fs.append(Finding(
+                rule="plan.latency-invariant", severity="error",
+                tenant=tenant,
+                detail=f"fusion-group estimates sum to {group_sum:.3e} but "
+                       f"the amortized per-layer parts sum to {parts:.3e} "
+                       f"(shares no longer decompose the group costs)"))
+    return fs
+
+
+def _rule_serve_section(plan, tenant) -> list:
+    """Serve-section vocabulary: the knobs the router/batcher/supervisor
+    read must be legal AND mutually consistent."""
+    fs = []
+    serve = plan.serve or {}
+
+    def bad(detail, layer=None, severity="error"):
+        fs.append(Finding(rule="plan.serve-keys", severity=severity,
+                          tenant=tenant, layer=layer, detail=detail))
+
+    if not isinstance(serve, dict):
+        bad(f"serve section must be an object, got {type(serve).__name__}")
+        return fs
+    slo = serve.get("slo")
+    if slo is not None:
+        if not isinstance(slo, dict):
+            bad(f"serve.slo must be an object, got {type(slo).__name__}")
+        else:
+            p95, p99 = slo.get("p95_s"), slo.get("p99_s")
+            if not isinstance(p95, (int, float)) or p95 <= 0:
+                bad(f"serve.slo.p95_s must be a positive number, got {p95!r}")
+            if p99 is not None and (not isinstance(p99, (int, float))
+                                    or (isinstance(p95, (int, float))
+                                        and p99 < p95)):
+                bad(f"serve.slo.p99_s={p99!r} must be >= p95_s={p95!r} "
+                    f"(a p99 tighter than p95 is unsatisfiable)")
+    prio = serve.get("priority")
+    if prio is not None and prio not in _PRIORITIES:
+        bad(f"serve.priority={prio!r} is not one of {_PRIORITIES}")
+    res = serve.get("resilience")
+    if res is not None:
+        if not isinstance(res, dict):
+            bad(f"serve.resilience must be an object, "
+                f"got {type(res).__name__}")
+        else:
+            for k in sorted(set(res) - _RESILIENCE_KEYS):
+                bad(f"serve.resilience carries unknown knob {k!r} "
+                    f"(known: {sorted(_RESILIENCE_KEYS)})",
+                    severity="warning")
+            checks = (("breaker_k", 1), ("breaker_cooldown", 0),
+                      ("retries", 0))
+            for k, floor in checks:
+                v = res.get(k)
+                if v is not None and (not isinstance(v, int)
+                                      or isinstance(v, bool) or v < floor):
+                    bad(f"serve.resilience.{k}={v!r} must be an int "
+                        f">= {floor}")
+            for k, floor in (("backoff_s", 0.0), ("deadline_factor", 0.0)):
+                v = res.get(k)
+                if v is not None and (not isinstance(v, (int, float))
+                                      or isinstance(v, bool) or v < floor
+                                      or (k == "deadline_factor"
+                                          and v <= 0)):
+                    bad(f"serve.resilience.{k}={v!r} must be a number "
+                        f"{'> 0' if k == 'deadline_factor' else '>= 0'}")
+    dr = serve.get("decode_regime")
+    if dr is not None and dr not in _DECODE_REGIMES:
+        bad(f"serve.decode_regime={dr!r} is not one of {_DECODE_REGIMES}")
+    qw = serve.get("quantize_weights")
+    if qw is not None and not isinstance(qw, bool):
+        bad(f"serve.quantize_weights must be a bool, got {qw!r}")
+    # LM continuous-batching policy.
+    for k, floor in (("slots", 1), ("admit_per_tick", 1),
+                     ("max_queue_depth", 1), ("prefill_chunk", 1)):
+        v = serve.get(k)
+        if v is None:
+            continue
+        if not isinstance(v, int) or isinstance(v, bool) or v < floor:
+            bad(f"serve.{k}={v!r} must be an int >= {floor} (or null)")
+    slots = serve.get("slots")
+    depth = serve.get("max_queue_depth")
+    if isinstance(slots, int) and isinstance(depth, int) and depth < slots:
+        bad(f"serve.max_queue_depth={depth} < slots={slots}: admission "
+            f"would refuse requests the batcher has free slots for",
+            severity="warning")
+    if plan.kind == "lm" and slo is not None and slots is None:
+        bad("LM tenant has an SLO but no batch policy (slots) - the "
+            "batcher falls back to built-in defaults", severity="warning")
+    return fs
+
+
+# ---------------------------------------------------------------------------
+# Fleet rules
+# ---------------------------------------------------------------------------
+
+def verify_fleet(fleet, *, tpu=None, aie=None) -> list:
+    """All layer-1 findings for a FleetPlan: per-tenant plan rules plus the
+    fleet-wide column-budget and latency-budget invariants."""
+    tpu = tpu if tpu is not None else hwlib.TPU_V5E
+    aie = aie if aie is not None else hwlib.AIE_ML
+    fs: list = []
+    for t in fleet.tenants:
+        fs += verify_plan(t.plan, tenant=t.net_id, tpu=tpu, aie=aie)
+        if t.crossing_s < 0:
+            fs.append(Finding(
+                rule="fleet.budget", severity="error", tenant=t.net_id,
+                detail=f"negative crossing charge {t.crossing_s}"))
+        planned = t.plan.est_latency_s + t.crossing_s
+        if t.latency_budget_s < planned * (1 - _REL_TOL):
+            fs.append(Finding(
+                rule="fleet.budget", severity="warning", tenant=t.net_id,
+                detail=f"latency budget {t.latency_budget_s:.3e}s is below "
+                       f"the planned latency {planned:.3e}s - every request "
+                       f"starts in violation"))
+    if fleet.target == "aie":
+        fs += _rule_fleet_columns(fleet, aie)
+    if fleet.tenants:
+        worst = max(t.total_latency_s for t in fleet.tenants)
+        if not _close(fleet.est_latency_s, worst,
+                      abs_tol=_REL_TOL * max(worst, 1e-12)):
+            fs.append(Finding(
+                rule="fleet.budget", severity="error", tenant=fleet.name,
+                detail=f"fleet est_latency_s={fleet.est_latency_s:.3e} != "
+                       f"worst tenant total {worst:.3e} (spatially "
+                       f"concurrent nets are judged by the slowest)"))
+    return fs
+
+
+def _rule_fleet_columns(fleet, aie) -> list:
+    """DR6 fleet-wide: band-1 columns across ALL tenants fit usable_cols,
+    tenant ranges are disjoint, and each tenant's `cols` matches the
+    band-1 column sum of its own plan."""
+    fs = []
+    total = 0
+    spans = []
+    for t in fleet.tenants:
+        declared = sum(l.p_k for l in t.plan.layers
+                       if l.regime == "aie" and l.band == 1)
+        if t.cols != declared:
+            fs.append(Finding(
+                rule="fleet.columns-overlap", severity="error",
+                tenant=t.net_id,
+                detail=f"tenant declares cols={t.cols} but its plan's "
+                       f"band-1 layers occupy {declared}"))
+        if t.cols:
+            spans.append((t.col_offset, t.col_offset + t.cols, t.net_id))
+        total += t.cols
+    if total > aie.usable_cols:
+        fs.append(Finding(
+            rule="plan.column-budget", severity="error", tenant=fleet.name,
+            detail=f"fleet band-1 columns {total} exceed usable_cols="
+                   f"{aie.usable_cols} (DR6: spill must go to band 2, not "
+                   f"off the array)"))
+    spans.sort()
+    for (a0, a1, na), (b0, b1, nb) in zip(spans, spans[1:]):
+        if b0 < a1:
+            fs.append(Finding(
+                rule="fleet.columns-overlap", severity="error", tenant=nb,
+                detail=f"column range [{b0}, {b1}) overlaps {na!r}'s "
+                       f"[{a0}, {a1})"))
+    return fs

@@ -14,6 +14,7 @@ subsystems by hand:
   python -m repro replay --scenario flash_crowd         # open-loop traffic
   python -m repro profile jet_tagger --lm qwen2_5_3b    # roofline + LARE
   python -m repro chaos --scenario flash_crowd --seed 0 # replay under faults
+  python -m repro check                                 # static design rules
 
 ``python -m repro.plan`` and ``python -m repro.characterize`` remain as
 deprecation shims over the matching subcommands.
@@ -661,6 +662,56 @@ def cmd_chaos(argv: list[str] | None = None) -> int:
 
 
 # ---------------------------------------------------------------------------
+# check
+# ---------------------------------------------------------------------------
+
+def cmd_check(argv: list[str] | None = None) -> int:
+    from repro import check as checklib
+    ap = argparse.ArgumentParser(
+        prog="python -m repro check",
+        description="Static design-rule verification with zero execution: "
+                    "lint src/repro for jax hazards, verify every plan "
+                    "artifact under deployments/ against the paper's "
+                    "design rules (tiles, columns, VMEM, DR7 boundaries, "
+                    "serve knobs) plus the Pallas kernel contracts, and "
+                    "validate every bench/ BENCH_*.json snapshot. "
+                    "Exit 0 clean, 1 on error findings, 2 on an "
+                    "undecodable artifact (one-line stderr).")
+    ap.add_argument("artifacts", nargs="*", metavar="PLAN_JSON",
+                    help="verify just these plan artifacts instead of the "
+                         "whole tree")
+    ap.add_argument("--root", default=".",
+                    help="repo root for the tree check (default: .)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable report on stdout")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the src/repro jax-hazard lint")
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="skip the jax.eval_shape kernel contracts")
+    args = ap.parse_args(argv)
+    try:
+        if args.artifacts:
+            report = checklib.CheckReport()
+            for p in args.artifacts:
+                report.extend(checklib.check_artifact(
+                    p, kernels=not args.no_kernels))
+                report.checked.append(f"plan:{pathlib.Path(p).name}")
+        else:
+            report = checklib.check_tree(args.root,
+                                         kernels=not args.no_kernels,
+                                         lint=not args.no_lint)
+            if not args.no_kernels:
+                from repro.check import kernel_contracts
+                report.extend(kernel_contracts.verify_kernel_library())
+                report.checked.append("kernels:library self-check")
+    except checklib.ArtifactError as e:
+        print(f"check: {e}", file=sys.stderr)
+        return checklib.EXIT_UNDECODABLE
+    print(report.to_json() if args.json else str(report))
+    return report.exit_code
+
+
+# ---------------------------------------------------------------------------
 # entry point
 # ---------------------------------------------------------------------------
 
@@ -674,6 +725,7 @@ _SUBCOMMANDS = {
     "replay": cmd_replay,
     "profile": cmd_profile,
     "chaos": cmd_chaos,
+    "check": cmd_check,
 }
 
 

@@ -112,7 +112,7 @@ class Deployment:
               artifact_dir=None, lm_params: dict | None = None,
               stop_after: str | None = None, batch: int | None = None,
               x_scale: float = 0.05, seed: int = 0, trace=False,
-              faults=None, **plan_kw) -> "Deployment":
+              faults=None, check: bool = True, **plan_kw) -> "Deployment":
         """Run the pipeline end-to-end (or up to ``stop_after``).
 
         ``configs`` — one or many: edge net names, ``EdgeConfig``s,
@@ -134,6 +134,12 @@ class Deployment:
         list, or saved-plan path): arms the plan cache's ``cache.read``
         hook during the build and is re-armed on the router by
         :meth:`replay`.
+        ``check`` — ``True`` (default) runs the static design-rule
+        verifier (:mod:`repro.check`) between planning and engines: a
+        plan with error-severity findings raises
+        :class:`repro.check.PlanVerificationError` and no engine is
+        constructed.  ``check=False`` skips the gate (deliberately
+        out-of-spec experiments).
         Planner knobs (``pl_budget``, ``pipeline_core_budget``, ``tpu=``,
         fleet serve knobs…) pass through ``plan_kw``.
         """
@@ -147,13 +153,14 @@ class Deployment:
             machine_model=machine_model if plan is None else None,
             cache=cache, artifact_dir=artifact_dir, plan_kw=dict(plan_kw),
             lm_params=dict(lm_params or {}), batch=batch, x_scale=x_scale,
-            seed=seed, tracer=tracer)
+            seed=seed, tracer=tracer, verify=check)
         if plan is not None:
             ctx.fleet = _load_plan(plan)
         dep = cls(ctx)
         dep._injector = _fault_injector(faults)
         if dep._injector is not None:
             ctx.cache.injector = dep._injector
+            ctx.injector = dep._injector
             spec = dep._injector.fire("build")
             if spec is not None:
                 from repro.faults import InjectedFault
@@ -202,6 +209,12 @@ class Deployment:
     @property
     def plans(self) -> dict[str, DeploymentPlan]:
         return {t.net_id: t.plan for t in self.fleet.tenants}
+
+    @property
+    def findings(self) -> list:
+        """The design-rule findings the verify stage recorded (warnings and
+        info advisories; error findings abort the build)."""
+        return list(self.ctx.findings)
 
     @property
     def engines(self) -> dict:
@@ -505,6 +518,16 @@ class Deployment:
                     f"planned={t.plan.est_latency_s * 1e6:9.1f}us "
                     f"budget={t.latency_budget_s * 1e6:9.1f}us "
                     f"groups={len(t.plan.groups())}")
+        if "verify" in self.ctx.results:
+            res = self.ctx.results["verify"]
+            if res.skipped:
+                lines.append("check: skipped (check=False)")
+            elif not self.ctx.findings:
+                lines.append("check: clean (all design rules hold)")
+            else:
+                lines.append(f"check: {res.detail}")
+                for f in self.ctx.findings:
+                    lines.append(f"  {f}")
         if self.tracer.enabled:
             kinds: dict[str, int] = {}
             for s in self.tracer.spans:

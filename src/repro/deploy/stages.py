@@ -1,4 +1,5 @@
-"""The facade's stages: characterize → plan → engines, as explicit objects.
+"""The facade's stages: characterize → plan → verify → engines, as
+explicit objects.
 
 Each stage is individually invokable: it reads its typed inputs off a
 :class:`StageContext`, writes exactly one output back (plus an optional
@@ -15,6 +16,7 @@ stage           inputs (ctx fields)             output (ctx field)
 =============== =============================== =======================
 characterize    machine_model spec, target      model + plan_kw hw knobs
 plan            configs, target, plan_kw, cache fleet (FleetPlan)
+verify          fleet, plan_kw, verify flag     findings (design rules)
 engines         fleet, configs, lm_params       engines {net_id: engine}
 =============== =============================== =======================
 """
@@ -76,9 +78,12 @@ class StageContext:
     x_scale: float = 0.05
     seed: int = 0
     tracer: Any = NULL_TRACER            # repro.obs.Tracer when tracing
+    verify: bool = True                  # run the design-rule gate
+    injector: Any = None                 # repro.faults.FaultInjector | None
     # stage outputs
     model: Any = None                    # MachineModel | TpuV5e | None
     fleet: FleetPlan | None = None
+    findings: list = dataclasses.field(default_factory=list)
     engines: dict = dataclasses.field(default_factory=dict)
     results: dict = dataclasses.field(default_factory=dict)
 
@@ -284,6 +289,55 @@ def fleet_key(ctx: StageContext) -> str:
                            **ctx.plan_kw)
 
 
+class VerifyStage:
+    """The fail-closed design-rule gate between planning and engines.
+
+    Runs :func:`repro.check.check_fleet` — the full layer-1 plan rules plus
+    the layer-2 kernel contracts — over the planned (or artifact-loaded)
+    fleet BEFORE any engine is constructed.  Error-severity findings raise
+    :class:`repro.check.PlanVerificationError`; warnings and info findings
+    accumulate on ``ctx.findings`` and surface in ``Deployment.summary()``.
+
+    ``Deployment.build(check=False)`` records the stage as skipped (the
+    escape hatch for deliberately-out-of-spec experiments).  The stage is
+    fault-injectable at the ``build`` hook site with ``tenant="verify"`` —
+    chaos drills can make the gate itself fail without corrupting a plan.
+    """
+
+    name = "verify"
+    inputs = ("fleet", "plan_kw", "verify")
+    output = "findings"
+
+    def run(self, ctx: StageContext) -> StageResult:
+        from repro.check import PlanVerificationError, check_fleet
+        t0 = time.perf_counter()
+        if not ctx.verify:
+            return ctx.record(StageResult(
+                stage=self.name, output=[], skipped=True,
+                wall_s=time.perf_counter() - t0, detail="check=False"))
+        if ctx.fleet is None:
+            raise ValueError("verify stage needs a planned fleet "
+                             "(run the plan stage first)")
+        if ctx.injector is not None:
+            spec = ctx.injector.fire("build", tenant="verify")
+            if spec is not None:
+                from repro.faults import InjectedFault
+                raise InjectedFault("verify stage: injected failure")
+        ctx.findings = check_fleet(ctx.fleet, tpu=ctx.plan_kw.get("tpu"))
+        errors = [f for f in ctx.findings if f.severity == "error"]
+        counts = {}
+        for f in ctx.findings:
+            counts[f.severity] = counts.get(f.severity, 0) + 1
+        detail = (", ".join(f"{n} {s}" for s, n in sorted(counts.items()))
+                  or "clean")
+        res = ctx.record(StageResult(
+            stage=self.name, output=list(ctx.findings),
+            wall_s=time.perf_counter() - t0, detail=detail))
+        if errors:
+            raise PlanVerificationError(ctx.findings)
+        return res
+
+
 class EngineStage:
     """Build one live engine per tenant: quantize + calibrate + jit.
 
@@ -338,5 +392,5 @@ class EngineStage:
             detail=f"{kinds.count('edge')} edge + {kinds.count('lm')} lm"))
 
 
-PIPELINE = (CharacterizeStage(), PlanStage(), EngineStage())
+PIPELINE = (CharacterizeStage(), PlanStage(), VerifyStage(), EngineStage())
 STAGES = {s.name: s for s in PIPELINE}

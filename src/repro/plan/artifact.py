@@ -67,6 +67,13 @@ import warnings
 
 PLAN_SCHEMA_VERSION = 3
 PLANNER_VERSION = "plan-6"      # bump on any search/cost-model change
+
+#: Top-level keys the current schema defines; loaders warn on (but keep
+#: accepting) anything else, and ``repro check`` reports it as an info
+#: finding (``plan.unknown-key``).
+_KNOWN_PLAN_KEYS = frozenset({
+    "schema", "kind", "network", "target", "batch", "key", "layers",
+    "boundaries", "fusion_groups", "totals", "serve"})
 # plan-6: serve sections gained the "resilience" knobs (breaker/retry/
 # deadline — repro.faults.RESILIENCE_DEFAULTS); bumped so cached artifacts
 # from earlier planners self-invalidate and pick the knobs up on re-plan.
@@ -300,6 +307,14 @@ class DeploymentPlan:
         # schemas already carried).
         if d.get("schema") not in (1, 2, PLAN_SCHEMA_VERSION):
             raise ValueError(f"unsupported plan schema: {d.get('schema')!r}")
+        unknown = sorted(set(d) - _KNOWN_PLAN_KEYS)
+        if unknown:
+            # Forward-compat: keep loading, but a typo'd section ("serv")
+            # must not silently do nothing.  repro.check surfaces the same
+            # condition as a plan.unknown-key info finding.
+            warnings.warn(f"plan artifact for {d.get('network')!r} carries "
+                          f"unknown top-level key(s) {unknown} (ignored)",
+                          RuntimeWarning, stacklevel=2)
         layers = tuple(LayerPlan.from_dict(l) for l in d["layers"])
         if "fusion_groups" in d:
             fusion_groups = tuple(FusionGroup.from_dict(g)

@@ -36,6 +36,7 @@ import hashlib
 import json
 import os
 import pathlib
+import warnings
 
 from repro.core import boundary
 from repro.faults import RESILIENCE_DEFAULTS
@@ -48,6 +49,11 @@ from repro.plan.artifact import (PLAN_SCHEMA_VERSION, PLANNER_VERSION,
 # tenant when measured latency exceeds budget_factor x planned (matching the
 # repo-wide planned-vs-measured 2x acceptance band).
 DEFAULT_BUDGET_FACTOR = 2.0
+
+#: Top-level keys the current fleet schema defines (see artifact.py's
+#: _KNOWN_PLAN_KEYS for the per-plan equivalent).
+_KNOWN_FLEET_KEYS = frozenset({
+    "schema", "kind", "name", "target", "key", "tenants", "totals"})
 
 # The serve-policy knobs and their defaults, in one place: plan_fleet's
 # signature AND the serve-scoped fleet-cache key derive from this dict, so
@@ -151,6 +157,13 @@ class FleetPlan:
             return cls.from_plan(DeploymentPlan.from_dict(d))
         if d.get("schema") not in (1, PLAN_SCHEMA_VERSION):
             raise ValueError(f"unsupported fleet schema: {d.get('schema')!r}")
+        unknown = sorted(set(d) - _KNOWN_FLEET_KEYS)
+        if unknown:
+            # Forward-compat preserved; repro.check reports the same
+            # condition as a plan.unknown-key info finding.
+            warnings.warn(f"fleet artifact {d.get('name')!r} carries "
+                          f"unknown top-level key(s) {unknown} (ignored)",
+                          RuntimeWarning, stacklevel=2)
         tenants = tuple(TenantPlan.from_dict(t) for t in d["tenants"])
         return cls(name=d["name"], target=d["target"], key=d["key"],
                    tenants=tenants,

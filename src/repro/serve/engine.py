@@ -348,7 +348,10 @@ class ContinuousBatcher:
         # (mutated by the admit/step loops) races.  The copies are local to
         # this call and never mutated.
         logits, self.state = self._decode(
-            self.params, np.array(tok[:, 0]), self.state,
+            self.params,
+            # Deliberate sync: sampled tokens must reach the host to detect EOS.
+            np.array(tok[:, 0]),  # repro: check-ok(lint.host-sync)
+            self.state,
             self.pos.copy(), live.copy())
         return logits
 
@@ -396,7 +399,8 @@ class ContinuousBatcher:
             self.pos[i] += 1
         req.filled = limit
         if req.filled == len(req.prompt):
-            row = np.asarray(logits[i, -1])
+            # Deliberate sync: the finiteness guard reads one logits row.
+            row = np.asarray(logits[i, -1])  # repro: check-ok(lint.host-sync)
             if not np.isfinite(row).all():
                 self._fail_request(i, req, "non_finite_output")
             else:
@@ -521,7 +525,8 @@ class ContinuousBatcher:
                 if req is None or not live[i]:
                     continue
                 self.pos[i] += 1
-                row = np.asarray(logits[i, -1])
+                # Deliberate sync: per-slot finiteness guard (see above).
+                row = np.asarray(logits[i, -1])  # repro: check-ok(lint.host-sync)
                 if not np.isfinite(row).all():
                     self._fail_request(i, req, "non_finite_output")
                     continue
@@ -652,13 +657,14 @@ class EdgeEngine:
             if spec.kind == "latency_spike" and spec.magnitude_s > 0:
                 time.sleep(spec.magnitude_s)   # inside [t0, t1]: visible
         fwd = self._fwd if self.degrade_level == 0 else self._fallback()
-        y = jax.block_until_ready(fwd(x))
+        # Deliberate sync: infer() returns a ready result by contract.
+        y = jax.block_until_ready(fwd(x))  # repro: check-ok(lint.host-sync)
         if spec is not None and spec.kind == "non_finite_output":
             y = jnp.full_like(y, jnp.nan)      # poison; caught just below
         # Host-side finiteness guard: np.asarray on a ready CPU array is
         # zero-copy, and the reduction is microseconds next to the forward.
         # A poisoned output FAILS the call rather than returning garbage.
-        if not bool(np.isfinite(np.asarray(y)).all()):
+        if not bool(np.isfinite(np.asarray(y)).all()):  # repro: check-ok(lint.host-sync)
             t1 = time.perf_counter()
             self.faults += 1
             if self.tracer.enabled:

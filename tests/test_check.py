@@ -1,0 +1,537 @@
+"""repro.check: the static design-rule verifier (plan rules, kernel
+contracts, jax-hazard lint) and its deploy/CLI surfaces."""
+
+import dataclasses
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from _hyp import given, settings, st
+from repro.check import (ArtifactError, CheckReport, Finding,
+                         PlanVerificationError, check_artifact, check_fleet,
+                         check_snapshot, check_tree, kernel_contracts,
+                         plan_rules)
+from repro.check.lint import lint_source
+from repro.models import edge
+from repro.plan.artifact import BoundaryPlan, DeploymentPlan
+from repro.plan.multinet import FleetPlan, plan_fleet
+from repro.plan.planner import plan_deployment
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _tpu_plan(name="jet_tagger"):
+    return plan_deployment(edge.edge_config(name), target="tpu")
+
+
+def _aie_plan(name="jet_tagger"):
+    return plan_deployment(edge.edge_config(name), target="aie")
+
+
+def _rules(findings, severity="error"):
+    return {f.rule for f in findings if f.severity == severity}
+
+
+# ---------------------------------------------------------------------------
+# layer 1: plan rules
+# ---------------------------------------------------------------------------
+
+def test_planner_output_is_clean():
+    spatial = plan_deployment(edge.edge_config("jet_tagger"), target="aie",
+                              pl_budget=0.0)      # force aie-regime layers
+    for target, plan in (("tpu", _tpu_plan()), ("aie", _aie_plan()),
+                         ("aie-spatial", spatial)):
+        findings = check_fleet(FleetPlan.from_plan(plan))
+        assert not [f for f in findings if f.severity == "error"], (
+            target, findings)
+
+
+def test_rule_tile_divides_and_legal():
+    plan = _tpu_plan()
+    bad = dataclasses.replace(
+        plan, layers=(dataclasses.replace(plan.layers[0],
+                                          api_tile=(33, 100, 100)),)
+        + plan.layers[1:])
+    rules = _rules(plan_rules.verify_plan(bad))
+    assert "plan.tile-legal" in rules
+    assert "plan.tile-divides" in rules
+
+
+def test_rule_vmem_budget():
+    plan = _tpu_plan()
+    over = tuple(dataclasses.replace(g, vmem_bytes=1 << 30)
+                 for g in plan.fusion_groups)
+    bad = dataclasses.replace(plan, fusion_groups=over)
+    assert "plan.vmem-budget" in _rules(plan_rules.verify_plan(bad))
+
+
+def test_rule_serve_keys_illegal_resilience():
+    plan = _tpu_plan()
+    serve = dict(plan.serve)
+    serve["resilience"] = {"breaker_k": 0, "retries": -1}
+    bad = dataclasses.replace(plan, serve=serve)
+    findings = plan_rules.verify_plan(bad)
+    assert "plan.serve-keys" in _rules(findings)
+    # both illegal knobs reported, not just the first
+    assert sum(f.rule == "plan.serve-keys" and f.severity == "error"
+               for f in findings) >= 2
+
+
+def test_rule_serve_keys_vocabulary():
+    plan = _tpu_plan()
+    for serve in ({"priority": "urgent"},
+                  {"slo": {"p95_s": -1.0}},
+                  {"slo": {"p95_s": 1.0, "p99_s": 0.5}},
+                  {"decode_regime": "warp"}):
+        bad = dataclasses.replace(plan, serve=serve)
+        assert "plan.serve-keys" in _rules(plan_rules.verify_plan(bad)), serve
+
+
+def test_rule_boundary_structure():
+    plan = _tpu_plan()
+    if plan.boundaries:
+        bad = dataclasses.replace(plan, boundaries=())
+    else:
+        l0 = plan.layers[0]
+        bad = dataclasses.replace(plan, boundaries=(BoundaryPlan(
+            after_layer=l0.index, from_regime=l0.regime,
+            to_regime=l0.regime, crossing_s=1e-6),))
+    assert "plan.boundary-structure" in _rules(plan_rules.verify_plan(bad))
+
+
+def test_rule_fusion_groups_id_mismatch():
+    plan = _tpu_plan()
+    bumped = (dataclasses.replace(plan.fusion_groups[0],
+                                  id=plan.fusion_groups[0].id + 101),) \
+        + plan.fusion_groups[1:]
+    bad = dataclasses.replace(plan, fusion_groups=bumped)
+    assert "plan.fusion-groups" in _rules(plan_rules.verify_plan(bad))
+
+
+def test_rule_latency_invariant():
+    plan = _tpu_plan()
+    bad = dataclasses.replace(plan, est_latency_s=plan.est_latency_s / 10)
+    assert "plan.latency-invariant" in _rules(plan_rules.verify_plan(bad))
+
+
+def test_rule_aie_tile_and_spatial_budget():
+    # pl_budget=0 forces every layer onto the array (aie regime).
+    plan = plan_deployment(edge.edge_config("jet_tagger"), target="aie",
+                           pl_budget=0.0)
+    aie_layers = [l for l in plan.layers if l.regime == "aie"]
+    assert aie_layers, "expected AIE-regime layers with pl_budget=0"
+    bad_layers = tuple(
+        dataclasses.replace(l, api_tile=(5, 5, 5), p_k=7, p_n=4)
+        if l.index == aie_layers[0].index else l for l in plan.layers)
+    rules = _rules(plan_rules.verify_plan(
+        dataclasses.replace(plan, layers=bad_layers)))
+    assert "plan.tile-legal" in rules
+    assert "plan.spatial-budget" in rules
+
+
+def test_rule_fleet_columns():
+    plan = _aie_plan()
+    fleet = FleetPlan.from_plan(plan)
+    t = fleet.tenants[0]
+    lying = dataclasses.replace(t, cols=t.cols + 3)
+    bad = dataclasses.replace(fleet, tenants=(lying,))
+    assert "fleet.columns-overlap" in _rules(plan_rules.verify_fleet(bad))
+
+
+def test_fleet_budget_warning():
+    fleet = FleetPlan.from_plan(_tpu_plan())
+    t = fleet.tenants[0]
+    starved = dataclasses.replace(t, latency_budget_s=t.total_latency_s / 100)
+    bad = dataclasses.replace(fleet, tenants=(starved,))
+    assert "fleet.budget" in _rules(plan_rules.verify_fleet(bad), "warning")
+
+
+# ---------------------------------------------------------------------------
+# layer 2: kernel contracts
+# ---------------------------------------------------------------------------
+
+def test_kernel_block_divisibility():
+    plan = _tpu_plan()
+    bad_layers = (dataclasses.replace(plan.layers[0],
+                                      api_tile=(8, 128, 128)),) \
+        + plan.layers[1:]
+    bad = dataclasses.replace(plan, layers=bad_layers)
+    findings = kernel_contracts.verify_plan_kernels(bad, tenant="t")
+    assert "kernel.block-divisibility" in _rules(findings)
+
+
+def test_kernel_vmem_scratch_overflow():
+    plan = _tpu_plan()
+    wide = next((g for g in plan.fusion_groups if len(g.layers) >= 2), None)
+    if wide is None:
+        pytest.skip("no multi-layer fusion group in this plan")
+    members = set(wide.layers)
+    bad_layers = tuple(
+        dataclasses.replace(l, n_in=30_000, n_out=30_000)
+        if l.index in members else l for l in plan.layers)
+    bad = dataclasses.replace(plan, layers=bad_layers)
+    findings = kernel_contracts.verify_plan_kernels(bad, tenant="t")
+    assert "kernel.vmem-scratch" in _rules(findings)
+
+
+def test_kernel_contracts_clean_on_planner_output():
+    findings = kernel_contracts.verify_plan_kernels(_tpu_plan(), tenant="t")
+    assert not [f for f in findings if f.severity == "error"], findings
+
+
+def test_kernel_library_self_check():
+    findings = kernel_contracts.verify_kernel_library()
+    assert not [f for f in findings if f.severity == "error"], findings
+
+
+def test_group_vmem_accounting_matches_fused_mlp():
+    # The checker's formula must mirror the kernel's padding exactly.
+    b = kernel_contracts.group_vmem_bytes([16, 64, 32, 5], batch=8)
+    pm, pads = 32, [128, 128, 128, 128]
+    want = (pm * pads[0] * 4
+            + sum(a * b2 + 2 * b2 * 4 for a, b2 in zip(pads, pads[1:]))
+            + pm * pads[-1] * 4 + pm * max(pads[:-1]))
+    assert b == want
+
+
+# ---------------------------------------------------------------------------
+# layer 3: jax-hazard lint
+# ---------------------------------------------------------------------------
+
+def test_lint_host_sync_and_suppression():
+    src = """
+class EdgeEngine:
+    def infer(self, x):
+        y = self._fwd(x)
+        return np.asarray(y)
+"""
+    findings = lint_source(src, "m.py")
+    assert _rules(findings) == {"lint.host-sync"}
+    ok = src.replace("np.asarray(y)",
+                     "np.asarray(y)  # repro: check-ok(lint.host-sync)")
+    assert lint_source(ok, "m.py") == []
+    # bare check-ok suppresses every rule on the line
+    bare = src.replace("np.asarray(y)", "np.asarray(y)  # repro: check-ok")
+    assert lint_source(bare, "m.py") == []
+
+
+def test_lint_host_sync_follows_call_graph():
+    src = """
+class ContinuousBatcher:
+    def step(self, wait_s=0.0):
+        self._drain()
+    def _drain(self):
+        return self.logits.item()
+    def unrelated(self):
+        return np.asarray(self.logits)   # not reachable from a hot root
+"""
+    findings = lint_source(src, "m.py")
+    assert len(findings) == 1 and findings[0].rule == "lint.host-sync"
+    assert "_drain" in findings[0].detail
+
+
+def test_lint_traced_if():
+    src = """
+import jax
+
+@jax.jit
+def f(x, n):
+    if x > 0:
+        return x
+    return x + n
+"""
+    findings = lint_source(src, "m.py")
+    assert _rules(findings) == {"lint.traced-if"}
+
+
+def test_lint_traced_if_respects_static_argnames():
+    src = """
+import functools, jax
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def f(x, n):
+    if n > 0:
+        return x
+    return x * 2
+"""
+    assert lint_source(src, "m.py") == []
+
+
+def test_lint_time_in_jit():
+    src = """
+import jax, time
+
+@jax.jit
+def f(x):
+    t = time.perf_counter()
+    r = np.random.uniform()
+    return x * t * r
+"""
+    rules = [f.rule for f in lint_source(src, "m.py")]
+    assert rules.count("lint.time-in-jit") == 2
+
+
+def test_lint_unlocked_shared_state():
+    src = """
+import threading
+
+class Store:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.n = 0
+    def bump(self):
+        self.n += 1
+    def safe_bump(self):
+        with self._lock:
+            self.n += 1
+"""
+    findings = lint_source(src, "m.py")
+    assert len(findings) == 1
+    assert findings[0].rule == "lint.unlocked-shared-state"
+    assert "bump" in findings[0].detail
+
+
+def test_lint_dict_order_hash():
+    src = """
+import hashlib, json
+
+def key(d):
+    return hashlib.sha256(json.dumps(d).encode()).hexdigest()
+
+def stable_key(d):
+    return hashlib.sha256(
+        json.dumps(d, sort_keys=True).encode()).hexdigest()
+"""
+    findings = lint_source(src, "m.py")
+    assert len(findings) == 1 and findings[0].rule == "lint.dict-order-hash"
+
+
+def test_lint_committed_tree_is_clean():
+    from repro.check import lint as lint_mod
+    src = REPO / "src" / "repro"
+    findings = lint_mod.lint_paths(sorted(src.rglob("*.py")))
+    assert findings == [], findings
+
+
+# ---------------------------------------------------------------------------
+# findings / report plumbing
+# ---------------------------------------------------------------------------
+
+def test_finding_severity_validated():
+    with pytest.raises(ValueError):
+        Finding(rule="r", severity="fatal", detail="d")
+
+
+def test_report_exit_codes_and_json():
+    rep = CheckReport()
+    assert rep.exit_code == 0
+    rep.extend([Finding(rule="r", severity="warning", detail="w")])
+    assert rep.exit_code == 0
+    rep.extend([Finding(rule="r2", severity="error", detail="e")])
+    assert rep.exit_code == 1
+    d = json.loads(rep.to_json())
+    assert d["counts"] == {"error": 1, "warning": 1, "info": 0}
+    assert {f["rule"] for f in d["findings"]} == {"r", "r2"}
+
+
+# ---------------------------------------------------------------------------
+# artifacts: loading, unknown keys, snapshots
+# ---------------------------------------------------------------------------
+
+def test_committed_artifacts_verify_clean():
+    for p in sorted((REPO / "deployments").glob("*.json")):
+        findings = check_artifact(p)
+        assert not [f for f in findings if f.severity == "error"], (p,
+                                                                    findings)
+
+
+def test_check_artifact_undecodable(tmp_path):
+    p = tmp_path / "broken.json"
+    p.write_text('{"schema": 3, "tenants": [')
+    with pytest.raises(ArtifactError):
+        check_artifact(p)
+
+
+def test_check_artifact_unsupported_schema(tmp_path):
+    plan = _tpu_plan()
+    d = plan.to_dict()
+    d["schema"] = 99
+    p = tmp_path / "future.json"
+    p.write_text(json.dumps(d))
+    with pytest.raises(ArtifactError):
+        check_artifact(p)
+
+
+def test_unknown_key_warning_and_info_finding(tmp_path):
+    plan = _tpu_plan()
+    d = plan.to_dict()
+    d["serv"] = {"oops": 1}              # the typo the rule exists for
+    p = tmp_path / "typo.json"
+    p.write_text(json.dumps(d))
+    with pytest.warns(RuntimeWarning, match="unknown top-level key"):
+        fleet, load_findings = plan_rules.load_artifact(p)
+    assert fleet.tenants[0].plan.network == plan.network
+    infos = [f for f in load_findings if f.rule == "plan.unknown-key"]
+    assert infos and infos[0].severity == "info"
+    assert "serv" in infos[0].detail
+
+
+def test_fleet_unknown_key_warns():
+    fleet = FleetPlan.from_plan(_tpu_plan())
+    d = fleet.to_dict()
+    d["extra_section"] = []
+    with pytest.warns(RuntimeWarning, match="extra_section"):
+        FleetPlan.from_dict(d)
+
+
+def test_snapshot_validation(tmp_path):
+    good = tmp_path / "BENCH_ok.json"
+    good.write_text(json.dumps(
+        {"rows": [{"name": "a", "us_per_call": 1.5}]}))
+    assert check_snapshot(good) == []
+    bad_val = tmp_path / "BENCH_neg.json"
+    bad_val.write_text(json.dumps(
+        {"rows": [{"name": "a", "us_per_call": -2}]}))
+    assert _rules(check_snapshot(bad_val)) == {"snapshot.row-value"}
+    malformed = tmp_path / "BENCH_broken.json"
+    malformed.write_text("{nope")
+    with pytest.raises(ArtifactError):
+        check_snapshot(malformed)
+    shapeless = tmp_path / "BENCH_shape.json"
+    shapeless.write_text(json.dumps({"rows": [{"name": "a"}]}))
+    with pytest.raises(ArtifactError):
+        check_snapshot(shapeless)
+
+
+def test_check_tree_on_repo_is_clean():
+    report = check_tree(REPO, kernels=False)
+    assert report.errors() == [], report.errors()
+    assert any(c.startswith("lint:") for c in report.checked)
+    assert any(c.startswith("plan:") for c in report.checked)
+    assert any(c.startswith("snapshot:") for c in report.checked)
+
+
+# ---------------------------------------------------------------------------
+# the deploy gate
+# ---------------------------------------------------------------------------
+
+def test_build_refuses_failing_plan():
+    plan = _tpu_plan()
+    bad_layers = (dataclasses.replace(plan.layers[0],
+                                      api_tile=(33, 100, 100)),) \
+        + plan.layers[1:]
+    bad = FleetPlan.from_plan(dataclasses.replace(plan, layers=bad_layers))
+    from repro.deploy import Deployment
+    with pytest.raises(PlanVerificationError) as ei:
+        Deployment.build(plan=bad)
+    assert "plan.tile-legal" in str(ei.value)
+
+
+def test_build_check_false_skips_gate():
+    from repro.deploy import Deployment
+    dep = Deployment.build("jet_tagger", machine_model=None,
+                           stop_after="verify", check=False)
+    res = dep.stage_results["verify"]
+    assert res.skipped and dep.findings == []
+
+
+def test_build_verify_stage_runs_clean():
+    from repro.deploy import Deployment
+    dep = Deployment.build("jet_tagger", machine_model=None,
+                           stop_after="verify")
+    res = dep.stage_results["verify"]
+    assert not res.skipped and res.detail == "clean"
+    assert "check: clean" in dep.summary()
+
+
+def test_verify_stage_fault_injectable():
+    from repro.deploy import Deployment
+    from repro.faults import FaultSpec, InjectedFault
+    spec = FaultSpec(kind="engine_exception", site="build", tenant="verify")
+    with pytest.raises(InjectedFault, match="verify stage"):
+        Deployment.build("jet_tagger", machine_model=None,
+                         stop_after="verify", faults=[spec])
+
+
+# ---------------------------------------------------------------------------
+# CLI: exit codes, JSON shape (trend.py conventions)
+# ---------------------------------------------------------------------------
+
+def _run_cli(*args, cwd=None):
+    env_src = str(REPO / "src")
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env_src + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro", "check", *args],
+        capture_output=True, text=True, cwd=cwd or REPO, env=env)
+
+
+def test_cli_corrupt_artifact_exits_2_one_line_stderr(tmp_path):
+    p = tmp_path / "seeded_corrupt.json"
+    p.write_text('{"schema": 3, "network": "x"')     # truncated JSON
+    res = _run_cli(str(p))
+    assert res.returncode == 2, res.stderr
+    lines = [l for l in res.stderr.strip().splitlines() if l]
+    assert len(lines) == 1 and lines[0].startswith("check: "), res.stderr
+    assert "malformed" in lines[0]
+
+
+def test_cli_json_artifact_check(tmp_path):
+    art = sorted((REPO / "deployments").glob("*.json"))[0]
+    res = _run_cli(str(art), "--json")
+    assert res.returncode == 0, res.stderr
+    d = json.loads(res.stdout)
+    assert set(d) == {"version", "checked", "counts", "findings"}
+    assert d["counts"]["error"] == 0
+
+
+def test_cli_error_findings_exit_1(tmp_path):
+    plan = _tpu_plan()
+    bad_layers = (dataclasses.replace(plan.layers[0],
+                                      api_tile=(33, 100, 100)),) \
+        + plan.layers[1:]
+    p = tmp_path / "bad_plan.json"
+    p.write_text(dataclasses.replace(plan, layers=bad_layers).to_json())
+    res = _run_cli(str(p))
+    assert res.returncode == 1, (res.stdout, res.stderr)
+    assert "plan.tile-legal" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# property: every plan the planner emits passes the checker
+# ---------------------------------------------------------------------------
+
+_EDGE_NETS = sorted(edge.EDGE_NETS)
+
+
+def test_all_edge_configs_and_lm_smoke_check_clean():
+    for name in _EDGE_NETS:
+        for target in ("tpu", "aie"):
+            fleet = FleetPlan.from_plan(
+                plan_deployment(edge.edge_config(name), target=target))
+            errs = [f for f in check_fleet(fleet)
+                    if f.severity == "error"]
+            assert errs == [], (name, target, errs)
+    from repro import configs
+    smoke = configs.get("qwen2_5_3b").smoke
+    fleet = plan_fleet([smoke], target="tpu")
+    errs = [f for f in check_fleet(fleet) if f.severity == "error"]
+    assert errs == [], errs
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(_EDGE_NETS), st.sampled_from(["tpu", "aie"]),
+       st.sampled_from([1, 2, 4, 8, 16]))
+def test_property_planned_fleets_round_trip_clean(name, target, batch):
+    """plan -> serialize -> load -> verify: zero error findings, for any
+    edge net x target x batch the planner accepts."""
+    plan = plan_deployment(edge.edge_config(name), target=target,
+                           batch=batch)
+    fleet = FleetPlan.from_plan(plan)
+    reloaded = FleetPlan.from_json(fleet.to_json())
+    errs = [f for f in check_fleet(reloaded) if f.severity == "error"]
+    assert errs == [], (name, target, batch, errs)
